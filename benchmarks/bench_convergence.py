@@ -1,0 +1,55 @@
+"""Paper Fig. 7-10: error ratio vs (modeled) time across datasets, formats,
+selectivities and worker counts; EXT / chunk-level (C) / bi-level (BI).
+
+Headline statistic: per dataset, the speedup of BI over EXT to reach ε=0.05
+at selectivity 1.0 with 4 workers — the paper's headline is "as little as
+10% of the EXT time in CPU-bound settings" (ptf-ascii is the CPU-bound case,
+ptf-binary the IO-bound case where everything collapses to EXT speed).
+"""
+
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+from benchmarks.common import (
+    datasets, ext_baseline_time, run_curve, selectivity_query,
+)
+
+
+def run(fast: bool = False) -> str:
+    stores = datasets(fast)
+    workers_list = [1, 4] if fast else [1, 4, 16]
+    sels = [1.0] if fast else [1.0, 0.1]
+    rows = []
+    for name, store in stores.items():
+        for workers in workers_list:
+            ext_t = ext_baseline_time(store, workers)
+            for sel in (sels if name != "wiki" else [1.0]):
+                q = selectivity_query(name, sel)
+                for strat, tag in (("resource_aware", "BI"),
+                                   ("chunk_level", "C")):
+                    times, errs, final = run_curve(store, q, strat, workers,
+                                                   seed=7)
+                    rows.append({
+                        "dataset": name, "workers": workers, "sel": sel,
+                        "method": tag, "t_to_eps": final["t_model"],
+                        "ext_t": ext_t,
+                        "speedup_vs_ext": ext_t / max(final["t_model"], 1e-12),
+                        "tuples_ratio": final["tuples_ratio"],
+                        "chunks_ratio": final["chunks_ratio"],
+                        "stopped_early": final["stopped"],
+                    })
+    with open("results/bench_convergence.json", "w") as f:
+        json.dump(rows, f, indent=1)
+
+    def headline(ds):
+        r = [x for x in rows if x["dataset"] == ds and x["method"] == "BI"
+             and x["workers"] == 4 and x["sel"] == 1.0]
+        return round(r[0]["speedup_vs_ext"], 2) if r else None
+
+    return json.dumps({
+        "BI_speedup_vs_EXT@4w": {ds: headline(ds) for ds in stores},
+        "rows": len(rows),
+    })

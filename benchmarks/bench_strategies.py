@@ -1,0 +1,40 @@
+"""Paper Fig. 11: holistic (H) / single-pass (S) / resource-aware (BI) /
+chunk-level (C) on the synthetic dataset, 1 / 4 / 16 workers, no selectivity.
+
+Validation targets (paper §7.2.2): in CPU-bound settings (few workers,
+ASCII) S and BI reduce error fastest; with many workers (IO-bound) BI
+degenerates to C/H behaviour while S is worst (stops sampling too early);
+BI is always (nearly) the best strategy — the adaptive headline.
+"""
+
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+from benchmarks.common import datasets, run_curve, selectivity_query
+
+
+def run(fast: bool = False) -> str:
+    store = datasets(fast)["synthetic"]
+    q = selectivity_query("synthetic", 1.0, epsilon=0.03)
+    workers_list = [1, 4] if fast else [1, 4, 16]
+    table = {}
+    for workers in workers_list:
+        per = {}
+        for strat, tag in (("holistic", "H"), ("single_pass", "S"),
+                           ("resource_aware", "BI"), ("chunk_level", "C")):
+            times, errs, final = run_curve(store, q, strat, workers, seed=11)
+            per[tag] = {"t_model": round(final["t_model"], 6),
+                        "tuples_ratio": round(final["tuples_ratio"], 4),
+                        "chunks_ratio": round(final["chunks_ratio"], 4)}
+        table[f"{workers}w"] = per
+    with open("results/bench_strategies.json", "w") as f:
+        json.dump(table, f, indent=1)
+
+    # adaptivity check: BI within 1.3x of the best strategy at every width
+    ok = all(
+        per["BI"]["t_model"] <= 1.3 * min(v["t_model"] for v in per.values())
+        for per in table.values())
+    return json.dumps({"BI_always_near_best": ok, "table": table})

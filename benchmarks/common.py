@@ -1,0 +1,84 @@
+"""Shared helpers for the benchmark modules."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.engine import EngineConfig, OLAEngine
+from repro.core.queries import Linear, Query, Range, TRUE
+from repro.data.generator import (
+    make_ptf_like, make_synthetic_zipf, make_wiki_like, store_dataset,
+)
+
+SYN_COEF16 = tuple(1.0 / (k + 1) for k in range(16))
+PTF_COEF = (0.0, 0.0, 0.0, 1.0, 2.0, 1.5, 0.0, 0.0)  # mag/err/flux expression
+
+
+def datasets(fast: bool):
+    t = 8192 if fast else 16384
+    chunks = 32 if fast else 64
+    out = {
+        "synthetic": store_dataset(make_synthetic_zipf(t, 16, 0), chunks,
+                                   "ascii"),
+        "ptf-ascii": store_dataset(make_ptf_like(t, chunks, 0), chunks,
+                                   "ascii"),
+        "ptf-binary": store_dataset(make_ptf_like(t, chunks, 0), chunks,
+                                    "binary"),
+    }
+    w, _ = make_wiki_like(t, 30, 0)
+    out["wiki"] = store_dataset(w, max(chunks // 3, 8), "ascii")
+    return out
+
+
+def selectivity_query(dataset: str, selectivity: float,
+                      epsilon: float = 0.05) -> Query:
+    if dataset.startswith("ptf"):
+        # range predicate on ra (col 0) covering x% of [0, 360)
+        return Query(agg="sum", expr=Linear(PTF_COEF),
+                     pred=Range(0, 0.0, 360.0 * selectivity) if selectivity < 1
+                     else TRUE, epsilon=epsilon)
+    if dataset == "wiki":
+        # per-language count: language 0 is 'en'
+        return Query(agg="count", pred=Range(0, -0.5, 0.5), epsilon=epsilon)
+    return Query(agg="sum", expr=Linear(SYN_COEF16),
+                 pred=Range(0, 0.0, 1e8 * selectivity) if selectivity < 1
+                 else TRUE, epsilon=epsilon)
+
+
+def run_curve(store, query: Query, strategy: str, workers: int,
+              seed: int = 0, max_rounds: int = 20000):
+    """-> (times, errs, final) with the Eq. 4 modeled clock."""
+    eng = OLAEngine(store, [query],
+                    EngineConfig(num_workers=workers, strategy=strategy,
+                                 budget_init=64, seed=seed))
+    state = eng.init_state()
+    times, errs = [], []
+    rep = None
+    for _ in range(max_rounds):
+        b = eng.budget_ladder(float(state.budget))
+        state, rep = eng.round_fn(b)(state, eng.packed, eng.speeds)
+        # Eq. 4: READ and EXTRACT are overlapped pipelines — wall time is
+        # the max of the cumulative busy times, not a per-round barrier
+        times.append(max(float(state.t_io), float(state.t_cpu)))
+        errs.append(float(rep.err[0]))
+        if bool(rep.all_stopped) or bool(rep.exhausted):
+            break
+    t = times[-1] if times else 0.0
+    return np.asarray(times), np.asarray(errs), {
+        "t_model": t,
+        "tuples_ratio": float(int(rep.m_tuples) / eng.program.total_tuples),
+        "chunks_ratio": float(np.asarray(state.raw_touched).sum()
+                              / eng.program.n_chunks),
+        "estimate": float(rep.estimate[0]),
+        "stopped": bool(rep.all_stopped),
+    }
+
+
+def ext_baseline_time(store, workers: int,
+                      io_bps: float = 565e6, cpu_ops: float = 2.0e9) -> float:
+    """External tables: exact answer = one full sequential scan (Eq. 4)."""
+    total_bytes = float(store.chunk_sizes.sum()) * store.codec.record_bytes
+    total_tuples = float(store.num_tuples)
+    t_io = total_bytes / io_bps
+    t_cpu = total_tuples * store.codec.extract_cost_per_tuple() / cpu_ops / workers
+    return max(t_io, t_cpu)

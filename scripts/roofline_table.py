@@ -1,0 +1,52 @@
+"""Summarize results/dryrun/*.json into the EXPERIMENTS.md roofline table."""
+
+from __future__ import annotations
+
+import glob
+import json
+import sys
+
+
+def fmt(x, digits=3):
+    if x is None:
+        return "-"
+    if isinstance(x, float):
+        if x == 0:
+            return "0"
+        if abs(x) >= 1000 or abs(x) < 0.001:
+            return f"{x:.{digits}g}"
+        return f"{x:.{digits}g}"
+    return str(x)
+
+
+def load(out_dir="results/dryrun"):
+    rows = []
+    for path in sorted(glob.glob(f"{out_dir}/*.json")):
+        with open(path) as f:
+            r = json.load(f)
+        rows.append(r)
+    return rows
+
+
+def main():
+    mp = "multipod" if "--multipod" in sys.argv else "pod"
+    rows = [r for r in load()
+            if (r["chips"] == 512) == (mp == "multipod")]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    hdr = ("| arch | shape | compute_s | memory_s | collective_s | dominant | "
+           "MODEL_FLOPS | useful | roofline_frac | peak GB/dev |")
+    print(hdr)
+    print("|" + "---|" * 10)
+    for r in rows:
+        rf = r["roofline"]
+        peak = (r["memory"]["peak_bytes"] or 0) / 1e9
+        print("| {a} | {s} | {c} | {m} | {k} | {d} | {mf} | {u} | {rfr} | {p:.2f} |".format(
+            a=r["arch"], s=r["shape"], c=fmt(rf["compute_s"]),
+            m=fmt(rf["memory_s"]), k=fmt(rf["collective_s"]),
+            d=rf["dominant"].replace("_s", ""),
+            mf=fmt(rf["model_flops"], 3), u=fmt(rf["useful_flops_ratio"]),
+            rfr=fmt(rf["roofline_fraction"]), p=peak))
+
+
+if __name__ == "__main__":
+    main()

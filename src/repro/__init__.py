@@ -1,0 +1,8 @@
+"""repro: OLA-RAW (Cheng, Zhao, Rusu 2017) as a production JAX/TPU framework.
+
+Subpackages: core (the paper's engine), sampling, data, kernels (Pallas),
+models, configs, distributed, train, serve, ola_ml, launch, roofline.
+See README.md and DESIGN.md.
+"""
+
+__version__ = "1.0.0"

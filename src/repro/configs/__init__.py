@@ -1,0 +1,7 @@
+"""Architecture configs: one module per assigned architecture + registry."""
+
+from repro.configs.base import ModelConfig, active_param_count, param_count
+from repro.configs.registry import ARCHS, get_config, list_archs
+
+__all__ = ["ARCHS", "ModelConfig", "active_param_count", "get_config",
+           "list_archs", "param_count"]

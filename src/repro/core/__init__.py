@@ -1,0 +1,50 @@
+"""OLA-RAW core: the paper's contribution as composable JAX modules.
+
+Layering (bottom-up):
+
+* :mod:`repro.core.estimators` — Eq. (1)/(2)/(3) bi-level estimators + bounds.
+* :mod:`repro.core.queries`    — aggregate-query AST + compiled tile evaluator.
+* :mod:`repro.core.engine`     — the parallel sampling state machine
+  (chunk-level / holistic / single-pass / resource-aware strategies).
+* :mod:`repro.core.engine_spmd`— shard_map execution over a device mesh.
+* :mod:`repro.core.synopsis`   — Section 6 memory-resident sample synopsis.
+* :mod:`repro.core.controller` — δ-interval reporting, verification chains,
+  synopsis life-cycle.
+"""
+
+from repro.core.controller import EstimationController, QueryResult
+from repro.core.engine import EngineConfig, EngineState, OLAEngine, RoundReport
+from repro.core.engine_spmd import SPMDEngine
+from repro.core.estimators import (
+    BiLevelStats,
+    confidence_bounds,
+    error_ratio,
+    having_decision,
+    init_stats,
+    tau_hat,
+    var_hat,
+)
+from repro.core.queries import (
+    And,
+    Cmp,
+    Column,
+    Custom,
+    GroupEq,
+    Having,
+    Linear,
+    Query,
+    Range,
+    SquaredDiff,
+    TRUE,
+    expand_group_by,
+)
+from repro.core.synopsis import BiLevelSynopsis
+
+__all__ = [
+    "And", "BiLevelStats", "BiLevelSynopsis", "Cmp", "Column", "Custom",
+    "EngineConfig", "EngineState", "EstimationController", "GroupEq",
+    "Having", "Linear", "OLAEngine", "Query", "QueryResult", "Range",
+    "RoundReport", "SPMDEngine", "SquaredDiff", "TRUE", "confidence_bounds",
+    "error_ratio", "expand_group_by", "having_decision", "init_stats",
+    "tau_hat", "var_hat",
+]

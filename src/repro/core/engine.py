@@ -1,0 +1,513 @@
+"""The OLA-RAW engine: parallel bi-level sampling over raw chunks.
+
+This is the paper's Sections 3–5 as one lockstep-SPMD state machine.  The
+hardware adaptation (DESIGN.md §3) replaces EXTRACT threads with *workers*
+(vmap lanes on one device, or mesh-`data`-axis shards under shard_map — same
+round semantics, property-tested equal) and the ``t_eval`` timer with a
+per-round tuple *budget*:
+
+  round r:
+    1. CLAIM   — idle workers take the next positions of the committed random
+                 chunk schedule from a global queue head.  The head advances
+                 by an exclusive prefix-sum over (all-gathered) idle flags, so
+                 the *started set is always a prefix of the schedule*: a
+                 chunk's inclusion in the sample can never depend on its
+                 content.  This is the engine's inspection-paradox guarantee
+                 (paper §3/§4.2).
+    2. EXTRACT — each active worker extracts the next ``b`` tuples of its
+                 chunk in the chunk's keyed Feistel order (paper §4.1's
+                 in-memory shuffle), decodes them from raw bytes, evaluates
+                 all queries (x_i = expr·pred per Table 1).
+    3. MERGE   — per-chunk sufficient statistics (m_j, y'_j, y''_j, p_j) are
+                 scatter-added; across devices the deltas are psum'd.
+    4. DECIDE  — per-chunk local accuracy ε_j = ε (Theorem 3) closes chunks
+                 under the single-pass rule; the resource monitor (modeled
+                 T_io vs T_cpu, Eq. 4's two cost terms) switches the
+                 resource-aware policy between holistic-like (IO-bound) and
+                 single-pass-like (CPU-bound) behaviour and drives the
+                 exponential-decay budget rule of §5.4.
+    5. ESTIMATE— Eq. (1)/(3) over all started chunks; HAVING early-out.
+
+Strategies (paper Fig. 5): ``chunk_level`` (C), ``holistic`` (H),
+``single_pass`` (S), ``resource_aware`` (BI).  ``chunk_level`` additionally
+restricts estimation to fully-extracted chunks in schedule order (the
+reordering barrier of §3); a deliberately broken ``chunk_level_unordered``
+mode reproduces the inspection paradox for the Table 3 experiment.
+
+Worker state (``cur``) is the only sharded piece; chunk-slot arrays are
+replicated and advanced by identical (psum-merged) updates on every device,
+so the SPMD engine is deterministic and checkpointable as a plain pytree.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import estimators as est
+from repro.core.estimators import BiLevelStats
+from repro.core.queries import Query, compile_queries
+from repro.sampling.permutation import (
+    chunk_seed,
+    permutation_window_dyn,
+    random_chunk_order,
+)
+
+# Chunk-claim sentinels for the per-worker `cur` slot (schedule positions).
+IDLE = -1       # worker finished its chunk; will claim at next round start
+EXHAUSTED = -2  # schedule empty; worker permanently idle
+
+STRATEGIES = ("chunk_level", "holistic", "single_pass", "resource_aware",
+              "chunk_level_unordered")
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    num_workers: int = 4
+    strategy: str = "resource_aware"
+    budget_init: int = 64        # t_eval analog: tuples per worker per round
+    budget_min: int = 8          # paper's t_eval lower bound
+    budget_max: int = 4096       # upper bound (δ analog; also capped by chunk size)
+    seed: int = 0
+    # resource model (DESIGN.md §3): chunk fetch vs extract cost.  Defaults
+    # approximate the paper's testbed ratio (565 MB/s buffered reads vs
+    # CPU-bound ASCII extraction).
+    io_bytes_per_sec: float = 565e6
+    cpu_tuple_ops_per_sec: float = 2.0e9  # VPU-op throughput for the cost model
+    # worker speed factors for straggler simulation (len == num_workers)
+    worker_speed: Optional[tuple] = None
+    stats_dtype: str = "float32"
+    cache_cap: int = 0           # per-chunk extracted-tuple cache rows (synopsis)
+
+    def __post_init__(self):
+        assert self.strategy in STRATEGIES, self.strategy
+
+
+class EngineState(NamedTuple):
+    stats: BiLevelStats          # ysum/ysq/psum: (Q, N) — replicated
+    offset: jnp.ndarray          # (N,) tuples extracted so far per chunk
+    closed: jnp.ndarray          # (N,) bool — chunk closed for sampling
+    acc_met: jnp.ndarray         # (N,) bool — local accuracy ε_j reached
+    head: jnp.ndarray            # () int32 — queue head over schedule
+    cur: jnp.ndarray             # (P,) int32 — schedule position per worker (sharded under SPMD)
+    budget: jnp.ndarray          # () f32 — current t_eval-analog budget
+    decay: jnp.ndarray           # () f32 — §5.4 exponential-decay factor
+    calib_sum: jnp.ndarray       # () f32 — Σ tuples-at-accuracy (calibration)
+    calib_cnt: jnp.ndarray       # () f32
+    first_est: jnp.ndarray       # () bool — first chunk estimate produced
+    stopped: jnp.ndarray         # (Q,) bool — per-query global stop
+    round: jnp.ndarray           # () int32
+    t_io: jnp.ndarray            # () f32 — cumulative modeled read seconds
+    t_cpu: jnp.ndarray           # () f32 — cumulative modeled extract seconds
+    cpu_bound: jnp.ndarray       # () bool — monitor verdict from last round
+    cached_m: jnp.ndarray        # (N,) int32 — tuples supplied by the synopsis
+    raw_touched: jnp.ndarray     # (N,) bool — chunk has caused a raw READ
+    cache: jnp.ndarray           # (N, cap, C) f32 — extracted-tuple cache for
+                                 # synopsis construction (cap may be 0)
+
+
+class RoundReport(NamedTuple):
+    estimate: jnp.ndarray        # (Q,)
+    lo: jnp.ndarray              # (Q,)
+    hi: jnp.ndarray              # (Q,)
+    err: jnp.ndarray             # (Q,) error ratio (paper's metric)
+    decided: jnp.ndarray         # (Q,) int8 HAVING verdict (-1/0/1)
+    n_chunks: jnp.ndarray        # () chunks in sample
+    m_tuples: jnp.ndarray        # () tuples in sample
+    round_io_s: jnp.ndarray      # () modeled read seconds this round
+    round_cpu_s: jnp.ndarray     # () modeled extract seconds this round
+    tuples_round: jnp.ndarray    # ()
+    bytes_round: jnp.ndarray     # ()
+    all_stopped: jnp.ndarray     # () bool
+    exhausted: jnp.ndarray       # () bool — every chunk closed
+
+
+class _Collectives:
+    """Adapter between single-device and shard_map execution.
+
+    ``gather_workers`` exposes every worker's flag in global worker order;
+    ``merge`` sums contributions across devices; ``my_base`` is this device's
+    first global worker id.  The single-device instance is the identity, so
+    both modes run the *same* round body.
+    """
+
+    def __init__(self, axis_name: Optional[str] = None,
+                 workers_per_device: Optional[int] = None):
+        self.axis_name = axis_name
+        self.wpd = workers_per_device
+
+    def gather_workers(self, x: jnp.ndarray) -> jnp.ndarray:
+        if self.axis_name is None:
+            return x
+        g = jax.lax.all_gather(x, self.axis_name, axis=0)  # (D, W)
+        return g.reshape((-1,) + x.shape[1:])
+
+    def merge(self, tree):
+        if self.axis_name is None:
+            return tree
+        return jax.lax.psum(tree, self.axis_name)
+
+    def my_base(self) -> jnp.ndarray:
+        if self.axis_name is None:
+            return jnp.asarray(0, jnp.int32)
+        return (jax.lax.axis_index(self.axis_name) * self.wpd).astype(jnp.int32)
+
+
+class EngineProgram:
+    """The jit-able round program, independent of host-side orchestration.
+
+    Everything static lives here (schedule, seeds, query evaluator, cost
+    model); per-round dynamic state is the :class:`EngineState` pytree.
+    """
+
+    def __init__(self, *, codec, queries: Sequence[Query], config: EngineConfig,
+                 n_chunks: int, m_max: int, chunk_sizes: np.ndarray,
+                 schedule: Optional[np.ndarray] = None):
+        self.codec = codec
+        self.queries = list(queries)
+        self.config = config
+        self.n_chunks = int(n_chunks)
+        self.m_max = int(m_max)
+        if schedule is None:
+            schedule = random_chunk_order(config.seed, self.n_chunks)
+        self.schedule = jnp.asarray(schedule, jnp.int32)
+        self.seeds = chunk_seed(jnp.uint32(config.seed),
+                                jnp.arange(self.n_chunks, dtype=jnp.uint32))
+        self.chunk_sizes_np = np.asarray(chunk_sizes, np.int32)
+        self.chunk_bytes = jnp.asarray(
+            np.asarray(chunk_sizes, np.float32) * codec.record_bytes)
+        self.evaluate = compile_queries(self.queries)
+        self.eps = jnp.asarray([q.epsilon for q in self.queries], jnp.float32)
+        self.conf = float(self.queries[0].confidence)
+        self.z = float(jax.scipy.special.ndtri((1.0 + self.conf) / 2.0))
+        self.cost_per_tuple = float(codec.extract_cost_per_tuple())
+        self.total_tuples = int(np.sum(chunk_sizes))
+        self.num_cols = int(codec.num_cols)
+
+    # ------------------------------------------------------------ state ----
+    def init_state(self, synopsis_seed: Optional[dict] = None) -> EngineState:
+        cfg = self.config
+        q = len(self.queries)
+        dtype = jnp.dtype(cfg.stats_dtype)
+        sizes = jnp.asarray(self.chunk_sizes_np)
+        stats = est.init_stats(sizes, query_shape=(q,), dtype=dtype,
+                               m_total=self.total_tuples)
+        state = EngineState(
+            stats=stats,
+            offset=jnp.zeros((self.n_chunks,), jnp.int32),
+            closed=jnp.zeros((self.n_chunks,), bool),
+            acc_met=jnp.zeros((self.n_chunks,), bool),
+            head=jnp.asarray(0, jnp.int32),
+            cur=jnp.full((cfg.num_workers,), IDLE, jnp.int32),
+            budget=jnp.asarray(float(cfg.budget_init), jnp.float32),
+            decay=jnp.asarray(1.0, jnp.float32),
+            calib_sum=jnp.asarray(0.0, jnp.float32),
+            calib_cnt=jnp.asarray(0.0, jnp.float32),
+            first_est=jnp.asarray(False),
+            stopped=jnp.zeros((q,), bool),
+            round=jnp.asarray(0, jnp.int32),
+            t_io=jnp.asarray(0.0, jnp.float32),
+            t_cpu=jnp.asarray(0.0, jnp.float32),
+            cpu_bound=jnp.asarray(False),
+            cached_m=jnp.zeros((self.n_chunks,), jnp.int32),
+            raw_touched=jnp.zeros((self.n_chunks,), bool),
+            cache=jnp.zeros((self.n_chunks, cfg.cache_cap, self.num_cols),
+                            jnp.float32),
+        )
+        if synopsis_seed is not None:
+            stats = state.stats._replace(
+                m=jnp.asarray(synopsis_seed["m"], jnp.int32),
+                ysum=jnp.asarray(synopsis_seed["ysum"], dtype),
+                ysq=jnp.asarray(synopsis_seed["ysq"], dtype),
+                psum=jnp.asarray(synopsis_seed["psum"], dtype),
+            )
+            state = state._replace(
+                stats=stats,
+                offset=jnp.asarray(synopsis_seed["offset"], jnp.int32),
+                closed=jnp.asarray(synopsis_seed.get(
+                    "closed", np.zeros(self.n_chunks, bool))),
+                cached_m=jnp.asarray(synopsis_seed["m"], jnp.int32),
+            )
+            if "cache" in synopsis_seed and cfg.cache_cap > 0:
+                pre = jnp.asarray(synopsis_seed["cache"], jnp.float32)
+                state = state._replace(
+                    cache=state.cache.at[:, : pre.shape[1]].set(pre))
+        return state
+
+    # ------------------------------------------------------------ round ----
+    def round_body(self, state: EngineState, packed: jnp.ndarray,
+                   speeds: jnp.ndarray, b_static: int,
+                   coll: _Collectives) -> tuple[EngineState, RoundReport]:
+        """One engine round.  ``state.cur``/``speeds`` are *local* worker
+        slices (the full arrays in single-device mode); everything else is
+        replicated.  ``packed`` is the raw chunk bytes (N, M_max, rec)."""
+        cfg = self.config
+        n = self.n_chunks
+        q = len(self.queries)
+        dtype = state.stats.ysum.dtype
+        sizes = state.stats.M
+
+        # ---- 1. CLAIM: prefix-sum queue-head allocation -------------------
+        idle_local = state.cur == IDLE
+        idle_all = coll.gather_workers(idle_local)               # (P,) global order
+        ranks_all = jnp.cumsum(idle_all.astype(jnp.int32)) - idle_all.astype(jnp.int32)
+        w_local = state.cur.shape[0]
+        my_ids = coll.my_base() + jnp.arange(w_local, dtype=jnp.int32)
+        ranks = ranks_all[my_ids]
+        want_pos = state.head + ranks
+        got = idle_local & (want_pos < n)
+        cur = jnp.where(got, want_pos, jnp.where(idle_local, EXHAUSTED, state.cur))
+        head = state.head + jnp.sum(idle_all & (state.head + ranks_all < n))
+
+        active = cur >= 0
+        j = self.schedule[jnp.clip(cur, 0, n - 1)]               # (W,) chunk ids
+        mj = sizes[j]
+        off = state.offset[j]                                    # permutation cursor
+        m_before = state.stats.m[j]                              # tuples sampled so far
+
+        # ---- 2. EXTRACT ----------------------------------------------------
+        # remaining unsampled tuples bounds the budget (cursor may wrap when a
+        # synopsis window started mid-permutation — Section 6.2 circular scan)
+        b_eff = jnp.minimum(jnp.floor(b_static * speeds).astype(jnp.int32),
+                            jnp.maximum(mj - m_before, 0))
+        b_eff = jnp.where(active, b_eff, 0)
+        k = jnp.arange(b_static, dtype=jnp.int32)
+        valid = k[None, :] < b_eff[:, None]                      # (W, B)
+
+        def window(seed_j, off_j, mj_j):
+            return permutation_window_dyn(seed_j, off_j, b_static, mj_j, self.m_max)
+
+        idx = jax.vmap(window)(self.seeds[j], off, mj)           # (W, B)
+        raw = jax.vmap(lambda jj, ii: packed[jj][ii])(j, idx)    # (W, B, rec)
+        cols = jax.vmap(self.codec.decode_ref)(raw)              # (W, B, C)
+        x, pr = jax.vmap(self.evaluate, in_axes=0, out_axes=1)(cols)  # (Q, W, B)
+        vf = valid.astype(dtype)[None]
+        x = x.astype(dtype) * vf
+        pr = pr.astype(dtype) * vf
+
+        # ---- 3. MERGE -------------------------------------------------------
+        af = active.astype(jnp.int32)
+        deltas = dict(
+            dm=jnp.zeros((n,), jnp.int32).at[j].add(b_eff * af),
+            dys=jnp.zeros((q, n), dtype).at[:, j].add(jnp.sum(x, -1) * af),
+            dyq=jnp.zeros((q, n), dtype).at[:, j].add(jnp.sum(x * x, -1) * af),
+            dps=jnp.zeros((q, n), dtype).at[:, j].add(jnp.sum(pr, -1) * af),
+        )
+        deltas = coll.merge(deltas)
+        stats = state.stats._replace(
+            m=state.stats.m + deltas["dm"],
+            ysum=state.stats.ysum + deltas["dys"],
+            ysq=state.stats.ysq + deltas["dyq"],
+            psum=state.stats.psum + deltas["dps"])
+        offset = state.offset + coll.merge(
+            jnp.zeros((n,), jnp.int32).at[j].add(b_eff * af))
+
+        # READ accounting: a chunk costs its full raw bytes the first time it
+        # is extracted *beyond* what the synopsis supplied (Section 6.3 —
+        # in-memory chunks only trigger a read when topped up from raw).
+        needs_raw = active & (b_eff > 0) & (m_before >= state.cached_m[j])
+        newly_raw = needs_raw & ~state.raw_touched[j]
+        raw_touched = state.raw_touched | (coll.merge(
+            jnp.zeros((n,), jnp.int32).at[j].add(newly_raw.astype(jnp.int32))) > 0)
+        bytes_round = coll.merge(
+            jnp.sum(jnp.where(newly_raw, self.chunk_bytes[j], 0.0)))
+
+        # extracted-tuple cache for synopsis construction: row r of chunk j
+        # holds the r-th tuple of its permutation window (append-only; the
+        # maintenance pass shrinks windows host-side).  OOB rows are dropped.
+        cap = cfg.cache_cap
+        if cap > 0:
+            kk = jnp.arange(b_static, dtype=jnp.int32)
+            rows = m_before[:, None] + kk[None, :]               # (W, B) ordinals
+            writable = (kk[None, :] < b_eff[:, None]) & active[:, None]
+            rows = jnp.where(writable, rows, cap)                # cap == OOB -> drop
+            cache_delta = jnp.zeros_like(state.cache).at[
+                j[:, None], rows].add(cols * writable[..., None], mode="drop")
+            cache = state.cache + coll.merge(cache_delta)
+        else:
+            cache = state.cache
+
+        # ---- 4. DECIDE -------------------------------------------------------
+        mj_new = stats.m[j].astype(dtype)
+        big_m = sizes[j].astype(dtype)
+        scale = big_m / jnp.maximum(mj_new, 1.0)
+        ys_j = stats.ysum[:, j]                                  # (Q, W)
+        yq_j = stats.ysq[:, j]
+        ss = yq_j - ys_j * ys_j / jnp.maximum(mj_new, 1.0)
+        fpc = (big_m - mj_new) / jnp.maximum(mj_new - 1.0, 1.0)
+        v_local = scale * fpc * jnp.maximum(ss, 0.0)             # Eq. (5) LHS
+        yhat_local = scale * ys_j
+        tiny = jnp.asarray(1e-12, dtype)
+        # ε_j = ε rule (Theorem 3), in error-ratio form: 2 z √v_j <= ε |ŷ_j|
+        local_ok_q = 2.0 * self.z * jnp.sqrt(jnp.maximum(v_local, 0.0)) <= (
+            self.eps[:, None].astype(dtype) * jnp.maximum(jnp.abs(yhat_local), tiny))
+        local_ok = jnp.all(local_ok_q | state.stopped[:, None], axis=0)
+        local_ok = local_ok & (mj_new >= 2.0)
+        exhausted_w = stats.m[j] >= sizes[j]
+        newly_acc = active & local_ok & ~state.acc_met[j]
+
+        strategy = cfg.strategy
+        if strategy in ("chunk_level", "chunk_level_unordered", "holistic"):
+            close_w = exhausted_w
+        elif strategy == "single_pass":
+            close_w = exhausted_w | local_ok
+        else:  # resource_aware
+            close_w = exhausted_w | (local_ok & state.cpu_bound)
+        close_w = close_w & active
+
+        flag_deltas = coll.merge(dict(
+            acc=jnp.zeros((n,), jnp.int32).at[j].add((local_ok & active).astype(jnp.int32)),
+            cls=jnp.zeros((n,), jnp.int32).at[j].add(close_w.astype(jnp.int32)),
+            calib_sum=jnp.sum(jnp.where(newly_acc, mj_new, 0.0)),
+            calib_cnt=jnp.sum(newly_acc.astype(dtype)),
+            b_eff_total=jnp.sum(b_eff),
+        ))
+        acc_met = state.acc_met | (flag_deltas["acc"] > 0)
+        closed = state.closed | (flag_deltas["cls"] > 0)
+        cur = jnp.where(close_w, IDLE, cur)
+        calib_sum = state.calib_sum + flag_deltas["calib_sum"].astype(jnp.float32)
+        calib_cnt = state.calib_cnt + flag_deltas["calib_cnt"].astype(jnp.float32)
+
+        # resource monitor: Eq. (4)'s two cost terms for this round
+        p_total = cfg.num_workers
+        round_cpu = (flag_deltas["b_eff_total"].astype(jnp.float32)
+                     * self.cost_per_tuple / cfg.cpu_tuple_ops_per_sec / p_total)
+        round_io = bytes_round.astype(jnp.float32) / cfg.io_bytes_per_sec
+        cpu_bound = round_cpu > round_io
+
+        # budget (t_eval) update — §5.4 rules
+        any_acc = flag_deltas["calib_cnt"] > 0
+        halve = jnp.where(cpu_bound, state.first_est, any_acc)
+        decay = jnp.where(halve, state.decay * 0.5,
+                          jnp.minimum(state.decay * 2.0, 1.0))
+        base = jnp.where(calib_cnt > 0, calib_sum / jnp.maximum(calib_cnt, 1.0),
+                         jnp.asarray(float(cfg.budget_init), jnp.float32))
+        budget = jnp.clip(base * decay, float(cfg.budget_min), float(cfg.budget_max))
+        if strategy != "resource_aware":
+            budget = state.budget      # fixed t_eval for the simpler strategies
+            decay = state.decay
+
+        # ---- 5. ESTIMATE -----------------------------------------------------
+        if strategy == "chunk_level":
+            done_sched = closed[self.schedule]
+            # reordering barrier: first not-done position == done-prefix length
+            prefix_len = jnp.where(jnp.all(done_sched), n, jnp.argmax(~done_sched))
+            in_est = jnp.arange(n) < prefix_len
+            est_mask = jnp.zeros((n,), bool).at[self.schedule].set(in_est)
+        elif strategy == "chunk_level_unordered":
+            est_mask = closed                      # inspection-paradox-vulnerable
+        else:
+            est_mask = stats.m > 0
+        stats_est = stats._replace(
+            m=jnp.where(est_mask, stats.m, 0),
+            ysum=jnp.where(est_mask[None], stats.ysum, 0),
+            ysq=jnp.where(est_mask[None], stats.ysq, 0),
+            psum=jnp.where(est_mask[None], stats.psum, 0))
+
+        sum_t = est.tau_hat(stats_est)
+        sum_v, _ = est.var_hat(stats_est)
+        cnt_t = est.count_tau_hat(stats_est)
+        cnt_v, _ = est.count_var_hat(stats_est)
+        need_avg = any(qq.agg == "avg" for qq in self.queries)
+        if need_avg:
+            avg_t, avg_v, _ = est.avg_estimate(stats_est)
+        estimate = jnp.zeros((q,), dtype)
+        variance = jnp.zeros((q,), dtype)
+        for qi, qq in enumerate(self.queries):
+            t_, v_ = {"sum": (sum_t, sum_v), "count": (cnt_t, cnt_v),
+                      "avg": (avg_t, avg_v) if need_avg else (sum_t, sum_v)}[qq.agg]
+            estimate = estimate.at[qi].set(t_[qi])
+            variance = variance.at[qi].set(v_[qi])
+        lo, hi = est.confidence_bounds(estimate, variance, self.conf)
+        err = est.error_ratio(estimate, lo, hi)
+
+        decided = jnp.full((q,), -1, jnp.int8)
+        stop_now = err <= self.eps.astype(dtype)
+        for qi, qq in enumerate(self.queries):
+            if qq.having is not None:
+                d = est.having_decision(lo[qi], hi[qi], qq.having.op,
+                                        qq.having.threshold)
+                decided = decided.at[qi].set(d)
+                stop_now = stop_now.at[qi].set(stop_now[qi] | (d != -1))
+        stopped = state.stopped | stop_now
+
+        all_closed = jnp.all(closed) & (head >= n)
+        new_state = EngineState(
+            stats=stats, offset=offset, closed=closed, acc_met=acc_met,
+            head=head, cur=cur, budget=budget, decay=decay,
+            calib_sum=calib_sum, calib_cnt=calib_cnt,
+            first_est=jnp.asarray(True), stopped=stopped,
+            round=state.round + 1, t_io=state.t_io + round_io,
+            t_cpu=state.t_cpu + round_cpu, cpu_bound=cpu_bound,
+            cached_m=state.cached_m, raw_touched=raw_touched, cache=cache)
+        report = RoundReport(
+            estimate=estimate, lo=lo, hi=hi, err=err, decided=decided,
+            n_chunks=stats_est.n, m_tuples=jnp.sum(stats_est.m),
+            round_io_s=round_io, round_cpu_s=round_cpu,
+            tuples_round=flag_deltas["b_eff_total"], bytes_round=bytes_round,
+            all_stopped=jnp.all(stopped), exhausted=all_closed)
+        return new_state, report
+
+
+class OLAEngine:
+    """Host-facing single-process engine: owns device buffers + jitted rounds."""
+
+    def __init__(self, store, queries: Sequence[Query], config: EngineConfig,
+                 schedule: Optional[np.ndarray] = None):
+        self.store = store
+        self.config = config
+        packed, sizes = store.packed_device_view()
+        self.packed = jnp.asarray(packed)
+        self.program = EngineProgram(
+            codec=store.codec, queries=queries, config=config,
+            n_chunks=store.num_chunks, m_max=store.max_chunk_tuples,
+            chunk_sizes=sizes, schedule=schedule)
+        speeds = config.worker_speed or (1.0,) * config.num_workers
+        assert len(speeds) == config.num_workers
+        self.speeds = jnp.asarray(speeds, jnp.float32)
+        self._round_fns: dict[int, callable] = {}
+        self.m_max = int(store.max_chunk_tuples)
+
+    @property
+    def queries(self):
+        return self.program.queries
+
+    def init_state(self, synopsis_seed: Optional[dict] = None) -> EngineState:
+        return self.program.init_state(synopsis_seed)
+
+    def round_fn(self, b_static: int):
+        if b_static not in self._round_fns:
+            coll = _Collectives()
+
+            def step(state, packed, speeds):
+                return self.program.round_body(state, packed, speeds, b_static, coll)
+
+            self._round_fns[b_static] = jax.jit(step, donate_argnums=(0,))
+        return self._round_fns[b_static]
+
+    def budget_ladder(self, b: float) -> int:
+        b = float(np.clip(b, self.config.budget_min,
+                          min(self.config.budget_max, self.m_max)))
+        return int(2 ** int(np.ceil(np.log2(max(b, 1.0)))))
+
+    def run(self, max_rounds: int = 100_000, wall_timeout_s: float = 300.0,
+            synopsis_seed: Optional[dict] = None, collect_history: bool = True):
+        """Bare driver loop (the δ-interval reporting controller wraps this)."""
+        state = self.init_state(synopsis_seed)
+        history = []
+        t0 = time.perf_counter()
+        for _ in range(max_rounds):
+            b = self.budget_ladder(float(state.budget))
+            state, rep = self.round_fn(b)(state, self.packed, self.speeds)
+            if collect_history:
+                history.append(jax.tree.map(np.asarray, rep))
+            if bool(rep.all_stopped) or bool(rep.exhausted):
+                break
+            if time.perf_counter() - t0 > wall_timeout_s:
+                break
+        return state, history

@@ -1,0 +1,134 @@
+"""SPMD (multi-device) execution of the OLA-RAW engine via shard_map.
+
+The worker axis is sharded over the mesh ``data`` axis (DESIGN.md §3:
+EXTRACT threads → devices); every other piece of engine state is replicated
+and advanced by psum-merged deltas, so all devices hold identical state —
+the SPMD analogue of the paper's shared memory.  The raw chunk buffer is
+replicated too, mirroring the paper's "all threads see the file" model; a
+host-sharded store with a per-host queue is the scale-out extension
+(distributed/fault.py handles chunk reassignment on host loss).
+
+Semantics are *identical* to the single-device engine with
+``num_workers = devices × workers_per_device`` — property-tested in
+tests/test_engine_spmd.py.  The claim step's prefix-sum sees the all-gathered
+idle flags in global worker order, so chunk hand-out order is deterministic
+and independent of device count.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.engine import (
+    EngineConfig,
+    EngineProgram,
+    EngineState,
+    RoundReport,
+    _Collectives,
+)
+from repro.core.estimators import BiLevelStats
+from repro.core.queries import Query
+
+try:  # jax >= 0.6 exposes shard_map at the top level
+    shard_map = jax.shard_map
+except AttributeError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map
+
+
+def engine_state_specs() -> EngineState:
+    """PartitionSpecs for EngineState: `cur` sharded over data, rest replicated.
+
+    The static ints inside BiLevelStats become replicated scalars under
+    shard_map — harmless, they are only used arithmetically.
+    """
+    rep = P()
+    stats_spec = BiLevelStats(M=rep, m=rep, ysum=rep, ysq=rep, psum=rep,
+                              n_total=rep, m_total=rep)
+    return EngineState(
+        stats=stats_spec, offset=rep, closed=rep, acc_met=rep, head=rep,
+        cur=P("data"), budget=rep, decay=rep, calib_sum=rep, calib_cnt=rep,
+        first_est=rep, stopped=rep, round=rep, t_io=rep, t_cpu=rep,
+        cpu_bound=rep, cached_m=rep, raw_touched=rep, cache=rep)
+
+
+def report_specs() -> RoundReport:
+    return RoundReport(*([P()] * len(RoundReport._fields)))
+
+
+class SPMDEngine:
+    """Multi-device OLA engine over a mesh with a ``data`` axis."""
+
+    def __init__(self, store, queries: Sequence[Query], config: EngineConfig,
+                 mesh: Mesh, schedule: Optional[np.ndarray] = None):
+        self.mesh = mesh
+        self.n_dev = mesh.shape["data"]
+        assert config.num_workers % self.n_dev == 0, (
+            f"num_workers={config.num_workers} must divide over "
+            f"data axis size {self.n_dev}")
+        self.wpd = config.num_workers // self.n_dev
+        self.config = config
+        packed, sizes = store.packed_device_view()
+        self.program = EngineProgram(
+            codec=store.codec, queries=queries, config=config,
+            n_chunks=store.num_chunks, m_max=store.max_chunk_tuples,
+            chunk_sizes=sizes, schedule=schedule)
+        self.m_max = int(store.max_chunk_tuples)
+        speeds = config.worker_speed or (1.0,) * config.num_workers
+        self.packed = jax.device_put(packed, NamedSharding(mesh, P()))
+        self.speeds = jax.device_put(np.asarray(speeds, np.float32),
+                                     NamedSharding(mesh, P("data")))
+        self._round_fns: dict[int, callable] = {}
+
+    @property
+    def queries(self):
+        return self.program.queries
+
+    def init_state(self, synopsis_seed: Optional[dict] = None) -> EngineState:
+        state = self.program.init_state(synopsis_seed)
+        shardings = jax.tree.map(lambda spec: NamedSharding(self.mesh, spec),
+                                 engine_state_specs(),
+                                 is_leaf=lambda x: isinstance(x, P))
+        return jax.device_put(state, shardings)
+
+    def round_fn(self, b_static: int):
+        if b_static not in self._round_fns:
+            coll = _Collectives(axis_name="data", workers_per_device=self.wpd)
+            specs = engine_state_specs()
+
+            def step(state, packed, speeds):
+                return self.program.round_body(state, packed, speeds,
+                                               b_static, coll)
+
+            sm = shard_map(step, mesh=self.mesh,
+                           in_specs=(specs, P(), P("data")),
+                           out_specs=(specs, report_specs()),
+                           check_vma=False)
+            self._round_fns[b_static] = jax.jit(sm, donate_argnums=(0,))
+        return self._round_fns[b_static]
+
+    def budget_ladder(self, b: float) -> int:
+        b = float(np.clip(b, self.config.budget_min,
+                          min(self.config.budget_max, self.m_max)))
+        return int(2 ** int(np.ceil(np.log2(max(b, 1.0)))))
+
+    def run(self, max_rounds: int = 100_000, wall_timeout_s: float = 600.0,
+            synopsis_seed: Optional[dict] = None, collect_history: bool = True):
+        state = self.init_state(synopsis_seed)
+        history = []
+        t0 = time.perf_counter()
+        for _ in range(max_rounds):
+            b = self.budget_ladder(float(state.budget))
+            state, rep = self.round_fn(b)(state, self.packed, self.speeds)
+            if collect_history:
+                history.append(jax.tree.map(np.asarray, rep))
+            if bool(rep.all_stopped) or bool(rep.exhausted):
+                break
+            if time.perf_counter() - t0 > wall_timeout_s:
+                break
+        return state, history

@@ -1,0 +1,288 @@
+"""Query plane: the aggregate-query AST and its compiled tile evaluator.
+
+Queries follow the paper's Section 2.2 form::
+
+    SELECT AGGREGATE(expression) FROM T WHERE predicate [HAVING agg <op> thr]
+
+with AGGREGATE in {SUM, COUNT, AVERAGE}, ``expression`` a numeric expression
+over columns, and ``predicate`` a conjunction of range/comparison terms.
+GROUP BY is handled exactly as the paper prescribes: each group becomes a
+separate query with a group-membership predicate, and all the queries run
+simultaneously over the same scan (the engine's stats arrays carry a leading
+query dimension).
+
+``compile_queries`` lowers a list of queries to a single jitted *tile
+evaluator*  ``cols (t, C) -> (x (Q, t), p (Q, t))``  where ``x_i`` is the
+expression value predicate-masked per Table 1 (``x_i = 0`` if the tuple fails
+the predicate) and ``p_i`` is the 0/1 predicate indicator.  Both the pure-JAX
+engine and the Pallas ``chunk_agg`` / ``sampled_stats`` kernels consume this
+evaluator's coefficient form.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Expressions
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Linear:
+    """``Σ_k coeffs[k] · col_k`` — the paper's evaluation expression
+    (``SUM(Σ_i c_i · A_i)`` in Section 7)."""
+
+    coeffs: tuple[float, ...]
+
+    def __call__(self, cols: jnp.ndarray) -> jnp.ndarray:
+        c = jnp.asarray(self.coeffs, dtype=cols.dtype)
+        return cols[..., : len(self.coeffs)] @ c
+
+
+@dataclasses.dataclass(frozen=True)
+class Column:
+    """A single column reference, e.g. ``T.a``."""
+
+    index: int
+
+    def __call__(self, cols: jnp.ndarray) -> jnp.ndarray:
+        return cols[..., self.index]
+
+
+@dataclasses.dataclass(frozen=True)
+class SquaredDiff:
+    """``(T.a - T.b)^2`` — the paper's example of a non-linear expression."""
+
+    a: int
+    b: int
+
+    def __call__(self, cols: jnp.ndarray) -> jnp.ndarray:
+        d = cols[..., self.a] - cols[..., self.b]
+        return d * d
+
+
+@dataclasses.dataclass(frozen=True)
+class Custom:
+    """Arbitrary jnp-traceable expression ``f(cols (..., C)) -> (...)``."""
+
+    fn: Callable[[jnp.ndarray], jnp.ndarray]
+
+    def __call__(self, cols: jnp.ndarray) -> jnp.ndarray:
+        return self.fn(cols)
+
+
+ONE = Custom(fn=lambda cols: jnp.ones(cols.shape[:-1], cols.dtype))
+"""Expression ``1`` — COUNT is SUM with expression = 1 (Section 4.3)."""
+
+
+# ---------------------------------------------------------------------------
+# Predicates (conjunctive normal form over simple terms)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Range:
+    """``lo <= col < hi`` — the paper's selectivity-controlling predicate."""
+
+    col: int
+    lo: float = -np.inf
+    hi: float = np.inf
+
+    def __call__(self, cols: jnp.ndarray) -> jnp.ndarray:
+        c = cols[..., self.col]
+        return (c >= self.lo) & (c < self.hi)
+
+
+@dataclasses.dataclass(frozen=True)
+class Cmp:
+    col: int
+    op: str  # one of < <= > >= == !=
+    value: float
+
+    def __call__(self, cols: jnp.ndarray) -> jnp.ndarray:
+        c = cols[..., self.col]
+        v = jnp.asarray(self.value, cols.dtype)
+        return {
+            "<": c < v, "<=": c <= v, ">": c > v, ">=": c >= v,
+            "==": c == v, "!=": c != v,
+        }[self.op]
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupEq:
+    """Group-membership predicate used by the GROUP BY expansion."""
+
+    col: int
+    value: float
+
+    def __call__(self, cols: jnp.ndarray) -> jnp.ndarray:
+        return cols[..., self.col] == jnp.asarray(self.value, cols.dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class And:
+    terms: tuple
+
+    def __call__(self, cols: jnp.ndarray) -> jnp.ndarray:
+        out = jnp.ones(cols.shape[:-1], dtype=bool)
+        for t in self.terms:
+            out = out & t(cols)
+        return out
+
+
+TRUE = And(terms=())
+
+
+# ---------------------------------------------------------------------------
+# Queries
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Having:
+    op: str  # < <= > >=
+    threshold: float
+
+
+@dataclasses.dataclass(frozen=True)
+class Query:
+    """One OLA query.  ``epsilon`` is the target error ratio (stop condition),
+    ``confidence`` the CI level, both per Section 2.2's user parameters."""
+
+    agg: str  # 'sum' | 'count' | 'avg'
+    expr: object = ONE
+    pred: object = TRUE
+    having: Optional[Having] = None
+    epsilon: float = 0.05
+    confidence: float = 0.95
+    name: str = "q"
+
+    def __post_init__(self):
+        if self.agg not in ("sum", "count", "avg"):
+            raise ValueError(f"unsupported aggregate: {self.agg}")
+
+    @property
+    def columns_used(self) -> frozenset[int]:
+        """Columns the query touches — drives synopsis reuse (Section 6)."""
+        cols: set[int] = set()
+
+        def walk(node):
+            if isinstance(node, Linear):
+                cols.update(range(len(node.coeffs)))
+            elif isinstance(node, (Column,)):
+                cols.add(node.index)
+            elif isinstance(node, SquaredDiff):
+                cols.update((node.a, node.b))
+            elif isinstance(node, Custom):
+                cols.add(-1)  # unknown support: requires all columns
+            elif isinstance(node, (Range, Cmp, GroupEq)):
+                cols.add(node.col)
+            elif isinstance(node, And):
+                for t in node.terms:
+                    walk(t)
+
+        walk(self.expr)
+        walk(self.pred)
+        return frozenset(cols)
+
+
+def expand_group_by(base: Query, group_col: int, group_values: Sequence[float],
+                    ) -> list[Query]:
+    """GROUP BY handling per Section 2.2: one query per group, identical
+    except for an extra group-membership conjunct, all run simultaneously."""
+    out = []
+    for v in group_values:
+        pred = And(terms=(base.pred, GroupEq(group_col, float(v))))
+        out.append(dataclasses.replace(base, pred=pred, name=f"{base.name}[g={v}]"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Compilation to a tile evaluator
+# ---------------------------------------------------------------------------
+
+
+def compile_queries(queries: Sequence[Query]) -> Callable[[jnp.ndarray], tuple]:
+    """Lower queries to ``cols (t, C) -> (x (Q, t), p (Q, t))`` (see module doc).
+
+    The returned function is pure jnp (trace-safe) and is consumed by the
+    engine inside jit; the kernels use :func:`linear_plan` instead when every
+    query is linear+range (the common fast path).
+    """
+    qs = tuple(queries)
+
+    def evaluate(cols: jnp.ndarray):
+        xs, ps = [], []
+        for q in qs:
+            p = q.pred(cols)
+            e = jnp.ones(cols.shape[:-1], cols.dtype) if q.agg == "count" else q.expr(cols)
+            pf = p.astype(cols.dtype)
+            xs.append(jnp.asarray(e, cols.dtype) * pf)
+            ps.append(pf)
+        return jnp.stack(xs, axis=0), jnp.stack(ps, axis=0)
+
+    return evaluate
+
+
+@dataclasses.dataclass(frozen=True)
+class LinearPlan:
+    """Coefficient form for the Pallas kernels: every query is a linear
+    expression with conjunctive range predicates.
+
+    ``coeffs (Q, C)``; predicate as per-column bounds ``lo/hi (Q, C)`` with
+    ±inf for unconstrained columns.
+    """
+
+    coeffs: np.ndarray
+    lo: np.ndarray
+    hi: np.ndarray
+
+    @property
+    def num_queries(self) -> int:
+        return self.coeffs.shape[0]
+
+
+def linear_plan(queries: Sequence[Query], num_cols: int) -> LinearPlan:
+    """Extract the coefficient form, or raise if a query is not linear+range."""
+    q_n = len(queries)
+    coeffs = np.zeros((q_n, num_cols), np.float32)
+    lo = np.full((q_n, num_cols), -np.inf, np.float32)
+    hi = np.full((q_n, num_cols), np.inf, np.float32)
+    for qi, q in enumerate(queries):
+        if q.agg == "count":
+            pass  # coeffs stay zero; kernels compute count from the predicate
+        elif isinstance(q.expr, Linear):
+            coeffs[qi, : len(q.expr.coeffs)] = q.expr.coeffs
+        elif isinstance(q.expr, Column):
+            coeffs[qi, q.expr.index] = 1.0
+        else:
+            raise ValueError(f"query {q.name}: expression not linear, "
+                             "use the pure-JAX evaluator path")
+
+        def add_pred(node):
+            if isinstance(node, And):
+                for t in node.terms:
+                    add_pred(t)
+            elif isinstance(node, Range):
+                lo[qi, node.col] = max(lo[qi, node.col], node.lo)
+                hi[qi, node.col] = min(hi[qi, node.col], node.hi)
+            elif isinstance(node, Cmp) and node.op in ("<", "<=", ">", ">="):
+                if node.op in ("<", "<="):
+                    hi[qi, node.col] = min(hi[qi, node.col], node.value)
+                else:
+                    lo[qi, node.col] = max(lo[qi, node.col], node.value)
+            elif isinstance(node, (GroupEq, Cmp)):
+                # equality: encode as a degenerate [v, v] closed range via eps
+                v = node.value
+                lo[qi, node.col] = max(lo[qi, node.col], v)
+                hi[qi, node.col] = min(hi[qi, node.col], np.nextafter(np.float32(v), np.float32(np.inf)))
+            else:
+                raise ValueError(f"query {q.name}: predicate not range-conjunctive")
+
+        add_pred(q.pred)
+    return LinearPlan(coeffs=coeffs, lo=lo, hi=hi)

@@ -1,0 +1,207 @@
+"""Memory-resident bi-level sample synopsis — paper Section 6.
+
+The synopsis caches, under a tuple budget ``B``, a *circular window* into each
+chunk's keyed permutation together with the extracted column values, so that
+subsequent queries can be estimated without touching raw data.  Because the
+window is a contiguous run of the chunk's random order, whatever survives
+shrinking is still a uniform without-replacement sample — the synopsis is a
+valid bi-level sample *at every instant* (Section 6.1), and degenerates to a
+stratified sample once every chunk is represented.
+
+Construction/maintenance follow the paper's variance-driven strategy:
+
+* chunks are admitted in extraction order (reservoir-style: everything fits
+  until budget pressure appears);
+* on pressure, the budget is split across chunks **proportionally to their
+  within-chunk variance for the current query**; shrinking drops tuples from
+  the *front* of the window (``start += excess``) so the survivor set remains
+  a permutation window;
+* on resampling, new tuples extend the window at the *end* (the engine's
+  cursor continues from ``start+count``, wrapping circularly — Section 6.2),
+  and the merged window is re-fit to the chunk's allocation with the same
+  keep-the-tail rule.
+
+Maintenance is a between-queries host-side pass (numpy) over the engine's
+device-built extraction cache; estimation seeding evaluates the *new* query
+on the cached tuples, which is what lets a different expression/predicate
+reuse the same sample (Section 6.3).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.queries import Query, compile_queries
+
+
+@dataclasses.dataclass
+class SynopsisChunk:
+    start: int                 # window start in the chunk's permutation order
+    values: np.ndarray         # (count, C) extracted tuples, window order
+
+    @property
+    def count(self) -> int:
+        return int(self.values.shape[0])
+
+
+class BiLevelSynopsis:
+    """Budgeted cache of per-chunk permutation windows."""
+
+    def __init__(self, n_chunks: int, num_cols: int, budget_tuples: int,
+                 chunk_sizes: np.ndarray):
+        self.n_chunks = int(n_chunks)
+        self.num_cols = int(num_cols)
+        self.budget = int(budget_tuples)
+        self.chunk_sizes = np.asarray(chunk_sizes, np.int64)
+        self.chunks: dict[int, SynopsisChunk] = {}
+        self.origin_schedule: Optional[np.ndarray] = None
+        self.columns_cached: frozenset = frozenset(range(num_cols))
+        self.rebuilds = 0
+
+    # ------------------------------------------------------------ queries --
+    def supports(self, queries: Sequence[Query]) -> bool:
+        """A query sequence can reuse the synopsis iff its column support is
+        cached (Section 6: otherwise a full rebuild is triggered)."""
+        need = set()
+        for q in queries:
+            need |= set(q.columns_used)
+        if -1 in need:  # unknown support (Custom expression) -> all columns
+            need = set(range(self.num_cols))
+        return need <= set(self.columns_cached)
+
+    @property
+    def total_tuples(self) -> int:
+        return sum(c.count for c in self.chunks.values())
+
+    @property
+    def coverage(self) -> float:
+        return len(self.chunks) / max(self.n_chunks, 1)
+
+    # -------------------------------------------------------------- build --
+    def update_from_engine(self, state, schedule: np.ndarray,
+                           query_variances: np.ndarray) -> None:
+        """Absorb an engine run's extraction cache (Section 6.1/6.2).
+
+        ``query_variances`` is the per-chunk within-variance proxy for the
+        *current* (origin) query — the allocation driver.  Chunks are visited
+        in schedule order (= extraction order); windows merge with any
+        existing window for the same chunk (engine cursors continued from the
+        synopsis window end, so cached rows align with window ordinals).
+        """
+        cache = np.asarray(state.cache)          # (N, cap, C)
+        m = np.asarray(state.stats.m)            # (N,)
+        cached_m = np.asarray(state.cached_m)
+        offset = np.asarray(state.offset)
+        cap = cache.shape[1]
+        if self.origin_schedule is None:
+            self.origin_schedule = np.asarray(schedule).copy()
+
+        for j in np.asarray(schedule):
+            j = int(j)
+            mj = int(m[j])
+            if mj <= 0:
+                continue
+            have = self.chunks.get(j)
+            rows = min(mj, cap)
+            vals = cache[j, :rows]
+            if have is not None and int(cached_m[j]) > 0:
+                # engine was seeded from this window; cache rows [0, cached_m)
+                # duplicate it only if the engine re-wrote them (it does not),
+                # so splice: existing window + newly extracted tail.
+                new_rows = cache[j, int(cached_m[j]):rows]
+                vals = np.concatenate([have.values, new_rows], axis=0)
+                start = have.start
+            else:
+                start = int(offset[j]) - mj if int(offset[j]) >= mj else 0
+            self.chunks[j] = SynopsisChunk(start=start, values=np.asarray(vals))
+
+        self._fit_budget(query_variances)
+
+    def _fit_budget(self, variances: np.ndarray) -> None:
+        """Variance-proportional allocation + keep-the-tail shrinking."""
+        if self.total_tuples <= self.budget:
+            return
+        js = sorted(self.chunks.keys())
+        v = np.maximum(np.asarray([variances[j] for j in js], np.float64), 1e-12)
+        alloc = np.floor(self.budget * v / v.sum()).astype(np.int64)
+        alloc = np.maximum(alloc, 1)  # every admitted chunk keeps >= 1 tuple
+        # trim overshoot from the largest allocations
+        while alloc.sum() > self.budget:
+            k = int(np.argmax(alloc))
+            alloc[k] -= 1
+        for idx, j in enumerate(js):
+            ch = self.chunks[j]
+            keep = int(min(alloc[idx], ch.count))
+            if keep < ch.count:
+                drop = ch.count - keep
+                # drop the *front* of the random permutation (paper Fig. 6)
+                self.chunks[j] = SynopsisChunk(
+                    start=(ch.start + drop) % max(int(self.chunk_sizes[j]), 1),
+                    values=ch.values[drop:])
+
+    # ---------------------------------------------------------- estimation --
+    def within_variances(self, state) -> np.ndarray:
+        """Per-chunk within-variance proxy from engine stats (allocation key)."""
+        m = np.asarray(state.stats.m, np.float64)
+        ys = np.asarray(state.stats.ysum)[0].astype(np.float64)
+        yq = np.asarray(state.stats.ysq)[0].astype(np.float64)
+        ss = yq - np.where(m > 0, ys * ys / np.maximum(m, 1.0), 0.0)
+        return np.maximum(ss / np.maximum(m - 1.0, 1.0), 0.0)
+
+    def seed(self, queries: Sequence[Query], cache_cap: int) -> dict:
+        """Engine seed for a follow-up query (Section 6.3): evaluate the new
+        queries over the cached tuples and pre-fill stats + cursors."""
+        qn = len(queries)
+        n = self.n_chunks
+        evaluate = compile_queries(queries)
+        m = np.zeros(n, np.int32)
+        ysum = np.zeros((qn, n), np.float32)
+        ysq = np.zeros((qn, n), np.float32)
+        psum = np.zeros((qn, n), np.float32)
+        offset = np.zeros(n, np.int32)
+        cache = np.zeros((n, cache_cap, self.num_cols), np.float32)
+        for j, ch in self.chunks.items():
+            if ch.count == 0:
+                continue
+            x, p = evaluate(jnp.asarray(ch.values, jnp.float32))
+            x = np.asarray(x)
+            p = np.asarray(p)
+            m[j] = ch.count
+            ysum[:, j] = x.sum(-1)
+            ysq[:, j] = (x * x).sum(-1)
+            psum[:, j] = p.sum(-1)
+            offset[j] = ch.start + ch.count   # cursor continues past the window
+            rows = min(ch.count, cache_cap)
+            cache[j, :rows] = ch.values[:rows]
+        return dict(m=m, ysum=ysum, ysq=ysq, psum=psum, offset=offset,
+                    cache=cache)
+
+    def plan_schedule(self, base_schedule: np.ndarray,
+                      by_variance: Optional[np.ndarray] = None) -> np.ndarray:
+        """Chunk order for a follow-up query (Section 6.3).
+
+        If some chunks are missing from the synopsis, they go *first* in their
+        original order (new chunks have "infinite variance"); cached chunks
+        follow, also in original order.  If everything is cached, the synopsis
+        is a stratified sample and the order may be optimized to decreasing
+        chunk variance (pass ``by_variance``).
+        """
+        base = np.asarray(base_schedule)
+        cached = np.asarray([j in self.chunks for j in base])
+        if not cached.all():
+            return np.concatenate([base[~cached], base[cached]]).astype(np.int32)
+        if by_variance is not None:
+            order = np.argsort(-by_variance[base], kind="stable")
+            return base[order].astype(np.int32)
+        return base.astype(np.int32)
+
+    def rebuild(self) -> None:
+        """Full reset (Section 6: a query the synopsis cannot serve triggers
+        an automatic rebuild)."""
+        self.chunks.clear()
+        self.origin_schedule = None
+        self.rebuilds += 1

@@ -1,0 +1,25 @@
+"""Raw-data substrate: formats, synthetic datasets, chunk store, pipeline.
+
+This is the layer the OLA engine samples *from* — the analogue of the paper's
+CSV/FITS files on disk.  Records live in their raw byte representation until
+EXTRACT touches them; extraction cost is the whole point of the paper.
+"""
+
+from repro.data.formats import AsciiFixedFormat, BinaryBigEndianFormat, FORMATS
+from repro.data.chunkstore import ChunkStore, ChunkMeta
+from repro.data.generator import (
+    make_ptf_like,
+    make_synthetic_zipf,
+    make_wiki_like,
+)
+
+__all__ = [
+    "AsciiFixedFormat",
+    "BinaryBigEndianFormat",
+    "FORMATS",
+    "ChunkStore",
+    "ChunkMeta",
+    "make_ptf_like",
+    "make_synthetic_zipf",
+    "make_wiki_like",
+]

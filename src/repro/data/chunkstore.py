@@ -1,0 +1,153 @@
+"""Chunked raw-byte store — the paper's "raw file" abstraction.
+
+A :class:`ChunkStore` is a sequence of raw chunks (each holding many records
+in their on-disk byte format) plus the per-chunk metadata the estimators need
+(``M_j`` — Section 4.3 notes textual formats get it from ``wc -l``-style
+preprocessing and binary formats from file headers; here it is recorded at
+ingest).
+
+Two residency modes:
+
+* in-memory (default): chunks are numpy uint8 arrays — the NoDB-style cache.
+* disk-backed (``directory=...``): chunks are spilled to ``<name>.chunkNNN.bin``
+  files and read back on demand, giving the benchmarks a real READ stage with
+  measurable I/O time (and letting tests exercise restart-from-metadata).
+
+The device-facing view is :meth:`packed_device_view`: a zero-copy-ish padded
+``(N, max_record_count, record_bytes)`` uint8 tensor for the jitted engine.
+For stores too large for that, the engine pulls per-chunk slabs on demand
+through the pipeline's prefetcher.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class ChunkMeta:
+    num_tuples: int
+    num_bytes: int
+    path: Optional[str] = None  # set iff disk-backed
+
+
+class ChunkStore:
+    def __init__(self, name: str, codec, directory: Optional[str] = None):
+        self.name = name
+        self.codec = codec
+        self.directory = directory
+        self.meta: list[ChunkMeta] = []
+        self._chunks: list[Optional[np.ndarray]] = []
+        self._finalized = False
+
+    # ------------------------------------------------------------- create --
+    @classmethod
+    def create(cls, name: str, codec, directory: Optional[str] = None) -> "ChunkStore":
+        if directory is not None:
+            os.makedirs(directory, exist_ok=True)
+        return cls(name=name, codec=codec, directory=directory)
+
+    def append_chunk(self, raw: np.ndarray, num_tuples: int) -> None:
+        assert not self._finalized
+        raw = np.ascontiguousarray(raw, dtype=np.uint8).reshape(num_tuples, -1)
+        assert raw.shape[1] == self.codec.record_bytes, (
+            raw.shape, self.codec.record_bytes)
+        j = len(self.meta)
+        if self.directory is not None:
+            path = os.path.join(self.directory, f"{self.name}.chunk{j:05d}.bin")
+            raw.tofile(path)
+            self.meta.append(ChunkMeta(num_tuples, raw.nbytes, path))
+            self._chunks.append(None)  # not resident
+        else:
+            self.meta.append(ChunkMeta(num_tuples, raw.nbytes, None))
+            self._chunks.append(raw)
+
+    def finalize(self) -> None:
+        self._finalized = True
+        if self.directory is not None:
+            manifest = {
+                "name": self.name,
+                "codec": type(self.codec).__name__,
+                "num_cols": self.codec.num_cols,
+                "chunks": [dataclasses.asdict(m) for m in self.meta],
+            }
+            with open(os.path.join(self.directory, f"{self.name}.manifest.json"), "w") as f:
+                json.dump(manifest, f)
+
+    @classmethod
+    def open(cls, directory: str, name: str) -> "ChunkStore":
+        """Re-open a disk-backed store from its manifest (restart path)."""
+        from repro.data.formats import AsciiFixedFormat, BinaryBigEndianFormat
+
+        with open(os.path.join(directory, f"{name}.manifest.json")) as f:
+            manifest = json.load(f)
+        codec_cls = {"AsciiFixedFormat": AsciiFixedFormat,
+                     "BinaryBigEndianFormat": BinaryBigEndianFormat}[manifest["codec"]]
+        store = cls(name=name, codec=codec_cls(manifest["num_cols"]), directory=directory)
+        for m in manifest["chunks"]:
+            store.meta.append(ChunkMeta(**m))
+            store._chunks.append(None)
+        store._finalized = True
+        return store
+
+    # -------------------------------------------------------------- access --
+    @property
+    def num_chunks(self) -> int:
+        return len(self.meta)
+
+    @property
+    def num_tuples(self) -> int:
+        return sum(m.num_tuples for m in self.meta)
+
+    @property
+    def chunk_sizes(self) -> np.ndarray:
+        """The M_j vector (Table 1)."""
+        return np.asarray([m.num_tuples for m in self.meta], np.int32)
+
+    @property
+    def max_chunk_tuples(self) -> int:
+        return int(self.chunk_sizes.max())
+
+    def chunk_bytes(self, j: int) -> np.ndarray:
+        """READ stage for one chunk: resident copy or a disk read."""
+        raw = self._chunks[j]
+        if raw is None:
+            m = self.meta[j]
+            raw = np.fromfile(m.path, dtype=np.uint8).reshape(
+                m.num_tuples, self.codec.record_bytes)
+        return raw
+
+    def evict(self, j: int) -> None:
+        """Drop a resident chunk (only meaningful for disk-backed stores)."""
+        if self.directory is not None:
+            self._chunks[j] = None
+
+    def cache(self, j: int) -> None:
+        if self._chunks[j] is None:
+            self._chunks[j] = self.chunk_bytes(j)
+
+    def packed_device_view(self) -> tuple[np.ndarray, np.ndarray]:
+        """Padded ``(N, M_max, record_bytes)`` uint8 + ``(N,)`` sizes.
+
+        Padding rows are zero; the engine masks by ``M_j`` so they are never
+        included in estimation.
+        """
+        n, mx, rb = self.num_chunks, self.max_chunk_tuples, self.codec.record_bytes
+        out = np.zeros((n, mx, rb), np.uint8)
+        for j in range(n):
+            raw = self.chunk_bytes(j)
+            out[j, : raw.shape[0]] = raw
+        return out, self.chunk_sizes
+
+    def decode_all(self) -> np.ndarray:
+        """Ground-truth full EXTRACT (tests/benchmarks only): (T, C) float32."""
+        import jax.numpy as jnp
+
+        parts = [np.asarray(self.codec.decode_ref(jnp.asarray(self.chunk_bytes(j))))
+                 for j in range(self.num_chunks)]
+        return np.concatenate(parts, axis=0)

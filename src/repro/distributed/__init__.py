@@ -1,0 +1,17 @@
+"""Distribution plane: sharding rules, compression, fault tolerance."""
+
+from repro.distributed.sharding import (
+    ShardingRules,
+    activation_sharding,
+    logical_to_sharding,
+    param_shardings,
+    rules_for,
+)
+
+__all__ = [
+    "ShardingRules",
+    "activation_sharding",
+    "logical_to_sharding",
+    "param_shardings",
+    "rules_for",
+]

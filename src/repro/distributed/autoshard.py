@@ -1,0 +1,102 @@
+"""Activation sharding constraints for model code (MaxText-style).
+
+Without explicit constraints GSPMD may resolve FSDP-sharded weights against
+batch-sharded activations by *replicating the batch* (all-gathering
+activations instead of weights) — compute then scales with the model axis
+only and the data axis does redundant work (measured 16x matmul-FLOP
+inflation on the 16x16 mesh; see EXPERIMENTS.md §Perf iteration 0).
+
+Models call :func:`constrain` at residual-stream boundaries; outside a
+:func:`sharding_scope` it is the identity, so single-device smoke tests and
+the engine are unaffected.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_TLS = threading.local()
+
+
+@contextlib.contextmanager
+def sharding_scope(mesh: Mesh, batch_axes: tuple = ("pod", "data"),
+                   model_axis: str = "model"):
+    prev = getattr(_TLS, "ctx", None)
+    _TLS.ctx = {"mesh": mesh, "batch_axes": batch_axes, "model_axis": model_axis}
+    try:
+        yield
+    finally:
+        _TLS.ctx = prev
+
+
+def _ctx() -> Optional[dict]:
+    return getattr(_TLS, "ctx", None)
+
+
+def _batch_tuple(mesh: Mesh, batch_axes: tuple, batch: int):
+    chosen = []
+    size = 1
+    for a in batch_axes:
+        if a in mesh.shape and batch % (size * mesh.shape[a]) == 0:
+            chosen.append(a)
+            size *= mesh.shape[a]
+    return tuple(chosen) if chosen else None
+
+
+def data_group_count(tokens: int) -> int:
+    """Number of dispatch groups for grouped (data-axis-local) MoE routing.
+
+    Inside a sharding scope this is the data-axis size (each shard routes its
+    own tokens — dispatch and combine become collective-free); outside, 1.
+    """
+    ctx = _ctx()
+    if ctx is None:
+        return 1
+    g = 1
+    for a in ctx["batch_axes"]:
+        if a != ctx["model_axis"] and a in ctx["mesh"].shape:
+            g *= ctx["mesh"].shape[a]
+    while g > 1 and tokens % g != 0:
+        g //= 2
+    return max(g, 1)
+
+
+def constrain(x, kind: str):
+    """Apply a named constraint if inside a sharding scope.
+
+    kinds:
+      "btd"    — (B, S, D) residual stream: batch over data(/pod)
+      "btv"    — (B, S, V) logits: batch over data, vocab over model
+      "bd"     — (B, D): batch over data
+      "ecd"    — (E, C, D) MoE expert buffer: experts over model if divisible
+    """
+    ctx = _ctx()
+    if ctx is None:
+        return x
+    mesh = ctx["mesh"]
+    b_ax = _batch_tuple(mesh, ctx["batch_axes"], x.shape[0])
+    m_ax = ctx["model_axis"]
+    msize = mesh.shape.get(m_ax, 1)
+    if kind == "btd":
+        spec = P(b_ax)
+    elif kind == "btv":
+        v_ok = x.shape[-1] % msize == 0
+        spec = P(b_ax, None, m_ax if v_ok else None)
+    elif kind == "bd":
+        spec = P(b_ax)
+    elif kind == "ecd":
+        e_ok = x.shape[0] % msize == 0
+        spec = P(m_ax if e_ok else None)
+    elif kind == "gecd":
+        # grouped MoE buffer (G, E, C, d): groups over data, experts over
+        # model when the count divides
+        e_ok = x.shape[1] % msize == 0 and x.shape[1] >= msize
+        spec = P(b_ax, m_ax if e_ok else None)
+    else:
+        raise ValueError(kind)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,141 @@
+"""Logical-axis → mesh-axis sharding rules (MaxText-style).
+
+The model zoo annotates every parameter with logical axis names
+(models/layers.py).  This module maps them onto the production mesh:
+
+* ``model`` axis — tensor parallelism: "vocab", "q_heads", "mlp",
+  "heads_ssm", and "experts" (pure EP when the expert count divides the
+  axis; otherwise experts stay unsharded and their FFN shards on "mlp").
+* ``data`` axis — FSDP: the "embed" (d_model) dimension of weight matrices
+  shards over data, so parameters AND optimizer state scale down with the
+  full chip count (granite-34b + f32 Adam does not fit per-chip HBM under
+  pure TP).  XLA/GSPMD inserts the weight all-gathers; overlapping them is
+  a §Perf item.
+* ``pod`` axis — outer data parallelism only (batch); params are replicated
+  across pods and gradients all-reduce hierarchically.
+
+Families can override: xLSTM replicates everything (heads=4, d_model=768 —
+TP would pad 4x; batch shards over both axes instead, DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    rules: dict
+    batch_axes: tuple = ("pod", "data")   # activation batch sharding
+    replicate_params: bool = False
+
+    def axis_for(self, logical: str) -> Optional[str]:
+        return None if self.replicate_params else self.rules.get(logical)
+
+
+DEFAULT_RULES = {
+    "vocab": "model",
+    "q_heads": "model",
+    "mlp": "model",
+    "mlp2": "model",
+    "experts": "model",
+    "experts_unsharded": None,
+    "router_experts": None,
+    "kv_heads": None,       # replicated under TP (exact GQA)
+    "head": None,
+    "embed": "data",        # FSDP: weight matrices shard d_model over data
+    "embed2": "data",
+    "heads_ssm": "model",
+    "state": None,
+    "conv": None,
+    "layers": None,
+    "sites": None,
+    "pos": None,
+}
+
+# Dimensions that may stay unsharded when not divisible (fall back gracefully
+# instead of erroring): everything — divisibility is checked per-array below.
+
+
+def rules_for(family: str) -> ShardingRules:
+    if family == "xlstm":
+        return ShardingRules(rules={}, replicate_params=True,
+                             batch_axes=("pod", "data", "model"))
+    return ShardingRules(rules=DEFAULT_RULES)
+
+
+def _spec_for_array(shape, axes, rules: ShardingRules, mesh: Mesh) -> P:
+    parts = []
+    used = set()
+    for dim, logical in zip(shape, axes):
+        mesh_axis = rules.axis_for(logical)
+        if (mesh_axis is not None and mesh_axis in mesh.shape
+                and mesh_axis not in used
+                and dim % mesh.shape[mesh_axis] == 0):
+            parts.append(mesh_axis)
+            used.add(mesh_axis)
+        else:
+            parts.append(None)
+    # drop trailing Nones for tidiness
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def logical_to_sharding(shape, axes, rules: ShardingRules,
+                        mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, _spec_for_array(shape, axes, rules, mesh))
+
+
+def param_shardings(params, specs, rules: ShardingRules, mesh: Mesh):
+    """Pytree of NamedShardings matching ``params`` (specs carries the
+    logical-axes tuples; leaves of specs are tuples of str)."""
+
+    def one(ax, p):
+        return logical_to_sharding(p.shape, ax, rules, mesh)
+
+    # map over specs first: its leaves (axis tuples) are pytree nodes, so the
+    # is_leaf predicate must run against the specs tree, not params
+    return jax.tree.map(one, specs, params,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            isinstance(a, str) for a in x))
+
+
+def activation_sharding(mesh: Mesh, rules: ShardingRules, batch: int,
+                        *trailing) -> NamedSharding:
+    """Batch-sharded activation spec: batch over the configured axes (those
+    present in the mesh and dividing the batch), trailing dims unsharded."""
+    axes = [a for a in rules.batch_axes if a in mesh.shape]
+    size = 1
+    chosen = []
+    for a in axes:
+        if batch % (size * mesh.shape[a]) == 0:
+            chosen.append(a)
+            size *= mesh.shape[a]
+    spec = P(tuple(chosen) if chosen else None, *trailing)
+    return NamedSharding(mesh, spec)
+
+
+def cache_sharding(mesh: Mesh, cache_leaf_shape, batch_dim: int,
+                   seq_dim: Optional[int], heads_dim: Optional[int],
+                   batch: int) -> NamedSharding:
+    """Serve-cache sharding: batch→data when divisible; heads→model when the
+    (padded) head count divides, else seq→model (distributed attention over
+    the cache — GSPMD inserts the partial-softmax collectives)."""
+    ndim = len(cache_leaf_shape)
+    parts: list = [None] * ndim
+    if batch % mesh.shape.get("data", 1) == 0 and batch > 1:
+        parts[batch_dim] = "data"
+    msize = mesh.shape.get("model", 1)
+    if (heads_dim is not None and cache_leaf_shape[heads_dim] % msize == 0
+            and cache_leaf_shape[heads_dim] >= msize):
+        parts[heads_dim] = "model"
+    elif seq_dim is not None and cache_leaf_shape[seq_dim] % msize == 0:
+        parts[seq_dim] = "model"
+    while parts and parts[-1] is None:
+        parts.pop()
+    return NamedSharding(mesh, P(*parts))

@@ -1,0 +1,27 @@
+"""Pallas TPU kernels for the paper's measured hot spots.
+
+The paper's bottleneck is the EXTRACT stage (tokenize/parse) fused with
+per-tuple aggregation — Section 3 calls out CPU-bound extraction as the very
+reason bi-level sampling beats chunk-level sampling.  Three kernels cover the
+three access patterns the engine uses:
+
+* :mod:`extract_parse` — fixed-width ASCII-decimal records → f32 columns
+  (the EXTRACT stage itself, VPU-vectorized digit arithmetic).
+* :mod:`chunk_agg`     — fused parse + predicate + (count, Σx, Σx², Σp) per
+  chunk over *full* chunks (chunk-level / holistic strategies; the analogue
+  of Instant Loading's SIMD tokenizer feeding an aggregator).
+* :mod:`round_stats`   — fused parse + multi-query eval + budget-masked
+  partial statistics over a gathered ``(workers, budget)`` slab — the
+  bi-level engine's per-round hot loop.
+
+``ref.py`` holds the pure-jnp oracles; ``ops.py`` the jitted wrappers that
+dispatch to Pallas on TPU and to the oracle (or ``interpret=True``) on CPU.
+"""
+
+from repro.kernels.ops import (
+    chunk_agg,
+    extract_parse,
+    round_stats,
+)
+
+__all__ = ["chunk_agg", "extract_parse", "round_stats"]

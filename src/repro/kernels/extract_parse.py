@@ -1,0 +1,77 @@
+"""EXTRACT as a Pallas TPU kernel: fixed-width ASCII decimal → f32 columns.
+
+The paper's EXTRACT stage ("identify the schema attributes ... convert from
+raw format to binary type") is the measured bottleneck for text formats.  On
+TPU the digit arithmetic vectorizes on the VPU: per field we run an int32
+Horner evaluation over the 8 integer and 6 fraction digit lanes (static byte
+offsets — the fixed-width layout is the TPU adaptation documented in
+DESIGN.md §3; there is no MXU work in parsing, by nature).
+
+Block geometry: a ``(TILE, record_bytes)`` uint8 slab per grid step lives in
+VMEM (TILE=256, 16 cols ⇒ 64 KiB in + 16 KiB out, comfortably within the
+~16 MiB/core budget while leaving room for double-buffering), output block
+``(TILE, C)`` f32.  TILE is a multiple of the (32, 128) int8 native tile.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.data.formats import FIELD_BYTES, FRAC_DIGITS, INT_DIGITS
+
+DEFAULT_TILE = 256
+
+
+def _parse_block(raw: jnp.ndarray, num_cols: int) -> jnp.ndarray:
+    """(tile, rec_bytes) int32 ascii bytes -> (tile, C) f32.  Shared by the
+    three kernels in this package."""
+    cols = []
+    zero = jnp.int32(ord("0"))
+    for c in range(num_cols):
+        base = c * FIELD_BYTES
+        sign = jnp.where(raw[:, base] == jnp.int32(ord("-")), -1.0, 1.0)
+        ival = jnp.zeros_like(raw[:, 0])
+        for d in range(INT_DIGITS):          # Horner over int lanes (max 1e8-1: fits i32)
+            ival = ival * 10 + (raw[:, base + 1 + d] - zero)
+        fval = jnp.zeros_like(raw[:, 0])
+        for d in range(FRAC_DIGITS):
+            fval = fval * 10 + (raw[:, base + 2 + INT_DIGITS + d] - zero)
+        val = sign * (ival.astype(jnp.float32)
+                      + fval.astype(jnp.float32) * jnp.float32(10.0 ** -FRAC_DIGITS))
+        cols.append(val)
+    return jnp.stack(cols, axis=-1)
+
+
+def _extract_kernel(raw_ref, out_ref, *, num_cols: int):
+    raw = raw_ref[...].astype(jnp.int32)
+    out_ref[...] = _parse_block(raw, num_cols)
+
+
+@functools.partial(jax.jit, static_argnames=("num_cols", "tile", "interpret"))
+def extract_parse_pallas(raw: jnp.ndarray, num_cols: int,
+                         tile: int = DEFAULT_TILE,
+                         interpret: bool = False) -> jnp.ndarray:
+    """(T, rec_bytes) uint8 -> (T, C) f32 via pallas_call.
+
+    T is padded up to a tile multiple; padded rows parse garbage zeros and are
+    sliced away (they decode the 0-byte, harmless).
+    """
+    t, rec = raw.shape
+    assert rec == num_cols * FIELD_BYTES, (rec, num_cols)
+    t_pad = (t + tile - 1) // tile * tile
+    if t_pad != t:
+        raw = jnp.pad(raw, ((0, t_pad - t), (0, 0)),
+                      constant_values=ord("0"))
+    out = pl.pallas_call(
+        functools.partial(_extract_kernel, num_cols=num_cols),
+        grid=(t_pad // tile,),
+        in_specs=[pl.BlockSpec((tile, rec), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((tile, num_cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t_pad, num_cols), jnp.float32),
+        interpret=interpret,
+    )(raw)
+    return out[:t]

@@ -1,0 +1,80 @@
+"""Jitted public wrappers with platform dispatch for the kernels package.
+
+``backend`` semantics:
+
+* ``"auto"``    — Pallas on TPU, pure-jnp oracle elsewhere (production default:
+                  the oracle compiles to decent XLA:CPU code, while
+                  ``interpret=True`` is a debugging interpreter).
+* ``"pallas"``  — force pallas_call; on CPU this sets ``interpret=True``
+                  (used by the correctness sweeps in tests/).
+* ``"ref"``     — force the oracle.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.chunk_agg import chunk_agg_pallas
+from repro.kernels.extract_parse import extract_parse_pallas
+from repro.kernels.round_stats import round_stats_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(backend: str) -> tuple[bool, bool]:
+    """-> (use_pallas, interpret)"""
+    if backend == "auto":
+        return (_on_tpu(), False)
+    if backend == "pallas":
+        return (True, not _on_tpu())
+    if backend == "ref":
+        return (False, False)
+    raise ValueError(backend)
+
+
+def extract_parse(raw: jnp.ndarray, num_cols: int,
+                  backend: str = "auto") -> jnp.ndarray:
+    """(T, rec_bytes) uint8 fixed-width ASCII -> (T, C) f32."""
+    use_pallas, interpret = _resolve(backend)
+    if use_pallas:
+        return extract_parse_pallas(raw, num_cols, interpret=interpret)
+    return _ref.parse_ascii_ref(raw, num_cols)
+
+
+def chunk_agg(raw: jnp.ndarray, sizes: jnp.ndarray, coeffs, lo, hi,
+              backend: str = "auto") -> jnp.ndarray:
+    """(N, M, rec) uint8 + plan -> (N, Q, 4) per-chunk (count, Σx, Σx², Σp)."""
+    num_cols = int(coeffs.shape[1])
+    use_pallas, interpret = _resolve(backend)
+    if use_pallas:
+        return chunk_agg_pallas(raw, jnp.asarray(sizes, jnp.int32),
+                                jnp.asarray(coeffs, jnp.float32),
+                                jnp.asarray(lo, jnp.float32),
+                                jnp.asarray(hi, jnp.float32),
+                                num_cols=num_cols, interpret=interpret)
+    return _ref.chunk_agg_ref(raw, num_cols, jnp.asarray(coeffs, jnp.float32),
+                              jnp.asarray(lo, jnp.float32),
+                              jnp.asarray(hi, jnp.float32),
+                              jnp.asarray(sizes, jnp.int32))
+
+
+def round_stats(slab: jnp.ndarray, b_eff: jnp.ndarray, coeffs, lo, hi,
+                backend: str = "auto") -> jnp.ndarray:
+    """(W, B, rec) uint8 slab + budgets -> (W, Q, 4) partial stats."""
+    num_cols = int(coeffs.shape[1])
+    use_pallas, interpret = _resolve(backend)
+    if use_pallas:
+        return round_stats_pallas(slab, jnp.asarray(b_eff, jnp.int32),
+                                  jnp.asarray(coeffs, jnp.float32),
+                                  jnp.asarray(lo, jnp.float32),
+                                  jnp.asarray(hi, jnp.float32),
+                                  num_cols=num_cols, interpret=interpret)
+    return _ref.round_stats_ref(slab, num_cols,
+                                jnp.asarray(coeffs, jnp.float32),
+                                jnp.asarray(lo, jnp.float32),
+                                jnp.asarray(hi, jnp.float32),
+                                jnp.asarray(b_eff, jnp.int32))

@@ -1,0 +1,82 @@
+"""Pure-jnp oracles for every kernel in this package.
+
+These are the semantics contract: each Pallas kernel must ``allclose`` these
+functions across the shape/dtype sweeps in tests/test_kernels.py.  They are
+also the CPU execution path used by the engine when no TPU is present.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.data.formats import FIELD_BYTES, FRAC_DIGITS, INT_DIGITS
+
+
+def parse_ascii_ref(raw: jnp.ndarray, num_cols: int) -> jnp.ndarray:
+    """(T, rec_bytes) uint8 fixed-width ASCII -> (T, C) f32."""
+    t = raw.shape[0]
+    f = raw.reshape(t, num_cols, FIELD_BYTES).astype(jnp.int32)
+    zero = jnp.int32(ord("0"))
+    ipow = jnp.asarray([10.0 ** (INT_DIGITS - 1 - d) for d in range(INT_DIGITS)],
+                       jnp.float32)
+    fpow = jnp.asarray([10.0 ** -(d + 1) for d in range(FRAC_DIGITS)], jnp.float32)
+    ival = jnp.einsum("tcd,d->tc",
+                      (f[..., 1:1 + INT_DIGITS] - zero).astype(jnp.float32), ipow)
+    fval = jnp.einsum("tcd,d->tc",
+                      (f[..., 2 + INT_DIGITS:] - zero).astype(jnp.float32), fpow)
+    sign = jnp.where(f[..., 0] == ord("-"), -1.0, 1.0).astype(jnp.float32)
+    return sign * (ival + fval)
+
+
+def eval_plan_ref(vals: jnp.ndarray, coeffs: jnp.ndarray, lo: jnp.ndarray,
+                  hi: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Linear-plan evaluation: vals (..., C) -> x (Q, ...), p (Q, ...).
+
+    ``x`` is predicate-masked (Table 1 convention), ``p`` the 0/1 indicator.
+    COUNT queries carry zero coefficients; callers use ``p`` for them.
+    """
+    qshape = (lo.shape[0],) + (1,) * (vals.ndim - 1) + (lo.shape[-1],)
+    lo_b = lo.reshape(qshape)
+    hi_b = hi.reshape(qshape)
+    pred = jnp.all((vals[None] >= lo_b) & (vals[None] < hi_b), axis=-1)  # (Q, ...)
+    expr = jnp.einsum("...c,qc->q...", vals, coeffs)
+    pf = pred.astype(vals.dtype)
+    return expr * pf, pf
+
+
+def chunk_agg_ref(raw: jnp.ndarray, num_cols: int, coeffs, lo, hi,
+                  sizes: jnp.ndarray) -> jnp.ndarray:
+    """Full-chunk fused parse+eval+aggregate.
+
+    raw (N, M, rec) uint8, sizes (N,) -> out (N, Q, 4) with
+    out[j, q] = (m_valid, Σx, Σx², Σp) over the first ``sizes[j]`` rows.
+    """
+    n, m, _ = raw.shape
+    vals = parse_ascii_ref(raw.reshape(n * m, -1), num_cols).reshape(n, m, num_cols)
+    x, p = eval_plan_ref(vals, coeffs, lo, hi)    # (Q, N, M)
+    row_ok = (jnp.arange(m)[None, :] < sizes[:, None]).astype(vals.dtype)  # (N, M)
+    x = x * row_ok[None]
+    p = p * row_ok[None]
+    cnt = jnp.broadcast_to(jnp.sum(row_ok, -1)[None], x.shape[:2])  # (Q, N)
+    out = jnp.stack([cnt, jnp.sum(x, -1), jnp.sum(x * x, -1), jnp.sum(p, -1)],
+                    axis=-1)                      # (Q, N, 4)
+    return jnp.transpose(out, (1, 0, 2))          # (N, Q, 4)
+
+
+def round_stats_ref(slab: jnp.ndarray, num_cols: int, coeffs, lo, hi,
+                    b_eff: jnp.ndarray) -> jnp.ndarray:
+    """Bi-level round slab: fused parse+eval+budget-masked stats.
+
+    slab (W, B, rec) uint8 (rows already gathered in the chunk's permutation
+    order), b_eff (W,) -> out (W, Q, 4) = (m, y', y'', p') over rows < b_eff.
+    """
+    w, b, _ = slab.shape
+    vals = parse_ascii_ref(slab.reshape(w * b, -1), num_cols).reshape(w, b, num_cols)
+    x, p = eval_plan_ref(vals, coeffs, lo, hi)    # (Q, W, B)
+    ok = (jnp.arange(b)[None, :] < b_eff[:, None]).astype(vals.dtype)  # (W, B)
+    x = x * ok[None]
+    p = p * ok[None]
+    cnt = jnp.broadcast_to(jnp.sum(ok, -1)[None], x.shape[:2])  # (Q, W)
+    out = jnp.stack([cnt, jnp.sum(x, -1), jnp.sum(x * x, -1), jnp.sum(p, -1)],
+                    axis=-1)                      # (Q, W, 4)
+    return jnp.transpose(out, (1, 0, 2))          # (W, Q, 4)

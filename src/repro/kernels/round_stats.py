@@ -1,0 +1,63 @@
+"""Bi-level round hot-loop as a Pallas kernel: fused parse + eval + masked stats.
+
+One engine round extracts, per worker, the next ``b`` tuples of its chunk in
+permutation order.  The gather of scattered raw rows happens HBM-side (an XLA
+gather — random access is inherent to sampling, exactly as in the paper's
+in-memory shuffle); this kernel then fuses everything downstream of the
+gather: parse, multi-query predicate/expression evaluation, and the
+budget-masked partial statistics ``(m, y', y'', p')`` that feed Eq. (1)/(3).
+
+Grid ``(W,)`` — one step per worker; blocks: slab ``(1, B, rec)`` uint8,
+budget scalar, plan ``(Q, C)`` triple, out ``(1, Q, 4)`` f32.  B=budget is a
+power of two from the engine's t_eval ladder, so block shapes are stable
+across rounds and recompiles are bounded.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.data.formats import FIELD_BYTES
+from repro.kernels.chunk_agg import _eval_plan_block
+from repro.kernels.extract_parse import _parse_block
+
+
+def _round_stats_kernel(slab_ref, beff_ref, coeffs_ref, lo_ref, hi_ref,
+                        out_ref, *, num_cols: int):
+    raw = slab_ref[0].astype(jnp.int32)                      # (B, rec)
+    vals = _parse_block(raw, num_cols)                       # (B, C)
+    x, p = _eval_plan_block(vals, coeffs_ref[...], lo_ref[...], hi_ref[...])
+    b = vals.shape[0]
+    ok = (jax.lax.iota(jnp.int32, b) < beff_ref[0]).astype(jnp.float32)
+    x = x * ok[None, :]
+    p = p * ok[None, :]
+    out_ref[0] = jnp.stack([
+        jnp.broadcast_to(jnp.sum(ok), (x.shape[0],)),
+        jnp.sum(x, -1), jnp.sum(x * x, -1), jnp.sum(p, -1)], axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("num_cols", "interpret"))
+def round_stats_pallas(slab: jnp.ndarray, b_eff: jnp.ndarray, coeffs, lo, hi,
+                       num_cols: int, interpret: bool = False) -> jnp.ndarray:
+    """slab (W, B, rec) uint8, b_eff (W,) int32 -> (W, Q, 4) f32."""
+    w, b, rec = slab.shape
+    assert rec == num_cols * FIELD_BYTES
+    q = coeffs.shape[0]
+    return pl.pallas_call(
+        functools.partial(_round_stats_kernel, num_cols=num_cols),
+        grid=(w,),
+        in_specs=[
+            pl.BlockSpec((1, b, rec), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((q, num_cols), lambda i: (0, 0)),
+            pl.BlockSpec((q, num_cols), lambda i: (0, 0)),
+            pl.BlockSpec((q, num_cols), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q, 4), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((w, q, 4), jnp.float32),
+        interpret=interpret,
+    )(slab, b_eff, coeffs, lo, hi)

@@ -1,0 +1,1 @@
+"""Launch plane: production mesh, dry-run, train/serve drivers."""

@@ -1,0 +1,163 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (architecture × shape) cell on the
+production meshes and record memory/cost/collective evidence.
+
+MUST be executed as a module entry point (``python -m repro.launch.dryrun``)
+— the XLA_FLAGS assignment above runs before any jax import, giving this
+process 512 virtual host devices.  Never import this module from tests.
+
+Usage:
+    python -m repro.launch.dryrun --arch smollm-135m --shape train_4k
+    python -m repro.launch.dryrun --all --multi-pod both --out results/dryrun
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str = None,
+             save_hlo: bool = False) -> dict:
+    import jax
+
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import build_cell, lower_cell
+    from repro.roofline.analysis import analyze_lowered
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.perf_counter()
+    # rolled scans: fast compiles; the roofline walker multiplies while-body
+    # costs by parsed trip counts (validated against unrolled compiles)
+    cell = build_cell(arch, shape, mesh, unroll_for_cost=False)
+    lowered = lower_cell(cell)
+    t_lower = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    n_chips = mesh.size
+    record = {
+        "arch": arch, "shape": shape,
+        "mesh": dict(mesh.shape),
+        "chips": n_chips,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        },
+        "flops": cost.get("flops") if cost else None,
+        "bytes_accessed": cost.get("bytes accessed") if cost else None,
+    }
+    record.update(analyze_lowered(lowered, compiled, arch=arch, shape=shape,
+                                  n_chips=n_chips))
+    print(json.dumps(record))
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        tag = f"{arch}__{shape}__{'multipod' if multi_pod else 'pod'}"
+        with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+            json.dump(record, f, indent=1)
+        if save_hlo:
+            with open(os.path.join(out_dir, tag + ".hlo.txt"), "w") as f:
+                f.write(compiled.as_text())
+    return record
+
+
+def run_verify_cell(layout: str, multi_pod: bool, out_dir: str = None,
+                    save_hlo: bool = False) -> dict:
+    import jax
+
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.verify_cell import build_verify_cell
+    from repro.roofline.analysis import analyze_lowered
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.perf_counter()
+    fn, args, program = build_verify_cell(mesh, layout=layout)
+    lowered = jax.jit(fn, donate_argnums=(0,)).lower(*args)
+    t_lower = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0
+    mem = compiled.memory_analysis()
+    record = {
+        "arch": f"ola-verify-{layout}", "shape": "verify_round",
+        "mesh": dict(mesh.shape), "chips": mesh.size,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        },
+    }
+    record.update(analyze_lowered(lowered, compiled, arch="smollm-135m",
+                                  shape="train_4k", n_chips=mesh.size))
+    # model_flops is an LM concept; null it out for the engine cell
+    record["roofline"]["model_flops"] = None
+    record["roofline"]["useful_flops_ratio"] = None
+    record["roofline"]["roofline_fraction"] = None
+    print(json.dumps(record))
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        tag = f"ola-verify-{layout}__{'multipod' if multi_pod else 'pod'}"
+        with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+            json.dump(record, f, indent=1)
+        if save_hlo:
+            with open(os.path.join(out_dir, tag + ".hlo.txt"), "w") as f:
+                f.write(compiled.as_text())
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--verify-cell", choices=("replicated", "sharded"),
+                    default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", choices=("no", "yes", "both"), default="no")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--save-hlo", action="store_true")
+    args = ap.parse_args()
+
+    from repro.configs.registry import cells
+
+    if args.verify_cell:
+        for mp in {"no": [False], "yes": [True],
+                   "both": [False, True]}[args.multi_pod]:
+            run_verify_cell(args.verify_cell, mp, args.out, args.save_hlo)
+        return
+
+    todo = []
+    if args.all:
+        todo = [(a, s) for a, s, skipped in cells() if not skipped]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        todo = [(args.arch, args.shape)]
+
+    pods = {"no": [False], "yes": [True], "both": [False, True]}[args.multi_pod]
+    failures = []
+    for arch, shape in todo:
+        for mp in pods:
+            try:
+                run_cell(arch, shape, mp, args.out, args.save_hlo)
+            except Exception as e:  # noqa: BLE001 — report, continue sweep
+                traceback.print_exc()
+                failures.append((arch, shape, mp, repr(e)))
+    if failures:
+        print("FAILURES:", json.dumps(failures, indent=1))
+        raise SystemExit(1)
+    print("DRYRUN OK:", len(todo) * len(pods), "cells")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Production mesh construction.
+
+A function, not a module-level constant: importing this module must never
+touch jax device state (the dry-run sets XLA_FLAGS before any jax import;
+tests run with 1 visible device).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips).
+
+    Axes: ``data`` carries batch + FSDP weight sharding; ``model`` carries
+    tensor/expert parallelism; ``pod`` (multi-pod only) is outer data
+    parallelism with hierarchical gradient reduction over DCI.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_data: int = 4, n_model: int = 2):
+    """Small mesh for CPU multi-device tests (host platform device count)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

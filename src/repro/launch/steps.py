@@ -1,0 +1,262 @@
+"""Cell builders: (architecture × shape × mesh) -> jit-able step + abstract
+inputs with shardings.
+
+This is the single place that knows how every family's train / prefill /
+decode step is shaped and sharded; the dry-run, the roofline harness and the
+real drivers all call :func:`build_cell`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.configs.registry import SHAPES, ShapeSpec, get_config
+from repro.distributed.autoshard import sharding_scope
+from repro.distributed.sharding import (
+    ShardingRules,
+    activation_sharding,
+    param_shardings,
+    rules_for,
+)
+from repro.models import build_model
+from repro.train.optimizer import AdamWConfig
+from repro.train.train_step import TrainState, init_train_state, make_train_step
+
+
+class Cell(NamedTuple):
+    arch: str
+    shape: str
+    fn: callable              # step function to jit
+    args: tuple               # abstract args (ShapeDtypeStruct w/ shardings)
+    model: object
+    cfg: ModelConfig
+    donate: tuple = ()
+    mesh: object = None
+    batch_axes: tuple = ("pod", "data")
+
+
+def _sds(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def _abstract_params(model, mesh: Mesh, rules: ShardingRules):
+    """(params ShapeDtypeStructs with shardings, specs) without allocating."""
+    captured = {}
+
+    def initfn(k):
+        p, s = model.init(k)
+        captured["specs"] = s
+        return p
+
+    params_shape = jax.eval_shape(initfn, jax.random.PRNGKey(0))
+    shardings = param_shardings(params_shape, captured["specs"], rules, mesh)
+    params_abs = jax.tree.map(
+        lambda t, s: _sds(t.shape, t.dtype, s), params_shape, shardings)
+    return params_abs, captured["specs"], shardings
+
+
+def _batch_sharding(mesh, rules, batch):
+    return activation_sharding(mesh, rules, batch)
+
+
+def _token_specs(cfg: ModelConfig, spec: ShapeSpec, mesh, rules):
+    """Abstract train/prefill batch for each family."""
+    b, s = spec.global_batch, spec.seq_len
+    bs = _batch_sharding(mesh, rules, b)
+    toks = _sds((b, s), jnp.int32, bs)
+    if cfg.family == "encdec":
+        return {"enc_embeds": _sds((b, s, cfg.d_model), jnp.bfloat16, bs),
+                "tokens": toks, "labels": toks}
+    if cfg.family == "vlm":
+        s_vis = s // 4
+        s_txt = s - s_vis
+        return {"vis_embeds": _sds((b, s_vis, cfg.d_model), jnp.bfloat16, bs),
+                "tokens": _sds((b, s_txt), jnp.int32, bs),
+                "labels": _sds((b, s_txt), jnp.int32, bs),
+                "positions3": _sds((3, b, s), jnp.int32,
+                                   NamedSharding(mesh, P(None))),
+                }
+    return {"tokens": toks, "labels": toks}
+
+
+# ---------------------------------------------------------------------------
+# Serve-cache shardings (family-specific leaf layouts)
+# ---------------------------------------------------------------------------
+
+def _kv_cache_shardings(cache_abs, mesh, batch):
+    """Stacked attention cache {(L,B,T,H,D) k/v, (L,B,T) pos}."""
+    msize = mesh.shape.get("model", 1)
+    dsize = mesh.shape.get("data", 1)
+    b_ax = "data" if (batch % dsize == 0 and batch > 1) else None
+
+    def one(t):
+        if t.ndim == 5:
+            l, b, tt, h, d = t.shape
+            if h % msize == 0 and h >= msize:
+                return NamedSharding(mesh, P(None, b_ax, None, "model"))
+            if tt % msize == 0:
+                return NamedSharding(mesh, P(None, b_ax, "model"))
+            return NamedSharding(mesh, P(None, b_ax))
+        if t.ndim == 3:   # pos
+            l, b, tt = t.shape
+            if tt % msize == 0:
+                return NamedSharding(mesh, P(None, b_ax, "model"))
+            return NamedSharding(mesh, P(None, b_ax))
+        return NamedSharding(mesh, P())
+
+    return jax.tree.map(one, cache_abs)
+
+
+def _mamba_cache_shardings(cache_abs, mesh, batch):
+    msize = mesh.shape.get("model", 1)
+    dsize = mesh.shape.get("data", 1)
+    b_ax = "data" if (batch % dsize == 0 and batch > 1) else None
+
+    def one(t):
+        if t.ndim == 5:  # ssm (L,B,H,P,N)
+            h = t.shape[2]
+            h_ax = "model" if h % msize == 0 else None
+            return NamedSharding(mesh, P(None, b_ax, h_ax))
+        if t.ndim == 4:  # conv (L,B,K,C)
+            c = t.shape[3]
+            c_ax = "model" if c % msize == 0 else None
+            return NamedSharding(mesh, P(None, b_ax, None, c_ax))
+        return NamedSharding(mesh, P())
+
+    return jax.tree.map(one, cache_abs)
+
+
+def _replicated_batch_shardings(cache_abs, mesh, batch):
+    """xLSTM caches: leaves (B, ...) — batch over data when divisible."""
+    dsize = mesh.shape.get("data", 1)
+    b_ax = "data" if (batch % dsize == 0 and batch > 1) else None
+
+    def one(t):
+        return NamedSharding(mesh, P(b_ax))
+
+    return jax.tree.map(one, cache_abs)
+
+
+def _cache_shardings(model, cfg, cache_abs, mesh, batch):
+    if cfg.family == "xlstm":
+        return _replicated_batch_shardings(cache_abs, mesh, batch)
+    if cfg.family == "hybrid":
+        return {"mamba": _mamba_cache_shardings(cache_abs["mamba"], mesh, batch),
+                "shared": _kv_cache_shardings(cache_abs["shared"], mesh, batch)}
+    if cfg.family == "encdec":
+        return {"self": _kv_cache_shardings(cache_abs["self"], mesh, batch),
+                "cross_k": None, "cross_v": None}
+    return _kv_cache_shardings(cache_abs, mesh, batch)
+
+
+# ---------------------------------------------------------------------------
+# Cell construction
+# ---------------------------------------------------------------------------
+
+def build_cell(arch: str, shape_name: str, mesh: Mesh,
+               opt_cfg: AdamWConfig = AdamWConfig(),
+               unroll_for_cost: bool = True,
+               overrides: dict | None = None) -> Cell:
+    spec = SHAPES[shape_name]
+    tp = mesh.shape.get("model", 1)
+    cfg = get_config(arch, tp=tp)
+    if shape_name != "long_500k" and cfg.family == "hybrid":
+        # long_window is a long-context-serve-only adaptation
+        cfg = dataclasses.replace(cfg, long_window=None)
+    if unroll_for_cost:
+        # rolled scans hide (trip_count-1)/trip_count of the FLOPs from
+        # XLA cost analysis — unroll for honest roofline accounting
+        cfg = dataclasses.replace(cfg, scan_unroll=True)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    model = build_model(cfg)
+    rules = rules_for(cfg.family)
+    params_abs, specs, p_shardings = _abstract_params(model, mesh, rules)
+
+    if spec.kind == "train":
+        batch_abs = _token_specs(cfg, spec, mesh, rules)
+        loss_fn = (lambda p, b: model.loss(p, b))
+        step = make_train_step(loss_fn, opt_cfg)
+        from repro.train.optimizer import OptState
+
+        rep = NamedSharding(mesh, P())
+        state_shape = jax.eval_shape(init_train_state, params_abs)
+        # Adam moments inherit the param shardings (FSDP scales optimizer
+        # memory with the full chip count); scalars replicated.
+        state_shard = TrainState(
+            params=p_shardings,
+            opt=OptState(mu=p_shardings, nu=p_shardings, step=rep),
+            step=rep, compress_error=None)
+        state_abs = jax.tree.map(lambda t, s: _sds(t.shape, t.dtype, s),
+                                 state_shape, state_shard)
+        return Cell(arch, shape_name, step, (state_abs, batch_abs), model,
+                    cfg, donate=(0,), mesh=mesh, batch_axes=rules.batch_axes)
+
+    if spec.kind == "prefill":
+        batch_abs = _token_specs(cfg, spec, mesh, rules)
+
+        if cfg.family == "encdec":
+            def prefill(params, batch):
+                enc_out = model.encode(params, batch["enc_embeds"])
+                logits = model.decode_full(params, batch["tokens"], enc_out)
+                return logits[:, -1:]
+        elif cfg.family == "vlm":
+            def prefill(params, batch):
+                logits, _ = model.forward(params, batch)
+                return logits[:, -1:]
+        else:
+            def prefill(params, batch):
+                return model.prefill(params, batch["tokens"])
+
+        batch_abs.pop("labels", None)
+        return Cell(arch, shape_name, prefill, (params_abs, batch_abs),
+                    model, cfg, mesh=mesh, batch_axes=rules.batch_axes)
+
+    # ---- decode ----
+    b = spec.global_batch
+    cache_abs = jax.eval_shape(
+        lambda: model.init_cache(b, spec.seq_len))
+    c_shardings = _cache_shardings(model, cfg, cache_abs, mesh, b)
+    cache_in = jax.tree.map(lambda t, s: _sds(t.shape, t.dtype, s),
+                            cache_abs, c_shardings)
+    bs = _batch_sharding(mesh, rules, b) if b > 1 else NamedSharding(mesh, P())
+    tok = _sds((b, 1), jnp.int32, bs)
+    pos = _sds((b,), jnp.int32, bs)
+
+    if cfg.family == "encdec":
+        hp = model.self_cfg.kv_heads_padded
+        hd = model.self_cfg.head_dim
+        ckv_shape = (cfg.num_layers, b, spec.seq_len, hp, hd)
+        ckv_shard = _kv_cache_shardings(
+            {"k": jax.ShapeDtypeStruct(ckv_shape, jnp.bfloat16)}, mesh, b)["k"]
+        ckv = (_sds(ckv_shape, jnp.bfloat16, ckv_shard),
+               _sds(ckv_shape, jnp.bfloat16, ckv_shard))
+
+        def decode(params, cache, tokens, pos, cross_kv):
+            return model.decode_step(params, cache, tokens, pos, cross_kv)
+
+        return Cell(arch, shape_name, decode,
+                    (params_abs, cache_in, tok, pos, ckv), model, cfg,
+                    donate=(1,), mesh=mesh, batch_axes=rules.batch_axes)
+
+    def decode(params, cache, tokens, pos):
+        return model.decode_step(params, cache, tokens, pos)
+
+    return Cell(arch, shape_name, decode, (params_abs, cache_in, tok, pos),
+                model, cfg, donate=(1,), mesh=mesh, batch_axes=rules.batch_axes)
+
+
+def lower_cell(cell: Cell):
+    fn = jax.jit(cell.fn, donate_argnums=cell.donate)
+    if cell.mesh is not None:
+        # activation constraints (autoshard) bind to the mesh at trace time
+        with sharding_scope(cell.mesh, batch_axes=cell.batch_axes):
+            return fn.lower(*cell.args)
+    return fn.lower(*cell.args)

@@ -1,0 +1,20 @@
+"""Model zoo: the 10 assigned architectures as functional JAX models.
+
+Design notes:
+
+* Models are *functional*: ``params`` is a plain pytree of arrays, and a
+  parallel ``specs`` pytree carries **logical axis names** per parameter
+  (MaxText-style); ``repro.distributed.sharding`` maps logical axes to mesh
+  axes.  No framework dependency.
+* Layer stacks are ``jax.lax.scan`` over stacked parameters (leading ``layers``
+  dim) with a configurable remat policy — essential for compile times at 88
+  layers and for activation-memory control at scale.
+* Tensor-parallel head padding: Q heads are padded up to a multiple of the
+  mesh model-axis size (KV heads stay *replicated* under TP, which is exact
+  for GQA); vocab is padded to a multiple of 256.  Padding waste is charged
+  to the roofline useful-FLOPs ratio, never hidden.
+"""
+
+from repro.models.model_zoo import build_model
+
+__all__ = ["build_model"]

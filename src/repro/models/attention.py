@@ -1,0 +1,232 @@
+"""Attention variants: GQA/MQA/MHA, causal / bidirectional / cross / sliding
+window, qk-norm, QKV bias, M-RoPE — with full-sequence and cached-decode paths.
+
+TP strategy (DESIGN.md §6): Q heads are padded up to a multiple of the mesh
+model-axis size and sharded on the "q_heads" logical axis; KV heads stay
+*replicated*, which is numerically exact for GQA and avoids distorting the KV
+cache.  Padded Q heads attend normally but their output-projection rows are
+zero, so logits are unchanged; the extra FLOPs appear in the roofline
+useful-FLOPs ratio.
+
+Sliding-window attention (mixtral, zamba2-long) uses a banded mask in the
+full-sequence path and a ring-buffer cache (size = window) in decode — the
+cache never exceeds the window, which is what makes long_500k decode cheap.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamCollector, apply_mrope, apply_rope, rms_norm
+
+NEG_INF = -1e9
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    num_heads: int          # real Q heads
+    num_kv_heads: int       # real KV heads
+    head_dim: int
+    heads_padded: int       # Q heads after TP padding (>= num_heads)
+    kv_heads_padded: int    # KV heads padded so heads_padded % kv_padded == 0
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    causal: bool = True
+    window: Optional[int] = None     # sliding-window size (None = full)
+    cross: bool = False              # cross-attention (enc-dec)
+    use_rope: bool = True
+    mrope_sections: Optional[tuple] = None  # qwen2-vl
+
+
+def padded_heads(num_heads: int, num_kv_heads: int, tp: int) -> tuple[int, int]:
+    """(heads_padded, kv_heads_padded) for a given model-axis size.
+
+    Q heads pad up to a multiple of ``tp``; KV heads pad up to the smallest
+    divisor of the padded Q count that is >= the real KV count, so grouped
+    attention stays well-formed.  Real-head masking keeps numerics exact.
+    """
+    from repro.models.layers import pad_to
+
+    hp = pad_to(num_heads, tp)
+    hk_pad = num_kv_heads
+    while hp % hk_pad != 0:
+        hk_pad += 1
+    return hp, hk_pad
+
+
+def real_head_mask(cfg: AttnConfig) -> jnp.ndarray:
+    """(heads_padded,) 1.0 for slots carrying a real architecture head.
+
+    Padded-group layout: KV slot j serves Q slots [j*g', (j+1)*g');
+    the first ``g_real`` Q slots of the first ``num_kv_heads`` KV groups are
+    real — exactly ``num_heads`` real Q heads grouped ``g_real``-to-1 onto
+    ``num_kv_heads`` real KV heads, i.e. the assigned GQA architecture.
+    """
+    g_prime = cfg.heads_padded // cfg.kv_heads_padded
+    g_real = cfg.num_heads // cfg.num_kv_heads
+    slots = jnp.arange(cfg.heads_padded)
+    j = slots // g_prime
+    i = slots % g_prime
+    return ((j < cfg.num_kv_heads) & (i < g_real)).astype(jnp.float32)
+
+
+def attn_init(col: ParamCollector, cfg: AttnConfig):
+    hp, hk, d, dm = (cfg.heads_padded, cfg.kv_heads_padded, cfg.head_dim,
+                     cfg.d_model)
+    col.dense("wq", (dm, hp, d), ("embed", "q_heads", "head"))
+    col.dense("wk", (dm, hk, d), ("embed", "kv_heads", "head"))
+    col.dense("wv", (dm, hk, d), ("embed", "kv_heads", "head"))
+    # zero rows for padded heads are created at build time by masking wo
+    col.dense("wo", (hp, d, dm), ("q_heads", "head", "embed"))
+    if cfg.qkv_bias:
+        col.zeros("bq", (hp, d), ("q_heads", "head"))
+        col.zeros("bk", (hk, d), ("kv_heads", "head"))
+        col.zeros("bv", (hk, d), ("kv_heads", "head"))
+    if cfg.qk_norm:
+        col.ones("q_norm", (d,), ("head",))
+        col.ones("k_norm", (d,), ("head",))
+
+
+def mask_padded_heads(params: dict, cfg: AttnConfig) -> dict:
+    """Zero the output projection of non-real head slots (numerical exactness:
+    padded heads attend but contribute nothing)."""
+    if (cfg.heads_padded == cfg.num_heads
+            and cfg.kv_heads_padded == cfg.num_kv_heads):
+        return params
+    keep = real_head_mask(cfg)
+    params = dict(params)
+    params["wo"] = params["wo"] * keep[:, None, None]
+    return params
+
+
+def _project_qkv(p, cfg: AttnConfig, x, x_kv=None):
+    x_kv = x if x_kv is None else x_kv
+    q = jnp.einsum("...d,dhk->...hk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("...d,dhk->...hk", x_kv, p["wk"].astype(x.dtype))
+    v = jnp.einsum("...d,dhk->...hk", x_kv, p["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    return q, k, v
+
+
+def _rope(cfg: AttnConfig, q, k, q_pos, k_pos, positions3=None):
+    if not cfg.use_rope:
+        return q, k
+    if cfg.mrope_sections is not None:
+        q = apply_mrope(q, positions3, cfg.mrope_sections, cfg.rope_theta)
+        k = apply_mrope(k, positions3, cfg.mrope_sections, cfg.rope_theta)
+        return q, k
+    return (apply_rope(q, q_pos, cfg.rope_theta),
+            apply_rope(k, k_pos, cfg.rope_theta))
+
+
+def _grouped_scores(q, k):
+    """q (B,S,Hq,D), k (B,T,Hk,D) -> scores (B,Hk,G,S,T) with G=Hq/Hk."""
+    b, s, hq, d = q.shape
+    hk = k.shape[2]
+    g = hq // hk
+    qg = q.reshape(b, s, hk, g, d)
+    return jnp.einsum("bshgd,bthd->bhgst", qg, k)
+
+
+def _grouped_out(probs, v):
+    """probs (B,Hk,G,S,T), v (B,T,Hk,D) -> (B,S,Hq,D)."""
+    b, hk, g, s, t = probs.shape
+    out = jnp.einsum("bhgst,bthd->bshgd", probs, v)
+    return out.reshape(b, s, hk * g, v.shape[-1])
+
+
+def full_attention(p, cfg: AttnConfig, x, *, x_kv=None, positions=None,
+                   kv_positions=None, positions3=None, seg_mask=None):
+    """Full-sequence attention (train / prefill).
+
+    ``positions`` (B, S) query positions; ``kv_positions`` (B, T).  A banded
+    causal / sliding-window mask is built from positions, so packed or padded
+    batches work by passing the right position ids.
+    """
+    b, s, _ = x.shape
+    t = s if x_kv is None else x_kv.shape[1]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    if kv_positions is None:
+        kv_positions = positions if x_kv is None else jnp.broadcast_to(
+            jnp.arange(t), (b, t))
+    q, k, v = _project_qkv(p, cfg, x, x_kv)
+    q, k = _rope(cfg, q, k, positions, kv_positions, positions3)
+
+    scores = _grouped_scores(q, k) / math.sqrt(cfg.head_dim)   # (B,Hk,G,S,T)
+    mask = jnp.ones((b, 1, 1, s, t), bool)
+    if cfg.causal and not cfg.cross:
+        mask &= (kv_positions[:, None, None, None, :]
+                 <= positions[:, None, None, :, None])
+    if cfg.window is not None and not cfg.cross:
+        mask &= (positions[:, None, None, :, None]
+                 - kv_positions[:, None, None, None, :]) < cfg.window
+    if seg_mask is not None:
+        mask &= seg_mask[:, None, None]
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(x.dtype)
+    out = _grouped_out(probs, v)
+    return jnp.einsum("...hk,hkd->...d", out, p["wo"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Cached decode
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(batch: int, max_len: int, cfg: AttnConfig,
+                  dtype=jnp.bfloat16) -> dict:
+    """Cache buffers for one layer.  Sliding-window archs allocate only the
+    window (ring buffer); full attention allocates max_len."""
+    length = min(max_len, cfg.window) if cfg.window is not None else max_len
+    shape = (batch, length, cfg.kv_heads_padded, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+            "pos": jnp.full((batch, length), -1, jnp.int32)}
+
+
+def decode_attention(p, cfg: AttnConfig, x, cache: dict, pos: jnp.ndarray,
+                     positions3=None):
+    """One-token decode step.  x (B, 1, d); pos (B,) absolute positions.
+
+    Returns (out (B,1,d), new_cache).  The ring-buffer slot is ``pos % length``
+    for SWA; cached absolute positions make masking exact (slots whose stored
+    position is outside the window or unwritten are masked out).
+    """
+    b = x.shape[0]
+    q, k, v = _project_qkv(p, cfg, x)                       # (B,1,H,D)
+    if cfg.mrope_sections is not None:
+        # text-phase decode: all three position streams advance together
+        pos3 = jnp.broadcast_to(pos[None, :, None], (3, b, 1))
+        q, k = _rope(cfg, q, k, None, None, pos3)
+    else:
+        q, k = _rope(cfg, q, k, pos[:, None], pos[:, None])
+
+    length = cache["k"].shape[1]
+    slot = (pos % length).astype(jnp.int32)                 # (B,)
+    bi = jnp.arange(b)
+    ck = cache["k"].at[bi, slot].set(k[:, 0].astype(cache["k"].dtype))
+    cv = cache["v"].at[bi, slot].set(v[:, 0].astype(cache["v"].dtype))
+    cpos = cache["pos"].at[bi, slot].set(pos)
+
+    scores = _grouped_scores(q, ck.astype(x.dtype)) / math.sqrt(cfg.head_dim)
+    # (B,Hk,G,1,T)
+    ok = (cpos >= 0) & (cpos <= pos[:, None])
+    if cfg.window is not None:
+        ok &= (pos[:, None] - cpos) < cfg.window
+    scores = jnp.where(ok[:, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(x.dtype)
+    out = _grouped_out(probs, cv.astype(x.dtype))
+    out = jnp.einsum("...hk,hkd->...d", out, p["wo"].astype(x.dtype))
+    return out, {"k": ck, "v": cv, "pos": cpos}

@@ -1,0 +1,197 @@
+"""Whisper-style encoder-decoder backbone (audio family).
+
+The conv frontend is a STUB per the assignment: ``input_specs`` supplies
+pre-computed frame embeddings ``(B, S_enc, d_model)`` directly (the two conv
+layers + GELU of real Whisper live outside the measured backbone).  Encoder
+uses fixed sinusoidal positions and bidirectional attention; decoder uses
+learned positions, causal self-attention and cross-attention; LayerNorm +
+GELU MLPs throughout (pre-LN).  Whisper-large-v3 has 32 encoder AND 32
+decoder layers — both stacks are built (the assignment's "32L").
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import layers as L
+from repro.distributed.autoshard import constrain
+
+
+def _ln(x, p, name):
+    return L.layer_norm(x, p[f"{name}_w"], p[f"{name}_b"])
+
+
+def _ln_init(col: L.ParamCollector, name: str, d: int):
+    col.ones(f"{name}_w", (d,), ("embed",))
+    col.zeros(f"{name}_b", (d,), ("embed",))
+
+
+class EncDecLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        hp, hkp = attn.padded_heads(cfg.num_heads, cfg.num_kv_heads, cfg.tp)
+        base = dict(d_model=cfg.d_model, num_heads=cfg.num_heads,
+                    num_kv_heads=cfg.num_kv_heads, head_dim=cfg.head_dim_,
+                    heads_padded=hp, kv_heads_padded=hkp, use_rope=False)
+        self.enc_cfg = attn.AttnConfig(**base, causal=False)
+        self.self_cfg = attn.AttnConfig(**base, causal=True)
+        self.cross_cfg = attn.AttnConfig(**base, causal=False, cross=True)
+        self.max_dec_len = 4096 * 8  # learned positions table bound
+
+    # ------------------------------------------------------------- params --
+    def _enc_layer(self, key):
+        cfg = self.cfg
+        col = L.ParamCollector(key)
+        _ln_init(col, "ln1", cfg.d_model)
+        attn.attn_init(col.sub("attn"), self.enc_cfg)
+        _ln_init(col, "ln2", cfg.d_model)
+        L.gelu_mlp_init(col.sub("mlp"), cfg.d_model, cfg.d_ff)
+        params, specs = col.done()
+        params["attn"] = attn.mask_padded_heads(params["attn"], self.enc_cfg)
+        return params, specs
+
+    def _dec_layer(self, key):
+        cfg = self.cfg
+        col = L.ParamCollector(key)
+        _ln_init(col, "ln1", cfg.d_model)
+        attn.attn_init(col.sub("self_attn"), self.self_cfg)
+        _ln_init(col, "ln_x", cfg.d_model)
+        attn.attn_init(col.sub("cross_attn"), self.cross_cfg)
+        _ln_init(col, "ln2", cfg.d_model)
+        L.gelu_mlp_init(col.sub("mlp"), cfg.d_model, cfg.d_ff)
+        params, specs = col.done()
+        params["self_attn"] = attn.mask_padded_heads(params["self_attn"], self.self_cfg)
+        params["cross_attn"] = attn.mask_padded_heads(params["cross_attn"], self.cross_cfg)
+        return params, specs
+
+    def init(self, key):
+        cfg = self.cfg
+        keys = jax.random.split(key, 2 * cfg.num_layers + 2)
+        col = L.ParamCollector(keys[0])
+        L.embed_init(col, cfg.vocab_size, cfg.d_model)
+        col.dense("dec_pos", (self.max_dec_len, cfg.d_model), ("pos", "embed"),
+                  scale=0.01)
+        _ln_init(col, "enc_final", cfg.d_model)
+        _ln_init(col, "dec_final", cfg.d_model)
+        params, specs = col.done()
+        enc = [self._enc_layer(keys[1 + i]) for i in range(cfg.num_layers)]
+        dec = [self._dec_layer(keys[1 + cfg.num_layers + i])
+               for i in range(cfg.num_layers)]
+        params["enc_layers"], specs["enc_layers"] = L.stack_layers(enc)
+        params["dec_layers"], specs["dec_layers"] = L.stack_layers(dec)
+        return params, specs
+
+    # ------------------------------------------------------------ encoder --
+    def encode(self, params, enc_embeds):
+        cfg = self.cfg
+        s = enc_embeds.shape[1]
+        x = enc_embeds.astype(jnp.dtype(cfg.compute_dtype))
+        x = x + L.sinusoidal_positions(s, cfg.d_model).astype(x.dtype)[None]
+        x = constrain(x, "btd")
+
+        def block(lp, x):
+            h = _ln(x, lp, "ln1")
+            x = x + attn.full_attention(lp["attn"], self.enc_cfg, h)
+            h = _ln(x, lp, "ln2")
+            return x + L.gelu_mlp_apply(lp["mlp"], h)
+
+        if cfg.remat:
+            block = jax.checkpoint(block, prevent_cse=False)
+
+        def scan_fn(x, lp):
+            return constrain(block(lp, x), "btd"), None
+
+        x, _ = jax.lax.scan(scan_fn, x, params["enc_layers"],
+                            unroll=cfg.scan_unroll)
+        return _ln(x, params, "enc_final")
+
+    # ------------------------------------------------------------ decoder --
+    def decode_full(self, params, tokens, enc_out):
+        cfg = self.cfg
+        s = tokens.shape[1]
+        x = L.embed_apply(params, tokens).astype(enc_out.dtype)
+        x = x + params["dec_pos"][:s].astype(x.dtype)[None]
+        x = constrain(x, "btd")
+
+        def block(lp, x, enc_out):
+            h = _ln(x, lp, "ln1")
+            x = x + attn.full_attention(lp["self_attn"], self.self_cfg, h)
+            h = _ln(x, lp, "ln_x")
+            x = x + attn.full_attention(lp["cross_attn"], self.cross_cfg, h,
+                                        x_kv=enc_out)
+            h = _ln(x, lp, "ln2")
+            return x + L.gelu_mlp_apply(lp["mlp"], h)
+
+        if cfg.remat:
+            block = jax.checkpoint(block, prevent_cse=False)
+
+        def scan_fn(x, lp):
+            return constrain(block(lp, x, enc_out), "btd"), None
+
+        x, _ = jax.lax.scan(scan_fn, x, params["dec_layers"],
+                            unroll=cfg.scan_unroll)
+        x = _ln(x, params, "dec_final")
+        return constrain(L.unembed_apply(params, x, tied=True), "btv")
+
+    def forward(self, params, batch):
+        enc_out = self.encode(params, batch["enc_embeds"])
+        return self.decode_full(params, batch["tokens"], enc_out)
+
+    def loss(self, params, batch):
+        logits = self.forward(params, batch)
+        return L.cross_entropy_loss(logits, batch["labels"], self.cfg.vocab_size)
+
+    # ------------------------------------------------------------- decode --
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        one = attn.init_kv_cache(batch, max_len, self.self_cfg, dtype)
+        self_cache = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (self.cfg.num_layers,) + x.shape).copy(),
+            one)
+        return {"self": self_cache, "cross_k": None, "cross_v": None}
+
+    def precompute_cross(self, params, enc_out):
+        """Cross-attention K/V are position-independent: computed once."""
+        def one_layer(lp):
+            k = jnp.einsum("btd,dhk->bthk", enc_out,
+                           lp["cross_attn"]["wk"].astype(enc_out.dtype))
+            v = jnp.einsum("btd,dhk->bthk", enc_out,
+                           lp["cross_attn"]["wv"].astype(enc_out.dtype))
+            return k, v
+
+        return jax.vmap(one_layer, in_axes=0)(params["dec_layers"])
+
+    def decode_step(self, params, cache, tokens, pos, cross_kv):
+        cfg = self.cfg
+        x = L.embed_apply(params, tokens).astype(jnp.dtype(cfg.compute_dtype))
+        x = x + jnp.take(params["dec_pos"], pos, axis=0)[:, None].astype(x.dtype)
+        ck, cv = cross_kv
+
+        import math
+
+        def scan_fn(x, inp):
+            lp, lcache, k_x, v_x = inp
+            h = _ln(x, lp, "ln1")
+            h, new_cache = attn.decode_attention(lp["self_attn"], self.self_cfg,
+                                                 h, lcache, pos)
+            x = x + h
+            h = _ln(x, lp, "ln_x")
+            q = jnp.einsum("bsd,dhk->bshk", h,
+                           lp["cross_attn"]["wq"].astype(x.dtype))
+            scores = attn._grouped_scores(q, k_x) / math.sqrt(self.cross_cfg.head_dim)
+            probs = jax.nn.softmax(scores.astype(jnp.float32), -1).astype(x.dtype)
+            o = attn._grouped_out(probs, v_x)
+            x = x + jnp.einsum("...hk,hkd->...d", o,
+                               lp["cross_attn"]["wo"].astype(x.dtype))
+            h = _ln(x, lp, "ln2")
+            return constrain(x + L.gelu_mlp_apply(lp["mlp"], h), "btd"), new_cache
+
+        x, new_self = jax.lax.scan(scan_fn, x,
+                                   (params["dec_layers"], cache["self"], ck, cv),
+                                   unroll=cfg.scan_unroll)
+        x = _ln(x, params, "dec_final")
+        logits = L.unembed_apply(params, x, tied=True)
+        return logits, {"self": new_self, "cross_k": cache["cross_k"],
+                        "cross_v": cache["cross_v"]}

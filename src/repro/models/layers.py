@@ -1,0 +1,238 @@
+"""Shared layers: norms, RoPE/M-RoPE, dense/embedding params, MLPs.
+
+Parameter convention: every ``*_init`` returns ``(params, specs)`` where
+``specs`` mirrors ``params`` with a tuple of logical axis names per array.
+Logical axes used across the zoo:
+
+  "embed"   — d_model            (never sharded: activations shard on data)
+  "vocab"   — vocabulary         (→ model axis)
+  "q_heads" — query heads        (→ model axis; padded to multiple)
+  "kv_heads"— kv heads           (replicated under TP)
+  "head"    — per-head dim
+  "mlp"     — ffn hidden         (→ model axis)
+  "experts" — MoE experts        (→ model axis when divisible, else "mlp")
+  "conv"/"state"/"heads_ssm" ... — SSM internals (replicated or mlp-sharded)
+  "layers"  — scan dimension     (never sharded)
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def pad_to(x: int, mult: int) -> int:
+    return (x + mult - 1) // mult * mult
+
+
+# ---------------------------------------------------------------------------
+# Param init
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, axes, scale: Optional[float] = None):
+    """Truncated-normal dense parameter with fan-in scaling."""
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    if scale is None:
+        scale = 1.0 / math.sqrt(max(fan_in, 1))
+    w = scale * jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+    return w, axes
+
+
+def zeros_init(shape, axes):
+    return jnp.zeros(shape, jnp.float32), axes
+
+
+def ones_init(shape, axes):
+    return jnp.ones(shape, jnp.float32), axes
+
+
+class ParamCollector:
+    """Tiny helper that accumulates ``(params, specs)`` trees."""
+
+    def __init__(self, key):
+        self.key = key
+        self.params: dict = {}
+        self.specs: dict = {}
+
+    def sub(self, name: str) -> "ParamCollector":
+        self.key, sub = jax.random.split(self.key)
+        c = ParamCollector(sub)
+        self.params[name] = c.params
+        self.specs[name] = c.specs
+        return c
+
+    def dense(self, name, shape, axes, scale=None):
+        self.key, sub = jax.random.split(self.key)
+        w, ax = dense_init(sub, shape, axes, scale)
+        self.params[name] = w
+        self.specs[name] = ax
+
+    def zeros(self, name, shape, axes):
+        self.params[name], self.specs[name] = zeros_init(shape, axes)
+
+    def ones(self, name, shape, axes):
+        self.params[name], self.specs[name] = ones_init(shape, axes)
+
+    def done(self):
+        return self.params, self.specs
+
+
+def stack_layers(trees: list):
+    """Stack per-layer (params, specs) into scan-ready (L, ...) params."""
+    params = jax.tree.map(lambda *xs: jnp.stack(xs, axis=0),
+                          *[t[0] for t in trees])
+    specs = jax.tree.map(lambda ax, _: ("layers",) + tuple(ax),
+                         trees[0][1], trees[0][0],
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return params, specs
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, weight, eps: float = 1e-6):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(dt) * weight.astype(dt)
+
+
+def layer_norm(x, weight, bias, eps: float = 1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(dt) * weight.astype(dt) + bias.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float = 10000.0) -> jnp.ndarray:
+    """x (..., S, H, D); positions (..., S) -> rotated x.
+
+    Interleaved-pair convention (llama).  Computed in f32 for stability.
+    """
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                              # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(angles)[..., None, :]                        # (..., S, 1, D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1 = x[..., 0::2].astype(jnp.float32)
+    x2 = x[..., 1::2].astype(jnp.float32)
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    out = jnp.stack([o1, o2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jnp.ndarray, positions3: jnp.ndarray, sections: tuple,
+                theta: float = 10000.0) -> jnp.ndarray:
+    """Qwen2-VL multimodal RoPE: the head dim is split into (t, h, w)
+    frequency sections, each rotated by its own position id.
+
+    x (..., S, H, D); positions3 (3, ..., S); sections are half-dim sizes
+    summing to D/2 (e.g. (16, 24, 24) for D=128).
+    """
+    d = x.shape[-1]
+    assert sum(sections) == d // 2, (sections, d)
+    freqs = rope_freqs(d, theta)                              # (D/2,)
+    # section id per frequency slot
+    sec_id = np.concatenate([np.full(s, i) for i, s in enumerate(sections)])
+    sec_id = jnp.asarray(sec_id, jnp.int32)                   # (D/2,)
+    # pick the position stream per slot: angles[..., k] uses positions3[sec_id[k]]
+    pos = jnp.take(positions3, sec_id, axis=0)                # (D/2, ..., S)
+    pos = jnp.moveaxis(pos, 0, -1).astype(jnp.float32)        # (..., S, D/2)
+    angles = pos * freqs
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1 = x[..., 0::2].astype(jnp.float32)
+    x2 = x[..., 1::2].astype(jnp.float32)
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    out = jnp.stack([o1, o2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(length: int, dim: int) -> jnp.ndarray:
+    """Whisper-style fixed sinusoidal embeddings (S, D)."""
+    pos = np.arange(length)[:, None]
+    i = np.arange(dim // 2)[None, :]
+    angle = pos / np.power(10000.0, 2 * i / dim)
+    out = np.concatenate([np.sin(angle), np.cos(angle)], axis=-1)
+    return jnp.asarray(out, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def swiglu_init(col: ParamCollector, d_model: int, d_ff: int):
+    col.dense("gate", (d_model, d_ff), ("embed", "mlp"))
+    col.dense("up", (d_model, d_ff), ("embed", "mlp"))
+    col.dense("down", (d_ff, d_model), ("mlp", "embed"))
+
+
+def swiglu_apply(p, x):
+    g = jnp.einsum("...d,df->...f", x, p["gate"].astype(x.dtype))
+    u = jnp.einsum("...d,df->...f", x, p["up"].astype(x.dtype))
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("...f,fd->...d", h, p["down"].astype(x.dtype))
+
+
+def gelu_mlp_init(col: ParamCollector, d_model: int, d_ff: int):
+    col.dense("fc1", (d_model, d_ff), ("embed", "mlp"))
+    col.zeros("b1", (d_ff,), ("mlp",))
+    col.dense("fc2", (d_ff, d_model), ("mlp", "embed"))
+    col.zeros("b2", (d_model,), ("embed",))
+
+
+def gelu_mlp_apply(p, x):
+    h = jnp.einsum("...d,df->...f", x, p["fc1"].astype(x.dtype)) + p["b1"].astype(x.dtype)
+    h = jax.nn.gelu(h, approximate=True)
+    return jnp.einsum("...f,fd->...d", h, p["fc2"].astype(x.dtype)) + p["b2"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embed_init(col: ParamCollector, vocab: int, d_model: int, pad_mult: int = 256):
+    v_pad = pad_to(vocab, pad_mult)
+    col.dense("embedding", (v_pad, d_model), ("vocab", "embed"), scale=1.0)
+    return v_pad
+
+
+def embed_apply(p, tokens):
+    return jnp.take(p["embedding"], tokens, axis=0)
+
+
+def unembed_apply(p, x, tied: bool = True):
+    w = p["embedding"] if tied else p["unembed"]
+    return jnp.einsum("...d,vd->...v", x, w.astype(x.dtype))
+
+
+def cross_entropy_loss(logits, labels, vocab_real: int, ignore_id: int = -100):
+    """Mean next-token CE over valid positions; padded vocab columns masked."""
+    v_pad = logits.shape[-1]
+    if v_pad > vocab_real:
+        neg = jnp.asarray(-1e9, logits.dtype)
+        mask = jnp.arange(v_pad) >= vocab_real
+        logits = jnp.where(mask, neg, logits)
+    valid = labels != ignore_id
+    labels_safe = jnp.where(valid, labels, 0)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels_safe[..., None], axis=-1)[..., 0]
+    return -jnp.sum(ll * valid) / jnp.maximum(jnp.sum(valid), 1)

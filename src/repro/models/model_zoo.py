@@ -1,0 +1,27 @@
+"""Model zoo dispatch: config -> model instance."""
+
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+from repro.models.encdec import EncDecLM
+from repro.models.transformer import DecoderLM
+from repro.models.vlm import VLM
+from repro.models.xlstm_model import XLSTMLM
+from repro.models.zamba import ZambaLM
+
+_FAMILIES = {
+    "dense": DecoderLM,
+    "moe": DecoderLM,       # MoE is a DecoderLM with num_experts > 0
+    "encdec": EncDecLM,
+    "vlm": VLM,
+    "hybrid": ZambaLM,
+    "xlstm": XLSTMLM,
+}
+
+
+def build_model(cfg: ModelConfig):
+    try:
+        cls = _FAMILIES[cfg.family]
+    except KeyError:
+        raise ValueError(f"unknown model family: {cfg.family}") from None
+    return cls(cfg)

@@ -1,0 +1,220 @@
+"""Mamba2 (State Space Duality) block — the SSM family + zamba2's backbone.
+
+Training/prefill uses the *chunked SSD algorithm* (Mamba2 paper, Listing 1):
+the sequence is split into chunks of length ``Qc``; within a chunk the
+recurrence is materialized as a masked quadratic form (an MXU matmul — this
+is precisely why SSD maps well to TPU), and across chunks only the
+``(H, P, N)`` states are carried.  Decode is the O(1) recurrence.
+
+Shapes follow the paper: ``x (B,S,H,P)``, shared single-group ``B,C (B,S,N)``,
+scalar-per-head ``A (H,)``, ``dt (B,S,H)``.  ``d_inner = expand · d_model``,
+``H = d_inner / headdim``.
+
+Sharding: the ``heads_ssm`` logical axis (H) → mesh model axis; states and
+conv channels follow.  H is padded to a model-axis multiple like attention
+heads (out-projection masking keeps numerics exact).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamCollector, pad_to, rms_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaConfig:
+    d_model: int
+    d_state: int = 64
+    d_conv: int = 4
+    expand: int = 2
+    headdim: int = 64
+    chunk: int = 128            # SSD chunk length
+    heads_padded: int = 0       # set by model builder (TP multiple)
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def nheads(self) -> int:
+        return self.d_inner // self.headdim
+
+    @property
+    def nheads_padded(self) -> int:
+        return self.heads_padded or self.nheads
+
+    @property
+    def d_inner_padded(self) -> int:
+        return self.nheads_padded * self.headdim
+
+
+def mamba_init(col: ParamCollector, cfg: MambaConfig):
+    dm, din, n, h = cfg.d_model, cfg.d_inner_padded, cfg.d_state, cfg.nheads_padded
+    # in_proj -> [z, x, B, C, dt]
+    col.dense("in_z", (dm, din), ("embed", "mlp"))
+    col.dense("in_x", (dm, din), ("embed", "mlp"))
+    col.dense("in_B", (dm, n), ("embed", "state"))
+    col.dense("in_C", (dm, n), ("embed", "state"))
+    col.dense("in_dt", (dm, h), ("embed", "heads_ssm"))
+    col.zeros("dt_bias", (h,), ("heads_ssm",))
+    col.zeros("A_log", (h,), ("heads_ssm",))      # A = -exp(A_log) ~ -1
+    col.zeros("D", (h,), ("heads_ssm",))
+    col.dense("conv", (cfg.d_conv, din + 2 * n), ("conv", "mlp"))
+    col.ones("norm", (din,), ("mlp",))
+    col.dense("out", (din, dm), ("mlp", "embed"))
+
+
+def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv over (B, S, C) with kernel (K, C)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc)
+    for i in range(k):  # K=4: unrolled shifts beat a conv op at this size
+        out = out + pad[:, i:i + xbc.shape[1]] * w[i][None, None, :]
+    return jax.nn.silu(out)
+
+
+def _segsum(log_a: jnp.ndarray) -> jnp.ndarray:
+    """Stable segment-sum: out[..., i, j] = Σ_{j<k<=i} log_a[..., k] (else -inf)."""
+    l = log_a.shape[-1]
+    cs = jnp.cumsum(log_a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((l, l), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, a_log, b, c, chunk: int):
+    """Chunked SSD scan.
+
+    x (B,S,H,P), dt (B,S,H) [post-softplus], a_log = A (H,) negative reals,
+    b/c (B,S,N) single group.  Returns y (B,S,H,P) and final state
+    (B,H,P,N).
+    """
+    bsz, s_orig, h, p = x.shape
+    n = b.shape[-1]
+    q = min(chunk, s_orig) if s_orig < chunk else chunk
+    # pad S to a chunk multiple: padded steps carry dt=0 (x·dt=0, decay=1),
+    # so they contribute nothing to states and their outputs are sliced off.
+    s = (s_orig + q - 1) // q * q
+    if s != s_orig:
+        pad = ((0, 0), (0, s - s_orig))
+        x = jnp.pad(x, pad + ((0, 0), (0, 0)))
+        dt = jnp.pad(dt, pad + ((0, 0),))
+        b = jnp.pad(b, pad + ((0, 0),))
+        c = jnp.pad(c, pad + ((0, 0),))
+    nc = s // q
+
+    # per-step log decay: dA[b,s,h] = dt * A  (negative)
+    da = dt * a_log[None, None, :]                       # (B,S,H)
+    xdt = x * dt[..., None]                              # fold dt into x
+
+    xc = xdt.reshape(bsz, nc, q, h, p)
+    dac = da.reshape(bsz, nc, q, h)
+    bc = b.reshape(bsz, nc, q, n)
+    cc = c.reshape(bsz, nc, q, n)
+
+    # ---- intra-chunk (diagonal blocks): quadratic masked form ----
+    l = jnp.exp(_segsum(dac.transpose(0, 1, 3, 2)))      # (B,NC,H,Q,Q)
+    scores = jnp.einsum("bcin,bcjn->bcij", cc, bc)       # (B,NC,Q,Q)
+    y_diag = jnp.einsum("bcij,bchij,bcjhp->bcihp",
+                        scores, l, xc)                   # (B,NC,Q,H,P)
+
+    # ---- chunk states: decay-weighted outer products ----
+    da_cum = jnp.cumsum(dac, axis=2)                     # (B,NC,Q,H)
+    da_tot = da_cum[:, :, -1]                            # (B,NC,H)
+    decay_to_end = jnp.exp(da_tot[:, :, None] - da_cum)  # (B,NC,Q,H)
+    states = jnp.einsum("bcqn,bcqh,bcqhp->bchpn",
+                        bc, decay_to_end, xc)            # (B,NC,H,P,N)
+
+    # ---- inter-chunk recurrence over chunk states ----
+    def scan_fn(h_prev, inp):
+        st, dtot = inp                                   # (B,H,P,N), (B,H)
+        h_new = h_prev * jnp.exp(dtot)[..., None, None] + st
+        return h_new, h_prev                             # emit state *entering* chunk
+
+    h0 = jnp.zeros((bsz, h, p, n), x.dtype)
+    h_last, h_in = jax.lax.scan(
+        scan_fn, h0, (states.transpose(1, 0, 2, 3, 4), da_tot.transpose(1, 0, 2)))
+    h_in = h_in.transpose(1, 0, 2, 3, 4)                 # (B,NC,H,P,N)
+
+    # ---- off-diagonal contribution: C_t · (decayed incoming state) ----
+    decay_from_start = jnp.exp(da_cum)                   # (B,NC,Q,H)
+    y_off = jnp.einsum("bcqn,bcqh,bchpn->bcqhp",
+                       cc, decay_from_start, h_in)
+    y = (y_diag + y_off).reshape(bsz, s, h, p)[:, :s_orig]
+    return y, h_last
+
+
+def mamba_forward(p, cfg: MambaConfig, u: jnp.ndarray):
+    """Full-sequence Mamba2 block. u (B, S, d_model) -> (B, S, d_model)."""
+    din, n = cfg.d_inner_padded, cfg.d_state
+    z = jnp.einsum("bsd,df->bsf", u, p["in_z"].astype(u.dtype))
+    xraw = jnp.einsum("bsd,df->bsf", u, p["in_x"].astype(u.dtype))
+    braw = jnp.einsum("bsd,dn->bsn", u, p["in_B"].astype(u.dtype))
+    craw = jnp.einsum("bsd,dn->bsn", u, p["in_C"].astype(u.dtype))
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", u, p["in_dt"].astype(u.dtype))
+        + p["dt_bias"].astype(u.dtype))
+
+    xbc = jnp.concatenate([xraw, braw, craw], axis=-1)
+    xbc = _causal_conv(xbc, p["conv"].astype(u.dtype))
+    x, b, c = jnp.split(xbc, [din, din + n], axis=-1)
+
+    h = cfg.nheads_padded
+    x = x.reshape(*x.shape[:2], h, cfg.headdim)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32)).astype(u.dtype)
+    y, _ = ssd_chunked(x, dt, a, b, c, cfg.chunk)
+    y = y + x * p["D"].astype(u.dtype)[None, None, :, None]
+    y = y.reshape(*u.shape[:2], din)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"])
+    return jnp.einsum("bsf,fd->bsd", y, p["out"].astype(u.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def init_mamba_cache(batch: int, cfg: MambaConfig, dtype=jnp.float32) -> dict:
+    din, n = cfg.d_inner_padded, cfg.d_state
+    return {
+        "ssm": jnp.zeros((batch, cfg.nheads_padded, cfg.headdim, n), dtype),
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, din + 2 * n), dtype),
+    }
+
+
+def mamba_decode(p, cfg: MambaConfig, u: jnp.ndarray, cache: dict):
+    """One-token step. u (B, 1, d_model) -> (out (B,1,d), new_cache)."""
+    din, n = cfg.d_inner_padded, cfg.d_state
+    z = jnp.einsum("bsd,df->bsf", u, p["in_z"].astype(u.dtype))
+    xraw = jnp.einsum("bsd,df->bsf", u, p["in_x"].astype(u.dtype))
+    braw = jnp.einsum("bsd,dn->bsn", u, p["in_B"].astype(u.dtype))
+    craw = jnp.einsum("bsd,dn->bsn", u, p["in_C"].astype(u.dtype))
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", u, p["in_dt"].astype(u.dtype))
+        + p["dt_bias"].astype(u.dtype))[:, 0]            # (B,H)
+
+    xbc_t = jnp.concatenate([xraw, braw, craw], axis=-1)[:, 0]   # (B, C)
+    conv_win = jnp.concatenate([cache["conv"].astype(u.dtype),
+                                xbc_t[:, None]], axis=1)          # (B, K, C)
+    w = p["conv"].astype(u.dtype)
+    xbc = jax.nn.silu(jnp.einsum("bkc,kc->bc", conv_win, w))
+    new_conv = conv_win[:, 1:]
+
+    x, b, c = jnp.split(xbc, [din, din + n], axis=-1)
+    h = cfg.nheads_padded
+    x = x.reshape(-1, h, cfg.headdim)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32)).astype(u.dtype)
+    decay = jnp.exp(dt * a[None])                        # (B,H)
+    ssm = cache["ssm"].astype(u.dtype)
+    ssm = (ssm * decay[..., None, None]
+           + jnp.einsum("bhp,bh,bn->bhpn", x, dt, b))
+    y = jnp.einsum("bhpn,bn->bhp", ssm, c) + x * p["D"].astype(u.dtype)[None, :, None]
+    y = y.reshape(-1, 1, din)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"])
+    out = jnp.einsum("bsf,fd->bsd", y, p["out"].astype(u.dtype))
+    return out, {"ssm": ssm.astype(cache["ssm"].dtype),
+                 "conv": new_conv.astype(cache["conv"].dtype)}

@@ -1,0 +1,172 @@
+"""Decoder-only transformer LM: dense (qwen2.5 / qwen3 / smollm / granite) and
+MoE (mixtral / phi-3.5) variants; also the text backbone reused by the VLM.
+
+Layer stack is ``lax.scan`` over stacked params with optional
+``jax.checkpoint`` (remat) around the block body — one traced layer
+regardless of depth (88-layer granite compiles as fast as 12-layer smollm).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import layers as L
+from repro.models import moe as moe_mod
+from repro.distributed.autoshard import constrain
+
+
+def _attn_config(cfg: ModelConfig) -> attn.AttnConfig:
+    hp, hkp = attn.padded_heads(cfg.num_heads, cfg.num_kv_heads, cfg.tp)
+    return attn.AttnConfig(
+        d_model=cfg.d_model, num_heads=cfg.num_heads,
+        num_kv_heads=cfg.num_kv_heads, head_dim=cfg.head_dim_,
+        heads_padded=hp, kv_heads_padded=hkp, qkv_bias=cfg.qkv_bias,
+        qk_norm=cfg.qk_norm, rope_theta=cfg.rope_theta, causal=True,
+        window=cfg.window, use_rope=cfg.use_rope,
+        mrope_sections=cfg.mrope_sections)
+
+
+def _moe_config(cfg: ModelConfig) -> moe_mod.MoEConfig:
+    axis = "experts" if cfg.num_experts % max(cfg.tp, 1) == 0 else "experts_unsharded"
+    return moe_mod.MoEConfig(
+        d_model=cfg.d_model, d_ff=cfg.d_ff, num_experts=cfg.num_experts,
+        top_k=cfg.top_k, capacity_factor=cfg.capacity_factor,
+        expert_axis=axis)
+
+
+class DecoderLM:
+    """Functional decoder-only LM."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.acfg = _attn_config(cfg)
+        self.mcfg = _moe_config(cfg) if cfg.num_experts else None
+
+    # ------------------------------------------------------------- params --
+    def _layer_init(self, key) -> tuple:
+        cfg = self.cfg
+        col = L.ParamCollector(key)
+        col.ones("ln1", (cfg.d_model,), ("embed",))
+        attn.attn_init(col.sub("attn"), self.acfg)
+        col.ones("ln2", (cfg.d_model,), ("embed",))
+        if self.mcfg is not None:
+            moe_mod.moe_init(col.sub("moe"), self.mcfg)
+        elif cfg.mlp == "swiglu":
+            L.swiglu_init(col.sub("mlp"), cfg.d_model, cfg.d_ff)
+        else:
+            L.gelu_mlp_init(col.sub("mlp"), cfg.d_model, cfg.d_ff)
+        params, specs = col.done()
+        params["attn"] = attn.mask_padded_heads(params["attn"], self.acfg)
+        return params, specs
+
+    def init(self, key) -> tuple:
+        cfg = self.cfg
+        keys = jax.random.split(key, cfg.num_layers + 2)
+        col = L.ParamCollector(keys[0])
+        L.embed_init(col, cfg.vocab_size, cfg.d_model)
+        if not cfg.tie_embeddings:
+            v_pad = L.pad_to(cfg.vocab_size, 256)
+            col.dense("unembed", (v_pad, cfg.d_model), ("vocab", "embed"))
+        col.ones("final_norm", (cfg.d_model,), ("embed",))
+        params, specs = col.done()
+        layer_trees = [self._layer_init(keys[i + 1]) for i in range(cfg.num_layers)]
+        params["layers"], specs["layers"] = L.stack_layers(layer_trees)
+        return params, specs
+
+    # ------------------------------------------------------------ forward --
+    def _block(self, lp, x, positions, positions3):
+        cfg = self.cfg
+        norm = functools.partial(L.rms_norm) if cfg.norm == "rms" else None
+        h = L.rms_norm(x, lp["ln1"])
+        h = attn.full_attention(lp["attn"], self.acfg, h, positions=positions,
+                                positions3=positions3)
+        x = x + h
+        h = L.rms_norm(x, lp["ln2"])
+        aux = jnp.zeros((), jnp.float32)
+        if self.mcfg is not None:
+            h, aux = moe_mod.moe_apply(lp["moe"], self.mcfg, h, return_aux=True)
+        elif cfg.mlp == "swiglu":
+            h = L.swiglu_apply(lp["mlp"], h)
+        else:
+            h = L.gelu_mlp_apply(lp["mlp"], h)
+        return x + h, aux
+
+    def forward(self, params, tokens, positions=None, positions3=None,
+                inputs_embeds=None):
+        """tokens (B, S) -> logits (B, S, V_pad); also returns aux loss."""
+        cfg = self.cfg
+        x = L.embed_apply(params, tokens) if inputs_embeds is None else inputs_embeds
+        x = x.astype(jnp.dtype(cfg.compute_dtype))
+        x = constrain(x, "btd")
+
+        block = self._block
+        if cfg.remat:
+            block = jax.checkpoint(block, prevent_cse=False)
+
+        def scan_fn(carry, lp):
+            x, aux = carry
+            x, a = block(lp, x, positions, positions3)
+            return (constrain(x, "btd"), aux + a), None
+
+        (x, aux), _ = jax.lax.scan(scan_fn, (x, jnp.zeros((), jnp.float32)),
+                                   params["layers"], unroll=cfg.scan_unroll)
+        x = L.rms_norm(x, params["final_norm"])
+        logits = L.unembed_apply(params, x, tied=cfg.tie_embeddings)
+        return constrain(logits, "btv"), aux
+
+    def loss(self, params, batch) -> jnp.ndarray:
+        logits, aux = self.forward(
+            params, batch["tokens"], positions=batch.get("positions"),
+            positions3=batch.get("positions3"),
+            inputs_embeds=batch.get("inputs_embeds"))
+        ce = L.cross_entropy_loss(logits, batch["labels"], self.cfg.vocab_size)
+        return ce + 0.01 * aux
+
+    # ------------------------------------------------------------- decode --
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        """Stacked (L, ...) KV cache for scan-decode."""
+        one = attn.init_kv_cache(batch, max_len, self.acfg, dtype)
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (self.cfg.num_layers,) + x.shape).copy(),
+            one)
+
+    def decode_step(self, params, cache, tokens, pos):
+        """tokens (B, 1), pos (B,) -> (logits (B,1,V), new_cache)."""
+        cfg = self.cfg
+        x = L.embed_apply(params, tokens).astype(jnp.dtype(cfg.compute_dtype))
+        x = constrain(x, "btd")
+
+        def scan_fn(x, inp):
+            lp, lcache = inp
+            h = L.rms_norm(x, lp["ln1"])
+            h, new_cache = attn.decode_attention(lp["attn"], self.acfg, h,
+                                                 lcache, pos)
+            x = x + h
+            h = L.rms_norm(x, lp["ln2"])
+            if self.mcfg is not None:
+                h, _ = moe_mod.moe_apply(lp["moe"], self.mcfg, h, return_aux=True)
+            elif cfg.mlp == "swiglu":
+                h = L.swiglu_apply(lp["mlp"], h)
+            else:
+                h = L.gelu_mlp_apply(lp["mlp"], h)
+            return constrain(x + h, "btd"), new_cache
+
+        x, new_cache = jax.lax.scan(scan_fn, x, (params["layers"], cache),
+                                    unroll=cfg.scan_unroll)
+        x = L.rms_norm(x, params["final_norm"])
+        logits = L.unembed_apply(params, x, tied=cfg.tie_embeddings)
+        return logits, new_cache
+
+    def prefill(self, params, tokens, positions=None, positions3=None,
+                inputs_embeds=None):
+        """Full-sequence forward returning last-position logits (prefill
+        benchmark shape; cache writing is fused into serve engines)."""
+        logits, _ = self.forward(params, tokens, positions, positions3,
+                                 inputs_embeds)
+        return logits[:, -1:]

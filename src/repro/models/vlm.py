@@ -1,0 +1,71 @@
+"""Qwen2-VL-style VLM backbone: the decoder LM with M-RoPE and a stubbed
+vision frontend.
+
+Per the assignment, the modality frontend is a STUB: ``input_specs`` provides
+pre-computed patch embeddings ``(B, S_vis, d_model)``; the backbone
+concatenates them with the text embeddings and runs M-RoPE attention with the
+supplied 3-stream (t, h, w) position ids.  Labels cover text positions only.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.transformer import DecoderLM
+
+
+def build_positions3(batch: int, s_vis: int, s_txt: int,
+                     grid: tuple[int, int] = None) -> np.ndarray:
+    """Default M-RoPE id layout: vision tokens on an (h, w) grid at t=0..T_img,
+    text tokens advance all three streams together after the vision span."""
+    if grid is None:
+        side = max(int(np.sqrt(s_vis)), 1)
+        grid = (side, (s_vis + side - 1) // side)
+    h_ids = (np.arange(s_vis) // grid[1]) % grid[0]
+    w_ids = np.arange(s_vis) % grid[1]
+    t_ids = np.zeros(s_vis)
+    base = max(grid[0], grid[1])
+    txt = base + np.arange(s_txt)
+    pos3 = np.stack([
+        np.concatenate([t_ids, txt]),
+        np.concatenate([h_ids, txt]),
+        np.concatenate([w_ids, txt]),
+    ])                                                   # (3, S)
+    return np.broadcast_to(pos3[:, None], (3, batch, s_vis + s_txt)).astype(np.int32)
+
+
+class VLM:
+    def __init__(self, cfg: ModelConfig):
+        assert cfg.mrope_sections is not None
+        self.cfg = cfg
+        self.lm = DecoderLM(cfg)
+
+    def init(self, key):
+        return self.lm.init(key)
+
+    def forward(self, params, batch):
+        """batch: vis_embeds (B,S_vis,d), tokens (B,S_txt), positions3 (3,B,S)."""
+        vis = batch["vis_embeds"].astype(jnp.dtype(self.cfg.compute_dtype))
+        txt = L.embed_apply(params, batch["tokens"]).astype(vis.dtype)
+        x = jnp.concatenate([vis, txt], axis=1)
+        logits, aux = self.lm.forward(params, tokens=None,
+                                      positions3=batch["positions3"],
+                                      inputs_embeds=x)
+        return logits, aux
+
+    def loss(self, params, batch):
+        logits, aux = self.forward(params, batch)
+        s_vis = batch["vis_embeds"].shape[1]
+        txt_logits = logits[:, s_vis:]
+        ce = L.cross_entropy_loss(txt_logits, batch["labels"],
+                                  self.cfg.vocab_size)
+        return ce + 0.01 * aux
+
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        return self.lm.init_cache(batch, max_len, dtype)
+
+    def decode_step(self, params, cache, tokens, pos):
+        return self.lm.decode_step(params, cache, tokens, pos)

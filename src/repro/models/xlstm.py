@@ -1,0 +1,374 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallelizable) and sLSTM (scalar
+memory, genuinely recurrent) — arXiv:2405.04517.
+
+mLSTM training/prefill uses the paper's parallel quadratic form: with
+log-sigmoid forget gates F and input gates I,
+
+    D[i,j] = exp( Σ_{k=j+1..i} log σ(f_k) + i_j − m_i )       (stabilized)
+    H      = ((Q Kᵀ/√d ⊙ D) V) / max(|row-sum|, 1)
+
+which is attention-like (MXU-friendly) — the reason the family runs the
+``long_500k`` shape is the O(1)-state decode path, not the train path.
+Decode carries ``C (B,H,P,P)``, ``n (B,H,P)``, ``m (B,H)`` per layer.
+
+sLSTM is implemented as a true sequential ``lax.scan`` over time with
+exponential-gate stabilization and block-diagonal recurrent weights (4 heads).
+Projection factors follow the paper: mLSTM pf=2 (up/gate), sLSTM pf=4/3
+(post-block gated MLP); neither family has a separate FFN (the assignment's
+``d_ff=0``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamCollector, rms_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class XLSTMConfig:
+    d_model: int
+    num_heads: int = 4
+    heads_padded: int = 0
+    conv_kernel: int = 4
+    mlstm_pf: float = 2.0
+    slstm_pf: float = 4.0 / 3.0
+    chunk: int = 256       # chunkwise-parallel block length (long sequences)
+
+    @property
+    def hp(self) -> int:
+        # xLSTM heads are few (4) and its models small: rather than padding
+        # heads 4x to the TP width, the whole family runs with replicated
+        # params and batch sharded over BOTH mesh axes (DESIGN.md §6).
+        return self.num_heads
+
+    @property
+    def d_inner(self) -> int:
+        return int(self.mlstm_pf * self.d_model)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_init(col: ParamCollector, cfg: XLSTMConfig):
+    dm = cfg.d_model
+    din = cfg.d_inner
+    h = cfg.hp
+    hd = din // h
+    col.ones("ln", (dm,), ("embed",))
+    col.dense("up", (dm, din), ("embed", "mlp"))
+    col.dense("up_z", (dm, din), ("embed", "mlp"))
+    col.dense("conv", (cfg.conv_kernel, din), ("conv", "mlp"))
+    col.dense("wq", (din, h, hd), ("mlp", "q_heads", "head"))
+    col.dense("wk", (din, h, hd), ("mlp", "q_heads", "head"))
+    col.dense("wv", (din, h, hd), ("mlp", "q_heads", "head"))
+    col.dense("w_i", (din, h), ("mlp", "q_heads"), scale=0.01)
+    col.dense("w_f", (din, h), ("mlp", "q_heads"), scale=0.01)
+    col.zeros("b_i", (h,), ("q_heads",))
+    col.zeros("b_f", (h,), ("q_heads",))   # +3 offset applied in forward
+    col.ones("mnorm", (din,), ("mlp",))
+    col.dense("down", (din, dm), ("mlp", "embed"))
+
+
+def _mlstm_gates(p, xc, dtype):
+    i_pre = jnp.einsum("bsf,fh->bsh", xc, p["w_i"].astype(dtype)) + p["b_i"].astype(dtype)
+    f_pre = (jnp.einsum("bsf,fh->bsh", xc, p["w_f"].astype(dtype))
+             + p["b_f"].astype(dtype) + 3.0)   # bias toward remembering
+    return i_pre.astype(jnp.float32), f_pre.astype(jnp.float32)
+
+
+def _causal_conv(x, w):
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(k):
+        out = out + pad[:, i:i + x.shape[1]] * w[i][None, None, :]
+    return jax.nn.silu(out)
+
+
+def mlstm_forward(p, cfg: XLSTMConfig, u: jnp.ndarray) -> jnp.ndarray:
+    """Parallel (quadratic) mLSTM block. u (B,S,d) -> (B,S,d)."""
+    b, s, dm = u.shape
+    h = cfg.hp
+    din = cfg.d_inner
+    hd = din // h
+    x = rms_norm(u, p["ln"])
+    xu = jnp.einsum("bsd,df->bsf", x, p["up"].astype(x.dtype))
+    z = jnp.einsum("bsd,df->bsf", x, p["up_z"].astype(x.dtype))
+    xc = _causal_conv(xu, p["conv"].astype(x.dtype))
+
+    q = jnp.einsum("bsf,fhk->bshk", xc, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsf,fhk->bshk", xc, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsf,fhk->bshk", xu, p["wv"].astype(x.dtype))
+
+    i_pre, f_pre = _mlstm_gates(p, xc, x.dtype)          # (B,S,H) f32
+    if s > 2 * cfg.chunk:
+        # chunkwise-parallel form: O(S·Qc) memory instead of O(S²)
+        out = mlstm_inner_chunked(q, k, v, i_pre, f_pre, cfg.chunk)
+    else:
+        logf = jax.nn.log_sigmoid(f_pre)
+        fcum = jnp.cumsum(logf, axis=1)                  # (B,S,H)
+        # log decay matrix: dmat[i,j] = fcum_i - fcum_j + i_pre_j  (j <= i)
+        dmat = (fcum[:, :, None, :] - fcum[:, None, :, :]
+                + i_pre[:, None, :, :])                  # (B,S,S,H)
+        causal = jnp.tril(jnp.ones((s, s), bool))
+        dmat = jnp.where(causal[None, :, :, None], dmat, -jnp.inf)
+        m = jnp.max(dmat, axis=2, keepdims=True)         # stabilizer
+        d = jnp.exp(dmat - m)
+
+        scores = jnp.einsum("bihk,bjhk->bijh", q, k) / math.sqrt(hd)
+        w = scores.astype(jnp.float32) * d
+        norm = jnp.maximum(jnp.abs(jnp.sum(w, axis=2)), 1.0)  # (B,S,H)
+        out = (jnp.einsum("bijh,bjhk->bihk", w, v.astype(jnp.float32))
+               / norm[..., None]).astype(x.dtype)
+
+    out = out.reshape(b, s, din)
+    out = rms_norm(out, p["mnorm"]) * jax.nn.silu(z)
+    return u + jnp.einsum("bsf,fd->bsd", out, p["down"].astype(x.dtype))
+
+
+def mlstm_inner_chunked(q, k, v, i_pre, f_pre, chunk: int):
+    """Chunkwise-parallel mLSTM: intra-chunk quadratic + carried (C, n, m).
+
+    q/k/v (B,S,H,D), gates (B,S,H) f32.  Exactly equals the quadratic form
+    (same stabilization convention: running max m, row normalizer
+    ``max(|ñ·q|, 1)``) but materializes (Qc, Qc) blocks instead of (S, S) —
+    the §Perf iteration that takes xlstm prefill_32k off the memory wall.
+    Returns h (B,S,H,D).
+    """
+    b, s, hh, dd = q.shape
+    qc = min(chunk, s)
+    s_pad = (s + qc - 1) // qc * qc
+    if s_pad != s:
+        pad = ((0, 0), (0, s_pad - s), (0, 0), (0, 0))
+        q = jnp.pad(q, pad)
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+        # padded steps: f=1 (logf=0 after sigmoid(+inf)->1? use big positive),
+        # i = -inf so they inject nothing
+        gpad = ((0, 0), (0, s_pad - s), (0, 0))
+        i_pre = jnp.pad(i_pre, gpad, constant_values=-1e9)
+        f_pre = jnp.pad(f_pre, gpad, constant_values=1e9)
+    nc = s_pad // qc
+    scale = 1.0 / math.sqrt(dd)
+
+    def reshape_c(x):
+        return x.reshape(b, nc, qc, *x.shape[2:])
+
+    qs, ks, vs = map(reshape_c, (q, k, v))
+    ip = reshape_c(i_pre)
+    logf = jax.nn.log_sigmoid(reshape_c(f_pre))
+    a = jnp.cumsum(logf, axis=2)                     # (B,NC,Qc,H) within-chunk
+    a_tot = a[:, :, -1]                              # (B,NC,H)
+    w = ip - a                                       # log weight rel chunk start
+
+    # carried state: Ĉ (B,H,D,D), n̂ (B,H,D), m̂ (B,H) with C = Ĉ·exp(m̂)
+    c0 = jnp.zeros((b, hh, dd, dd), jnp.float32)
+    n0 = jnp.zeros((b, hh, dd), jnp.float32)
+    m0 = jnp.full((b, hh), -1e30, jnp.float32)
+
+    def step(carry, inp):
+        c_h, n_h, m_h = carry
+        qj, kj, vj, aj, wj, atot = inp               # (B,Qc,H,D)... (B,H)
+        w_max = jnp.max(wj, axis=1)                  # (B,H)
+        # ---- row outputs ------------------------------------------------
+        # m_i = a_i + max(m̂, max_{j<=i} w_j)
+        w_run = jax.lax.cummax(wj, axis=1)           # (B,Qc,H)
+        m_row = aj + jnp.maximum(m_h[:, None], w_run)
+        # dmat[i,j] = a_i - a_j + i_j = a_i + w_j
+        dmat = aj[:, :, None] + wj[:, None, :]       # (B,Qc,Qc,H)
+        causal = jnp.tril(jnp.ones((qj.shape[1], qj.shape[1]), bool))
+        dmat = jnp.where(causal[None, :, :, None], dmat, -jnp.inf)
+        dstab = jnp.exp(dmat - m_row[:, :, None])    # (B,Qc,Qc,H)
+        scores = jnp.einsum("bihd,bjhd->bijh", qj, kj) * scale
+        wmat = scores.astype(jnp.float32) * dstab
+        s_coef = jnp.exp(aj + m_h[:, None] - m_row)  # (B,Qc,H)
+        num = (jnp.einsum("bijh,bjhd->bihd", wmat, vj.astype(jnp.float32))
+               + s_coef[..., None] * jnp.einsum(
+                   "bhdk,bihd->bihk", c_h, qj.astype(jnp.float32)))
+        den = jnp.sum(wmat, axis=2) + s_coef * jnp.einsum(
+            "bhd,bihd->bih", n_h, qj.astype(jnp.float32))
+        h_out = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+
+        # ---- state update ------------------------------------------------
+        m_new = jnp.maximum(m_h + atot, atot + w_max)
+        decay = jnp.exp(m_h + atot - m_new)          # (B,H)
+        inw = jnp.exp(wj + atot[:, None] - m_new[:, None])   # (B,Qc,H)
+        kv = jnp.einsum("bjh,bjhd,bjhk->bhdk", inw,
+                        kj.astype(jnp.float32) * scale, vj.astype(jnp.float32))
+        c_new = c_h * decay[..., None, None] + kv
+        n_new = n_h * decay[..., None] + jnp.einsum(
+            "bjh,bjhd->bhd", inw, kj.astype(jnp.float32) * scale)
+        return (c_new, n_new, m_new), h_out
+
+    seq = (qs.transpose(1, 0, 2, 3, 4), ks.transpose(1, 0, 2, 3, 4),
+           vs.transpose(1, 0, 2, 3, 4), a.transpose(1, 0, 2, 3),
+           w.transpose(1, 0, 2, 3), a_tot.transpose(1, 0, 2))
+    _, hs = jax.lax.scan(step, (c0, n0, m0), seq)
+    hs = hs.transpose(1, 0, 2, 3, 4).reshape(b, s_pad, hh, dd)
+    return hs[:, :s].astype(q.dtype)
+
+
+def init_mlstm_cache(batch: int, cfg: XLSTMConfig, dtype=jnp.float32) -> dict:
+    h = cfg.hp
+    hd = cfg.d_inner // h
+    return {
+        "C": jnp.zeros((batch, h, hd, hd), dtype),
+        "n": jnp.zeros((batch, h, hd), dtype),
+        "m": jnp.full((batch, h), -1e9, dtype),
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, cfg.d_inner), dtype),
+    }
+
+
+def mlstm_decode(p, cfg: XLSTMConfig, u: jnp.ndarray, cache: dict):
+    """Recurrent one-token step. u (B,1,d)."""
+    bsz = u.shape[0]
+    h = cfg.hp
+    din = cfg.d_inner
+    hd = din // h
+    x = rms_norm(u, p["ln"])
+    xu = jnp.einsum("bsd,df->bsf", x, p["up"].astype(x.dtype))
+    z = jnp.einsum("bsd,df->bsf", x, p["up_z"].astype(x.dtype))
+    conv_win = jnp.concatenate([cache["conv"].astype(x.dtype), xu], axis=1)
+    xc = jax.nn.silu(jnp.einsum("bkc,kc->bc", conv_win,
+                                p["conv"].astype(x.dtype)))[:, None]
+    new_conv = conv_win[:, 1:]
+
+    q = jnp.einsum("bsf,fhk->bshk", xc, p["wq"].astype(x.dtype))[:, 0]
+    k = jnp.einsum("bsf,fhk->bshk", xc, p["wk"].astype(x.dtype))[:, 0]
+    v = jnp.einsum("bsf,fhk->bshk", xu, p["wv"].astype(x.dtype))[:, 0]
+    i_pre, f_pre = _mlstm_gates(p, xc, x.dtype)
+    i_pre, f_pre = i_pre[:, 0], f_pre[:, 0]              # (B,H)
+    logf = jax.nn.log_sigmoid(f_pre)
+
+    m_old = cache["m"].astype(jnp.float32)
+    m_new = jnp.maximum(logf + m_old, i_pre)
+    decay = jnp.exp(logf + m_old - m_new)[..., None, None]
+    inp = jnp.exp(i_pre - m_new)[..., None, None]
+    c_new = cache["C"].astype(jnp.float32) * decay + inp * jnp.einsum(
+        "bhk,bhl->bhkl", v.astype(jnp.float32), k.astype(jnp.float32) / math.sqrt(hd))
+    n_new = (cache["n"].astype(jnp.float32) * decay[..., 0]
+             + inp[..., 0] * k.astype(jnp.float32) / math.sqrt(hd))
+    num = jnp.einsum("bhkl,bhl->bhk", c_new, q.astype(jnp.float32))
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhl,bhl->bh", n_new,
+                                         q.astype(jnp.float32))), 1.0)
+    out = (num / den[..., None]).astype(x.dtype).reshape(bsz, 1, din)
+    out = rms_norm(out, p["mnorm"]) * jax.nn.silu(z)
+    y = u + jnp.einsum("bsf,fd->bsd", out, p["down"].astype(x.dtype))
+    return y, {"C": c_new.astype(cache["C"].dtype),
+               "n": n_new.astype(cache["n"].dtype),
+               "m": m_new.astype(cache["m"].dtype),
+               "conv": new_conv.astype(cache["conv"].dtype)}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_init(col: ParamCollector, cfg: XLSTMConfig):
+    dm = cfg.d_model
+    h = cfg.hp
+    hd = dm // cfg.num_heads            # head width from the *real* head count
+    dh = h * hd                         # padded recurrent width
+    col.ones("ln", (dm,), ("embed",))
+    col.dense("conv", (cfg.conv_kernel, dm), ("conv", "embed"))
+    for g in ("i", "f", "z", "o"):
+        col.dense(f"w_{g}", (dm, dh), ("embed", "mlp"))
+        col.dense(f"r_{g}", (h, hd, hd), ("q_heads", "head", "head"), scale=0.1)
+        col.zeros(f"b_{g}", (dh,), ("mlp",))
+    col.ones("gnorm", (dh,), ("mlp",))
+    col.dense("proj_up", (dh, int(cfg.slstm_pf * dm) * 2), ("mlp", "mlp2"))
+    col.dense("proj_down", (int(cfg.slstm_pf * dm), dm), ("mlp2", "embed"))
+
+
+def init_slstm_cache(batch: int, cfg: XLSTMConfig, dtype=jnp.float32) -> dict:
+    h = cfg.hp
+    hd = cfg.d_model // cfg.num_heads
+
+    def z():  # fresh buffer per field: aliasing breaks jit donation
+        return jnp.zeros((batch, h, hd), dtype)
+
+    return {"c": z(), "n": z() + 1e-6, "h": z(), "m": z(),
+            "conv": jnp.zeros((batch, cfg.conv_kernel - 1, cfg.d_model), dtype)}
+
+
+def _slstm_cell(p, cfg: XLSTMConfig, x_t, xc_t, state):
+    """One sLSTM time step.  x_t (B, d_model) raw, xc_t conv-silu'd."""
+    h = cfg.hp
+    hd = cfg.d_model // cfg.num_heads
+    hprev = state["h"]                                    # (B,H,hd)
+
+    def gate(name, src):
+        wx = jnp.einsum("bd,df->bf", src, p[f"w_{name}"].astype(src.dtype))
+        wx = wx.reshape(-1, h, hd)
+        rh = jnp.einsum("bhk,hkl->bhl", hprev, p[f"r_{name}"].astype(src.dtype))
+        return (wx + rh + p[f"b_{name}"].astype(src.dtype).reshape(h, hd)).astype(
+            jnp.float32)
+
+    i_pre = gate("i", xc_t)
+    f_pre = gate("f", xc_t) + 3.0
+    z_pre = gate("z", x_t)
+    o_pre = gate("o", x_t)
+
+    m_old = state["m"].astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(logf + m_old, i_pre)
+    i_g = jnp.exp(i_pre - m_new)
+    f_g = jnp.exp(logf + m_old - m_new)
+    c_new = f_g * state["c"].astype(jnp.float32) + i_g * jnp.tanh(z_pre)
+    n_new = f_g * state["n"].astype(jnp.float32) + i_g
+    h_new = jax.nn.sigmoid(o_pre) * c_new / jnp.maximum(n_new, 1e-6)
+    dt = state["h"].dtype
+    return {"c": c_new.astype(dt), "n": n_new.astype(dt),
+            "h": h_new.astype(dt), "m": m_new.astype(dt)}
+
+
+def slstm_forward(p, cfg: XLSTMConfig, u: jnp.ndarray) -> jnp.ndarray:
+    """Sequential sLSTM block (lax.scan over time). u (B,S,d)."""
+    b, s, dm = u.shape
+    h = cfg.hp
+    hd = dm // cfg.num_heads
+    x = rms_norm(u, p["ln"])
+    xc = _causal_conv(x, p["conv"].astype(x.dtype))
+
+    state0 = {k: v for k, v in init_slstm_cache(b, cfg, x.dtype).items()
+              if k != "conv"}
+
+    def step(state, inp):
+        x_t, xc_t = inp
+        new = _slstm_cell(p, cfg, x_t, xc_t, state)
+        return new, new["h"]
+
+    _, hs = jax.lax.scan(step, state0,
+                         (x.transpose(1, 0, 2), xc.transpose(1, 0, 2)))
+    hs = hs.transpose(1, 0, 2, 3).reshape(b, s, h * hd)
+    hs = rms_norm(hs, p["gnorm"])
+    up = jnp.einsum("bsf,fg->bsg", hs, p["proj_up"].astype(x.dtype))
+    a, g = jnp.split(up, 2, axis=-1)
+    out = jnp.einsum("bsf,fd->bsd", a * jax.nn.gelu(g, approximate=True),
+                     p["proj_down"].astype(x.dtype))
+    return u + out
+
+
+def slstm_decode(p, cfg: XLSTMConfig, u: jnp.ndarray, cache: dict):
+    b = u.shape[0]
+    h = cfg.hp
+    hd = cfg.d_model // cfg.num_heads
+    x = rms_norm(u, p["ln"])
+    conv_win = jnp.concatenate([cache["conv"].astype(x.dtype), x], axis=1)
+    xc = jax.nn.silu(jnp.einsum("bkc,kc->bc", conv_win,
+                                p["conv"].astype(x.dtype)))
+    state = {k: cache[k] for k in ("c", "n", "h", "m")}
+    new = _slstm_cell(p, cfg, x[:, 0], xc, state)
+    hs = rms_norm(new["h"].reshape(b, 1, h * hd), p["gnorm"])
+    up = jnp.einsum("bsf,fg->bsg", hs, p["proj_up"].astype(x.dtype))
+    a, g = jnp.split(up, 2, axis=-1)
+    out = jnp.einsum("bsf,fd->bsd", a * jax.nn.gelu(g, approximate=True),
+                     p["proj_down"].astype(x.dtype))
+    new["conv"] = conv_win[:, 1:].astype(cache["conv"].dtype)
+    return u + out, new

@@ -1,0 +1,84 @@
+"""xLSTM LM assembly: mLSTM blocks with sLSTM blocks at configured positions
+(the paper's mLSTM:sLSTM ratio), embedding + final norm + tied unembedding.
+
+Twelve layers is small enough for a Python-level layer loop (heterogeneous
+blocks don't scan); the recurrent families' value is the O(1)-state decode
+path exercised by the ``long_500k`` shape.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import xlstm as X
+from repro.distributed.autoshard import constrain
+
+
+class XLSTMLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.xcfg = X.XLSTMConfig(d_model=cfg.d_model,
+                                  num_heads=cfg.num_heads,
+                                  chunk=cfg.ssm_chunk)
+        self.kinds = ["slstm" if i in cfg.slstm_at else "mlstm"
+                      for i in range(cfg.num_layers)]
+
+    def init(self, key):
+        cfg = self.cfg
+        keys = jax.random.split(key, cfg.num_layers + 1)
+        col = L.ParamCollector(keys[0])
+        L.embed_init(col, cfg.vocab_size, cfg.d_model)
+        col.ones("final_norm", (cfg.d_model,), ("embed",))
+        params, specs = col.done()
+        blocks, bspecs = [], []
+        for i, kind in enumerate(self.kinds):
+            c = L.ParamCollector(keys[i + 1])
+            (X.slstm_init if kind == "slstm" else X.mlstm_init)(c, self.xcfg)
+            p, s = c.done()
+            blocks.append(p)
+            bspecs.append(s)
+        params["blocks"] = tuple(blocks)
+        specs["blocks"] = tuple(bspecs)
+        return params, specs
+
+    def forward(self, params, tokens):
+        cfg = self.cfg
+        x = constrain(L.embed_apply(params, tokens).astype(
+            jnp.dtype(cfg.compute_dtype)), "btd")
+        for i, kind in enumerate(self.kinds):
+            fwd = X.slstm_forward if kind == "slstm" else X.mlstm_forward
+            if cfg.remat:
+                fwd = jax.checkpoint(fwd, prevent_cse=False, static_argnums=(1,))
+            x = constrain(fwd(params["blocks"][i], self.xcfg, x), "btd")
+        x = L.rms_norm(x, params["final_norm"])
+        return L.unembed_apply(params, x, tied=True)
+
+    def loss(self, params, batch):
+        logits = self.forward(params, batch["tokens"])
+        return L.cross_entropy_loss(logits, batch["labels"], self.cfg.vocab_size)
+
+    def prefill(self, params, tokens):
+        return self.forward(params, tokens)[:, -1:]
+
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.float32):
+        del max_len  # recurrent state: O(1) in sequence length
+        caches = []
+        for kind in self.kinds:
+            init = X.init_slstm_cache if kind == "slstm" else X.init_mlstm_cache
+            caches.append(init(batch, self.xcfg, dtype))
+        return tuple(caches)
+
+    def decode_step(self, params, cache, tokens, pos):
+        del pos  # recurrences are position-free
+        cfg = self.cfg
+        x = L.embed_apply(params, tokens).astype(jnp.dtype(cfg.compute_dtype))
+        new = []
+        for i, kind in enumerate(self.kinds):
+            step = X.slstm_decode if kind == "slstm" else X.mlstm_decode
+            x, nc = step(params["blocks"][i], self.xcfg, x, cache[i])
+            new.append(nc)
+        x = L.rms_norm(x, params["final_norm"])
+        return L.unembed_apply(params, x, tied=True), tuple(new)

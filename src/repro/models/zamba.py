@@ -1,0 +1,178 @@
+"""Zamba2-style hybrid: Mamba2 backbone with a weight-SHARED attention block
+applied every ``shared_attn_every`` layers (arXiv:2411.15242).
+
+Faithful structure: one set of attention+MLP weights reused at every shared
+site; the shared block's input is ``concat(x, x0)`` (current activations and
+the original embeddings) through a per-site projection — per-site projections
+are the only unshared pieces, playing the role of zamba2's per-invocation
+LoRA adapters (adaptation noted in DESIGN.md).
+
+For the ``long_500k`` serve shape the shared attention runs with a sliding
+window (``cfg.long_window``) so its cache is O(window); the Mamba state is
+O(1) in sequence by construction.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import layers as L
+from repro.models import ssm
+from repro.distributed.autoshard import constrain
+
+
+class ZambaLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        hp, hkp = attn.padded_heads(cfg.num_heads, cfg.num_kv_heads, cfg.tp)
+        self.acfg = attn.AttnConfig(
+            d_model=cfg.d_model, num_heads=cfg.num_heads,
+            num_kv_heads=cfg.num_kv_heads, head_dim=cfg.head_dim_,
+            heads_padded=hp, kv_heads_padded=hkp, causal=True,
+            window=cfg.long_window, rope_theta=cfg.rope_theta)
+        mcfg = ssm.MambaConfig(
+            d_model=cfg.d_model, d_state=cfg.ssm_state,
+            headdim=cfg.ssm_headdim, chunk=cfg.ssm_chunk)
+        hp_ssm = L.pad_to(mcfg.nheads, cfg.tp)
+        self.mcfg = ssm.MambaConfig(
+            d_model=cfg.d_model, d_state=cfg.ssm_state,
+            headdim=cfg.ssm_headdim, chunk=cfg.ssm_chunk,
+            heads_padded=hp_ssm)
+        self.sites = list(range(cfg.shared_attn_every - 1, cfg.num_layers,
+                                cfg.shared_attn_every))
+
+    # ------------------------------------------------------------- params --
+    def init(self, key):
+        cfg = self.cfg
+        keys = jax.random.split(key, cfg.num_layers + 3)
+        col = L.ParamCollector(keys[0])
+        L.embed_init(col, cfg.vocab_size, cfg.d_model)
+        col.ones("final_norm", (cfg.d_model,), ("embed",))
+        # shared attention block (single weight set)
+        shared = col.sub("shared")
+        shared.ones("ln1", (cfg.d_model,), ("embed",))
+        attn.attn_init(shared.sub("attn"), self.acfg)
+        shared.ones("ln2", (cfg.d_model,), ("embed",))
+        L.swiglu_init(shared.sub("mlp"), cfg.d_model, cfg.d_ff)
+        # per-site input projections concat(x, x0) -> d
+        col.dense("site_proj", (len(self.sites), 2 * cfg.d_model, cfg.d_model),
+                  ("sites", "embed2", "embed"))
+        params, specs = col.done()
+        params["shared"]["attn"] = attn.mask_padded_heads(
+            params["shared"]["attn"], self.acfg)
+
+        def one_mamba(k):
+            c = L.ParamCollector(k)
+            c.ones("ln", (cfg.d_model,), ("embed",))
+            ssm.mamba_init(c.sub("m"), self.mcfg)
+            return c.done()
+
+        layer_trees = [one_mamba(keys[i + 1]) for i in range(cfg.num_layers)]
+        params["layers"], specs["layers"] = L.stack_layers(layer_trees)
+        return params, specs
+
+    # ------------------------------------------------------------ forward --
+    def _mamba_span(self, params, x, lo, hi):
+        span = jax.tree.map(lambda a: a[lo:hi], params["layers"])
+
+        def block(lp, x):
+            return x + ssm.mamba_forward(lp["m"], self.mcfg,
+                                         L.rms_norm(x, lp["ln"]))
+
+        if self.cfg.remat:
+            block = jax.checkpoint(block, prevent_cse=False)
+
+        def scan_fn(x, lp):
+            return constrain(block(lp, x), "btd"), None
+
+        x, _ = jax.lax.scan(scan_fn, x, span, unroll=self.cfg.scan_unroll)
+        return x
+
+    def _shared_block(self, params, x, x0, site_idx, positions=None):
+        sp = params["shared"]
+        inp = jnp.concatenate([x, x0], axis=-1)
+        h = jnp.einsum("bsd,dk->bsk", inp,
+                       params["site_proj"][site_idx].astype(x.dtype))
+        h = L.rms_norm(h, sp["ln1"])
+        h = attn.full_attention(sp["attn"], self.acfg, h, positions=positions)
+        x = x + h
+        h = L.rms_norm(x, sp["ln2"])
+        return x + L.swiglu_apply(sp["mlp"], h)
+
+    def forward(self, params, tokens, positions=None):
+        cfg = self.cfg
+        x0 = constrain(L.embed_apply(params, tokens).astype(
+            jnp.dtype(cfg.compute_dtype)), "btd")
+        x = x0
+        prev = 0
+        for si, site in enumerate(self.sites):
+            x = self._mamba_span(params, x, prev, site + 1)
+            x = self._shared_block(params, x, x0, si, positions)
+            prev = site + 1
+        if prev < cfg.num_layers:
+            x = self._mamba_span(params, x, prev, cfg.num_layers)
+        x = L.rms_norm(x, params["final_norm"])
+        return constrain(L.unembed_apply(params, x, tied=True), "btv")
+
+    def loss(self, params, batch):
+        logits = self.forward(params, batch["tokens"],
+                              positions=batch.get("positions"))
+        return L.cross_entropy_loss(logits, batch["labels"], self.cfg.vocab_size)
+
+    def prefill(self, params, tokens):
+        return self.forward(params, tokens)[:, -1:]
+
+    # ------------------------------------------------------------- decode --
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        one = ssm.init_mamba_cache(batch, self.mcfg, jnp.float32)
+        mamba = jax.tree.map(
+            lambda x: jnp.broadcast_to(
+                x, (self.cfg.num_layers,) + x.shape).copy(), one)
+        akv = attn.init_kv_cache(batch, max_len, self.acfg, dtype)
+        shared = jax.tree.map(
+            lambda x: jnp.broadcast_to(
+                x, (len(self.sites),) + x.shape).copy(), akv)
+        return {"mamba": mamba, "shared": shared}
+
+    def decode_step(self, params, cache, tokens, pos):
+        cfg = self.cfg
+        x0 = L.embed_apply(params, tokens).astype(jnp.dtype(cfg.compute_dtype))
+        x = x0
+        new_mamba = []
+        new_shared = []
+        prev = 0
+
+        def mamba_one(lidx, x):
+            lp = jax.tree.map(lambda a: a[lidx], params["layers"])
+            lc = jax.tree.map(lambda a: a[lidx], cache["mamba"])
+            out, nc = ssm.mamba_decode(lp["m"], self.mcfg,
+                                       L.rms_norm(x, lp["ln"]), lc)
+            return x + out, nc
+
+        for si, site in enumerate(self.sites):
+            for l in range(prev, site + 1):
+                x, nc = mamba_one(l, x)
+                new_mamba.append(nc)
+            sp = params["shared"]
+            inp = jnp.concatenate([x, x0], axis=-1)
+            h = jnp.einsum("bsd,dk->bsk", inp,
+                           params["site_proj"][si].astype(x.dtype))
+            h = L.rms_norm(h, sp["ln1"])
+            sc = jax.tree.map(lambda a: a[si], cache["shared"])
+            h, nsc = attn.decode_attention(sp["attn"], self.acfg, h, sc, pos)
+            new_shared.append(nsc)
+            x = x + h
+            h = L.rms_norm(x, sp["ln2"])
+            x = x + L.swiglu_apply(sp["mlp"], h)
+            prev = site + 1
+        for l in range(prev, cfg.num_layers):
+            x, nc = mamba_one(l, x)
+            new_mamba.append(nc)
+
+        x = L.rms_norm(x, params["final_norm"])
+        logits = L.unembed_apply(params, x, tied=True)
+        stack = lambda trees: jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+        return logits, {"mamba": stack(new_mamba), "shared": stack(new_shared)}

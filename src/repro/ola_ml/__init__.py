@@ -1,0 +1,12 @@
+"""Beyond-paper integrations: OLA-RAW as a first-class training-framework
+feature.
+
+* :mod:`verify`    — PTF-style ingest verification gating the trainer.
+* :mod:`eval_ola`  — distributed eval with bi-level early termination.
+* :mod:`gradnoise` — gradient-noise-scale estimation with Eq. (3) bounds.
+"""
+
+from repro.ola_ml.verify import IngestGate
+from repro.ola_ml.eval_ola import ola_eval
+
+__all__ = ["IngestGate", "ola_eval"]

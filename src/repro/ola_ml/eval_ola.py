@@ -1,0 +1,107 @@
+"""OLA-based distributed evaluation with early termination.
+
+Estimating a validation metric to ±ε is a SUM/COUNT query over eval shards:
+shards are *chunks* (scheduled in a committed random order — the engine's
+no-inspection-paradox queue matters here because shard eval time correlates
+with content length), and per-example losses are *tuples*.  Bi-level
+sampling stops the eval as soon as the CI is tight enough — typically a
+small fraction of the eval set for loss-scale metrics.
+
+This reuses Eq. (1)/(3) directly on model outputs: the per-chunk sufficient
+statistics come from batched forward passes instead of raw-byte EXTRACT.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core import estimators as est
+from repro.sampling.permutation import chunk_seed, feistel_permute, random_chunk_order
+
+
+@dataclasses.dataclass
+class OlaEvalResult:
+    estimate: float          # mean metric over the eval set
+    lo: float
+    hi: float
+    error_ratio: float
+    shards_used: int
+    examples_used: int
+    total_examples: int
+
+
+def ola_eval(metric_fn: Callable[[np.ndarray], np.ndarray],
+             shards: list, epsilon: float = 0.02, confidence: float = 0.95,
+             batch: int = 64, seed: int = 0,
+             max_examples: Optional[int] = None) -> OlaEvalResult:
+    """``metric_fn(examples) -> per-example metric``; ``shards`` is a list of
+    example arrays (leading dim = examples).  Returns the ε-accurate mean.
+
+    Shards are visited in a committed random order; inside a shard examples
+    follow the shard's keyed permutation in ``batch``-sized rounds (the
+    engine's budget analog).  Stops when the AVG ratio-estimator CI meets ε.
+    """
+    n = len(shards)
+    sizes = np.asarray([len(s) for s in shards], np.int64)
+    order = random_chunk_order(seed, n)
+    stats = est.init_stats(jnp.asarray(sizes, jnp.int32), dtype=jnp.float32)
+
+    used = 0
+    shards_used = 0
+    offset = np.zeros(n, np.int64)
+    result = None
+    for pos in range(n):
+        j = int(order[pos])
+        shards_used += 1
+        mj = int(sizes[j])
+        key = chunk_seed(seed, j)
+        while offset[j] < mj:
+            take = min(batch, mj - int(offset[j]))
+            idx = np.asarray(feistel_permute(
+                key, jnp.arange(offset[j], offset[j] + take), mj))
+            vals = np.asarray(metric_fn(shards[j][idx]), np.float64)
+            offset[j] += take
+            used += take
+            stats = stats._replace(
+                m=stats.m.at[j].add(take),
+                ysum=stats.ysum.at[j].add(vals.sum()),
+                ysq=stats.ysq.at[j].add((vals ** 2).sum()),
+                psum=stats.psum.at[j].add(float(take)))
+            r, v, ok = est.avg_estimate(stats)
+            lo, hi = est.confidence_bounds(r, v, confidence)
+            err = float(est.error_ratio(r, lo, hi))
+            result = OlaEvalResult(
+                estimate=float(r), lo=float(lo), hi=float(hi),
+                error_ratio=err, shards_used=shards_used,
+                examples_used=used, total_examples=int(sizes.sum()))
+            if bool(ok) and err <= epsilon and shards_used >= 2:
+                return result
+            if max_examples and used >= max_examples:
+                return result
+            # local accuracy met for this shard? move to the next (Theorem 3)
+            if _local_ok(stats, j, epsilon, confidence):
+                break
+    return result
+
+
+def _local_ok(stats, j, epsilon, confidence) -> bool:
+    import jax
+
+    m = float(stats.m[j])
+    big_m = float(stats.M[j])
+    if m < 2:
+        return False
+    if m >= big_m:
+        return True
+    ys = float(stats.ysum[j])
+    yq = float(stats.ysq[j])
+    ss = max(yq - ys * ys / m, 0.0)
+    v = (big_m / m) * (big_m - m) / (m - 1.0) * ss
+    z = float(jax.scipy.special.ndtri((1 + confidence) / 2))
+    yhat = big_m / m * ys
+    return 2 * z * np.sqrt(v) <= epsilon * max(abs(yhat), 1e-12)

@@ -1,0 +1,87 @@
+"""Gradient-noise-scale estimation with bi-level confidence bounds.
+
+The critical-batch-size heuristic (McCandlish et al. 2018) needs
+``B_simple = tr(Σ) / |G|²`` — both terms are population aggregates over
+examples, so they are exactly OLA estimands: microbatches are *chunks*
+(cheap to evaluate together), examples are *tuples*.  We estimate
+``E[|g_b|²]`` at two batch sizes with Eq. (1)/(3) bounds and solve for the
+noise scale, stopping when both CIs are tight.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core import estimators as est
+
+
+@dataclasses.dataclass
+class NoiseScaleResult:
+    b_simple: float
+    lo: float
+    hi: float
+    gnorm_small: float
+    gnorm_big: float
+    batches_used: int
+
+
+def estimate_noise_scale(gnorm_fn: Callable[[int, int], float],
+                         b_small: int, b_big: int, num_chunks: int = 16,
+                         probes_per_chunk: int = 4, epsilon: float = 0.2,
+                         confidence: float = 0.9, seed: int = 0
+                         ) -> NoiseScaleResult:
+    """``gnorm_fn(batch_size, seed) -> |g|²`` on a fresh batch.
+
+    Treats probe groups as chunks (bi-level: groups × probes) so the Eq. (3)
+    machinery provides the CI; unbiased |G|² from the two-point identity
+    |G|² = (B_b·E|g_b|² − B_s·E|g_s|²) / (B_b − B_s).
+    """
+    sizes = jnp.full((num_chunks,), probes_per_chunk, jnp.int32)
+    stats_s = est.init_stats(sizes, dtype=jnp.float32)
+    stats_b = est.init_stats(sizes, dtype=jnp.float32)
+    rng = np.random.default_rng(seed)
+    used = 0
+    res = None
+    for j in range(num_chunks):
+        for _ in range(probes_per_chunk):
+            gs = float(gnorm_fn(b_small, int(rng.integers(1 << 30))))
+            gb = float(gnorm_fn(b_big, int(rng.integers(1 << 30))))
+            used += 1
+            stats_s = stats_s._replace(
+                m=stats_s.m.at[j].add(1), ysum=stats_s.ysum.at[j].add(gs),
+                ysq=stats_s.ysq.at[j].add(gs * gs),
+                psum=stats_s.psum.at[j].add(1.0))
+            stats_b = stats_b._replace(
+                m=stats_b.m.at[j].add(1), ysum=stats_b.ysum.at[j].add(gb),
+                ysq=stats_b.ysq.at[j].add(gb * gb),
+                psum=stats_b.psum.at[j].add(1.0))
+        if j < 1:
+            continue
+        es, vs, ok_s = est.avg_estimate(stats_s)
+        eb, vb, ok_b = est.avg_estimate(stats_b)
+        g2 = (b_big * float(eb) - b_small * float(es)) / (b_big - b_small)
+        tr_sigma = ((float(es) - float(eb))
+                    / (1.0 / b_small - 1.0 / b_big))
+        b_simple = tr_sigma / max(g2, 1e-12)
+        # delta-method CI on the ratio via endpoint propagation
+        los, his = est.confidence_bounds(es, vs, confidence)
+        lob, hib = est.confidence_bounds(eb, vb, confidence)
+        cands = []
+        for a in (float(los), float(his)):
+            for b in (float(lob), float(hib)):
+                g2c = (b_big * b - b_small * a) / (b_big - b_small)
+                trc = (a - b) / (1.0 / b_small - 1.0 / b_big)
+                if g2c > 0:
+                    cands.append(trc / g2c)
+        lo, hi = (min(cands), max(cands)) if cands else (-np.inf, np.inf)
+        res = NoiseScaleResult(b_simple=b_simple, lo=lo, hi=hi,
+                               gnorm_small=float(es), gnorm_big=float(eb),
+                               batches_used=used)
+        if bool(ok_s) and bool(ok_b) and hi - lo <= epsilon * abs(b_simple):
+            return res
+    return res

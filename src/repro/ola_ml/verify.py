@@ -1,0 +1,60 @@
+"""Ingest verification gate: the paper's PTF workflow on training data.
+
+Before the trainer consumes a corpus segment it runs the verification-query
+sequence over the segment's raw metadata table with the OLA engine.  Queries
+stop as soon as the HAVING predicate is decidable from the confidence bounds
+(often after sampling a few % of the rows) — exactly the batch-verification
+use-case of the paper's Section 1, with TPU-hours instead of PostgreSQL
+load-hours as the resource being protected.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+from repro.core.controller import EstimationController, QueryResult
+from repro.core.engine import EngineConfig
+from repro.core.queries import Query
+
+
+@dataclasses.dataclass
+class GateDecision:
+    admitted: bool
+    results: list          # per-query QueryResult
+    tuples_ratio: float    # fraction of metadata rows actually extracted
+    failed_query: str = ""
+
+
+class IngestGate:
+    def __init__(self, queries: Sequence[Query],
+                 config: EngineConfig = EngineConfig(num_workers=4,
+                                                     strategy="resource_aware"),
+                 synopsis_budget_tuples: int = 0):
+        self.queries = list(queries)
+        self.config = config
+        self.synopsis_budget = synopsis_budget_tuples
+
+    def check(self, meta_store) -> GateDecision:
+        ctrl = EstimationController(
+            meta_store, self.config,
+            synopsis_budget_tuples=self.synopsis_budget)
+        results = ctrl.run_verification(self.queries)
+        admitted = len(results) == len(self.queries)
+        failed = ""
+        for q, r in zip(self.queries, results):
+            verdict = int(r.decisions[0])
+            ok = verdict == 1 or (verdict == -1 and _exact_pass(q, r))
+            if not ok:
+                admitted = False
+                failed = q.name
+                break
+        ratio = (sum(r.tuples_ratio for r in results) / max(len(results), 1))
+        return GateDecision(admitted=admitted, results=results,
+                            tuples_ratio=ratio, failed_query=failed)
+
+
+def _exact_pass(q: Query, r: QueryResult) -> bool:
+    est = float(r.final_estimate[0])
+    t = q.having.threshold
+    return {"<": est < t, "<=": est <= t, ">": est > t, ">=": est >= t}[q.having.op]

@@ -1,0 +1,6 @@
+"""Roofline accounting from dry-run artifacts (no hardware required)."""
+
+from repro.roofline.analysis import analyze_lowered, collective_bytes
+from repro.roofline.hw import TPU_V5E
+
+__all__ = ["TPU_V5E", "analyze_lowered", "collective_bytes"]

@@ -1,0 +1,227 @@
+"""Three-term roofline from the compiled dry-run artifact.
+
+    compute_s    = HLO_FLOPs_per_chip / peak_FLOPs
+    memory_s     = HLO_bytes_per_chip / HBM_bw
+    collective_s = transported_ICI_bytes_per_chip / (link_bw · links)
+
+``compiled.cost_analysis()`` supplies FLOPs/bytes of the *per-device* SPMD
+program (GSPMD emits one partitioned module).  Collective bytes are NOT in
+cost_analysis: :func:`collective_bytes` parses the compiled HLO text and sums
+transported volume per op with ring-algorithm conventions:
+
+    all-reduce      2 · size · (g-1)/g        (reduce-scatter + all-gather)
+    all-gather      size_out · (g-1)/g
+    reduce-scatter  size_in  · (g-1)/g
+    all-to-all      size · (g-1)/g
+    collective-permute  size
+
+where ``g`` is the replica-group size parsed from the op's
+``replica_groups`` attribute (both explicit ``{{0,1,..}}`` and iota
+``[n,g]<=[N]`` forms).
+
+MODEL_FLOPS uses 6·N·D for training and 2·N·D for serving (N = real —
+unpadded — parameter count, N_active for MoE), so the ``useful_flops_ratio``
+column charges head/vocab padding, remat recompute and dispatch overhead
+honestly.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+from repro.roofline.hw import TPU_V5E, HWSpec
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\(?)([a-z0-9\[\],{}\s]*?)\)?\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", re.IGNORECASE)
+
+_SHAPE_RE = re.compile(r"(pred|bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64|u64)"
+                       r"\[([0-9,]*)\]")
+
+_GROUPS_EXPLICIT_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_EXPLICIT_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    return default
+
+
+def collective_bytes(hlo_text: str, default_group: int = 2) -> dict:
+    """Transported ICI bytes per chip, by collective kind (see module doc)."""
+    out = {"all-reduce": 0.0, "all-gather": 0.0, "reduce-scatter": 0.0,
+           "all-to-all": 0.0, "collective-permute": 0.0, "count": 0}
+    for line in hlo_text.splitlines():
+        line_s = line.strip()
+        m = _COLL_RE.search(line_s)
+        if not m or line_s.startswith("ROOT tuple"):
+            continue
+        kind = m.group(2).lower()
+        # result shape(s): text before the op name on the lhs
+        lhs = line_s.split("=", 1)
+        res_bytes = _shape_bytes(lhs[0]) if len(lhs) > 1 else 0
+        if res_bytes == 0:
+            res_bytes = _shape_bytes(m.group(1))
+        g = _group_size(line_s, default_group)
+        frac = (g - 1) / max(g, 1)
+        if kind == "all-reduce":
+            vol = 2.0 * res_bytes * frac
+        elif kind == "all-gather":
+            vol = res_bytes * frac
+        elif kind == "reduce-scatter":
+            vol = res_bytes * (g - 1)      # input = g × output
+        elif kind == "all-to-all":
+            vol = res_bytes * frac
+        else:  # collective-permute
+            vol = float(res_bytes)
+        out[kind] += vol
+        out["count"] += 1
+    out["total"] = sum(v for k, v in out.items()
+                       if k not in ("count", "total"))
+    return out
+
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*([a-z0-9]+\[[0-9,]*\])")
+_DOT_OPERANDS_RE = re.compile(r"dot\(\s*%?([\w.\-]+)\s*,\s*%?([\w.\-]+)")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_ONE_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _dims_of(shape_text: str) -> list[int]:
+    m = _ONE_SHAPE_RE.search(shape_text)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+def matmul_flops_from_hlo(hlo_text: str) -> dict:
+    """Exact per-device matmul FLOPs: Σ over `dot` ops of 2·|out|·K.
+
+    XLA:CPU's ``cost_analysis()['flops']`` charges fused elementwise /
+    broadcast / reduce traffic at rates that have nothing to do with the TPU
+    MXU, so the roofline compute term uses the dots parsed from the
+    partitioned HLO instead (contracting sizes come from each dot's
+    ``lhs_contracting_dims`` against its operand's shape).  Ops inside
+    rolled `while` bodies are counted once — the dry-run unrolls layer scans
+    precisely so this is exact (remaining rolled loops: sLSTM time scan,
+    noted in EXPERIMENTS.md).
+    """
+    shapes: dict[str, list[int]] = {}
+    total = 0.0
+    count = 0
+    unresolved = 0
+    for raw in hlo_text.splitlines():
+        line = raw.strip()
+        dm = _DEF_RE.match(line)
+        if dm:
+            shapes[dm.group(1)] = _dims_of(dm.group(2))
+        if " dot(" not in line and not line.startswith("dot("):
+            continue
+        if dm is None:
+            continue
+        out_dims = shapes.get(dm.group(1), [])
+        ops = _DOT_OPERANDS_RE.search(line)
+        cm = _LHS_CONTRACT_RE.search(line)
+        if not ops or cm is None:
+            unresolved += 1
+            continue
+        lhs = shapes.get(ops.group(1))
+        if lhs is None:
+            unresolved += 1
+            continue
+        k = 1
+        for d in (int(x) for x in cm.group(1).split(",") if x):
+            if d < len(lhs):
+                k *= lhs[d]
+        out_n = 1
+        for d in out_dims:
+            out_n *= d
+        total += 2.0 * out_n * k
+        count += 1
+    return {"matmul_flops": total, "dot_count": count,
+            "dot_unresolved": unresolved}
+
+
+def model_flops(arch: str, shape: str, n_chips: int) -> Optional[float]:
+    """6·N·D (train) / 2·N·D (serve) with the *real* parameter count."""
+    from repro.configs.registry import SHAPES, get_config
+    from repro.configs.base import active_param_count
+
+    cfg = get_config(arch)
+    spec = SHAPES[shape]
+    n = active_param_count(cfg)
+    tokens = spec.global_batch * (spec.seq_len if spec.kind != "decode" else 1)
+    factor = 6.0 if spec.kind == "train" else 2.0
+    return factor * n * tokens
+
+
+def analyze_lowered(lowered, compiled, arch: str, shape: str, n_chips: int,
+                    hw: HWSpec = TPU_V5E) -> dict:
+    from repro.roofline.hlo_walk import walk
+
+    cost = compiled.cost_analysis() or {}
+    raw_flops = float(cost.get("flops", 0.0))
+    # fusion-boundary HBM traffic from the walker (XLA:CPU's "bytes accessed"
+    # counts fusion internals and misses loop trip counts)
+    text = compiled.as_text()
+    w = walk(text)
+    bytes_accessed = float(w["hbm_bytes"])
+    coll = dict(w["collective"], count=w["collective_count"])
+    mm = {"matmul_flops": w["matmul_flops"], "dot_count": w["dot_count"],
+          "dot_unresolved": w["unresolved_trip_counts"]}
+    flops = mm["matmul_flops"]
+
+    compute_s = flops / hw.peak_flops_bf16
+    memory_s = bytes_accessed / hw.hbm_bw
+    collective_s = coll["total"] / (hw.ici_link_bw * hw.ici_links)
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+
+    mf = model_flops(arch, shape, n_chips)
+    useful = (mf / (flops * n_chips)) if (mf and flops) else None
+    bound_s = max(terms.values())
+    return {
+        "roofline": {
+            **{k: float(v) for k, v in terms.items()},
+            "dominant": dominant,
+            "bound_s": bound_s,
+            "collective_detail": {k: float(v) for k, v in coll.items()},
+            "model_flops": mf,
+            "hlo_flops_per_chip": flops,          # exact matmul flops (dots)
+            "hlo_flops_raw_per_chip": raw_flops,  # XLA:CPU cost model, fyi
+            "dot_count": mm["dot_count"],
+            "dot_unresolved": mm["dot_unresolved"],
+            "hlo_bytes_per_chip": bytes_accessed,
+            "useful_flops_ratio": useful,
+            # fraction of the step the dominant resource is actually needed
+            # by the useful model FLOPs — the score we hillclimb:
+            "roofline_fraction": (
+                (mf / n_chips / hw.peak_flops_bf16) / bound_s
+                if (mf and bound_s > 0) else None),
+        }
+    }

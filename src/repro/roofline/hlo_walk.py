@@ -1,0 +1,323 @@
+"""While-loop-aware HLO cost extraction.
+
+XLA's ``cost_analysis()`` counts a ``while`` body once regardless of trip
+count, and fully unrolling 88-layer stacks for the dry-run costs tens of
+compile-minutes per cell.  This walker keeps scans *rolled* (fast compiles,
+faithful per-layer collective schedules) and recovers exact totals itself:
+
+1. split the compiled HLO text into computations;
+2. per computation, tally dot FLOPs (2·|out|·K from the operand shape and
+   ``lhs_contracting_dims``) and collective transport bytes (ring-algorithm
+   conventions, replica-group sizes parsed per op);
+3. build the call graph (``body=/condition=`` for whiles, ``calls=`` for
+   fusions, ``branch_computations`` for conditionals), parse each loop's trip
+   count from its condition computation (``compare(gte, constant(N))``);
+4. propagate multipliers from ENTRY (trip count on while-body edges) and sum.
+
+Validated against fully-unrolled compiles of the same cells
+(tests/test_sharding_roofline.py + EXPERIMENTS.md §Dry-run methodology).
+Unresolvable trip counts fall back to 1 and are reported in ``unresolved``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COMP_HEAD_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*(?:\(.*)?\{?\s*$")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+)$")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_CALL_ATTR_RE = re.compile(
+    r"(?:condition|body|calls|to_apply)=%?([\w.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_WHILE_RE = re.compile(r"\bwhile\(")
+_COND_BODY_RE = re.compile(r"condition=%?([\w.\-]+).*?body=%?([\w.\-]+)")
+_DOT_OPS_RE = re.compile(r"\bdot\(\s*%?([\w.\-]+)\s*,\s*%?([\w.\-]+)")
+_LHS_C_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_COMPARE_RE = re.compile(r"compare\(\s*%?([\w.\-]+)\s*,\s*%?([\w.\-]+)\)")
+_GROUPS_EXPLICIT_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_COLL_KIND_RE = re.compile(
+    r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_OPERAND_REF_RE = re.compile(r"%([\w.\-]+)")
+# ops that move no HBM bytes of their own
+_FREE_OPS = ("parameter(", "tuple(", "get-tuple-element(", "constant(",
+             "bitcast(", "after-all(", "partition-id(", "replica-id(")
+
+COLLECTIVE_KINDS = ("all-reduce", "all-gather", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+
+def _first_shape(text: str):
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return None, 0
+    dims = [int(d) for d in m.group(2).split(",") if d]
+    n = 1
+    for d in dims:
+        n *= d
+    return dims, n * _DTYPE_BYTES.get(m.group(1), 4)
+
+
+def _all_shapes_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dtype, 4)
+    return total
+
+
+@dataclasses.dataclass
+class CompCost:
+    dot_flops: float = 0.0
+    dot_count: int = 0
+    coll: dict = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVE_KINDS})
+    coll_count: int = 0
+    hbm_bytes: float = 0.0    # operand+result bytes at fusion boundaries
+    children: list = dataclasses.field(default_factory=list)  # (name, kind)
+    while_pairs: list = dataclasses.field(default_factory=list)  # (cond, body)
+    constants: dict = dataclasses.field(default_factory=dict)
+    compare_ops: list = dataclasses.field(default_factory=list)
+
+
+def split_computations(hlo_text: str) -> dict[str, list[str]]:
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for raw in hlo_text.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        if not line.startswith(" ") and line.endswith("{") and ("(" in line):
+            head = line.split("(")[0].strip()
+            name = head.replace("ENTRY", "").strip().lstrip("%")
+            cur = name
+            comps[cur] = []
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(line.strip())
+    return comps
+
+
+def entry_name(hlo_text: str) -> str:
+    for line in hlo_text.splitlines():
+        if line.startswith("ENTRY"):
+            return line.split("(")[0].replace("ENTRY", "").strip().lstrip("%")
+    # fallback: last computation
+    return list(split_computations(hlo_text))[-1]
+
+
+def slice_fusion_names(comps: dict[str, list[str]]) -> set:
+    """Names of fused computations that contain a slice-like op: a fusion
+    calling one of these touches only slice-sized HBM regions per call."""
+    out = set()
+    for name, lines in comps.items():
+        for line in lines:
+            if ("dynamic-slice(" in line or "dynamic-update-slice(" in line
+                    or " gather(" in line):
+                out.add(name)
+                break
+    return out
+
+
+def analyze_computation(lines: list[str], default_group: int,
+                        slice_fusions: set = frozenset()) -> CompCost:
+    cost = CompCost()
+    shapes: dict[str, list[int]] = {}
+    out_bytes: dict[str, int] = {}
+    for line in lines:
+        dm = _DEF_RE.match(line)
+        name = None
+        if dm:
+            name = dm.group(1)
+            rhs = dm.group(2)
+            dims, nbytes = _first_shape(rhs)
+            if dims is not None:
+                shapes[name] = dims
+                out_bytes[name] = nbytes
+            # HBM traffic model: every non-free instruction at this level
+            # reads its operands and writes its result once (fusion bodies
+            # are excluded by the caller via bytes_mult=0).  Slice-like ops
+            # only touch slice-sized regions: a dynamic-slice of a
+            # loop-invariant sequence reads one step per trip (charging the
+            # full operand ×trip_count overstated xlstm prefill by 60x), and
+            # dynamic-update-slice writes in place.
+            if not any(op in rhs for op in _FREE_OPS):
+                paren = rhs.split("(", 1)
+                operand_sizes = []
+                if len(paren) > 1:
+                    args = paren[1].split(")")[0]
+                    for ref in _OPERAND_REF_RE.findall(args):
+                        operand_sizes.append(out_bytes.get(ref, 0))
+                is_dus = ("dynamic-update-slice" in line
+                          or "dynamic_update_slice" in line)
+                callee = _CALL_ATTR_RE.search(line)
+                fused_slice = (("fusion(" in rhs) and callee is not None
+                               and callee.group(1) in slice_fusions)
+                is_slice = ("dynamic-slice" in line or "dynamic_slice" in line
+                            or " gather(" in rhs or "/gather" in line
+                            or fused_slice)
+                if is_dus:
+                    # in-place update: read+write the slice region (smallest
+                    # non-trivial operand approximates the update)
+                    small = min((o for o in operand_sizes if o > 0),
+                                default=nbytes)
+                    small = min(small, nbytes)
+                    cost.hbm_bytes += 2 * small
+                elif is_slice:
+                    cost.hbm_bytes += 2 * nbytes   # read slice + write out
+                else:
+                    cost.hbm_bytes += nbytes + sum(operand_sizes)
+        # constants (for trip counts)
+        cm = _CONST_RE.search(line)
+        if dm and cm and "s32[]" in line or (dm and cm and "s64[]" in line):
+            cost.constants[name] = int(cm.group(1))
+        if "compare(" in line:
+            pm = _COMPARE_RE.search(line)
+            if pm:
+                cost.compare_ops.append((pm.group(1), pm.group(2)))
+        # call edges
+        if _WHILE_RE.search(line):
+            wb = _COND_BODY_RE.search(line)
+            if wb:
+                cost.while_pairs.append((wb.group(1), wb.group(2)))
+            else:  # attribute order variant
+                cm_ = re.search(r"condition=%?([\w.\-]+)", line)
+                bm_ = re.search(r"body=%?([\w.\-]+)", line)
+                if cm_ and bm_:
+                    cost.while_pairs.append((cm_.group(1), bm_.group(1)))
+        else:
+            # fusion/reduce bodies: flops counted, internal bytes are not
+            # HBM traffic (that's the point of fusion)
+            for callee in _CALL_ATTR_RE.findall(line):
+                cost.children.append((callee, "fused"))
+        bm = _BRANCH_RE.search(line)
+        if bm:
+            for c in bm.group(1).split(","):
+                cost.children.append((c.strip().lstrip("%"), "call"))
+        # dots
+        if " dot(" in line or line.startswith("dot("):
+            ops = _DOT_OPS_RE.search(line)
+            lc = _LHS_C_RE.search(line)
+            out_dims = shapes.get(name or "", [])
+            if ops and lc is not None:
+                lhs = shapes.get(ops.group(1))
+                k = 1
+                if lhs:
+                    for d in (int(x) for x in lc.group(1).split(",") if x):
+                        if d < len(lhs):
+                            k *= lhs[d]
+                out_n = 1
+                for d in out_dims:
+                    out_n *= d
+                cost.dot_flops += 2.0 * out_n * k
+                cost.dot_count += 1
+        # collectives
+        km = _COLL_KIND_RE.search(line)
+        if km and dm:
+            kind = km.group(1)
+            if "-done(" in line:
+                continue  # volume charged on the -start op
+            res_bytes = _all_shapes_bytes(line.split("=", 1)[0])
+            if res_bytes == 0:
+                # fall back: first shape on the rhs
+                _, res_bytes = _first_shape(dm.group(2))
+            g = default_group
+            m1 = _GROUPS_EXPLICIT_RE.search(line)
+            m2 = _GROUPS_IOTA_RE.search(line)
+            if m1:
+                g = len(m1.group(1).split(","))
+            elif m2:
+                g = int(m2.group(2))
+            frac = (g - 1) / max(g, 1)
+            if kind == "all-reduce":
+                vol = 2.0 * res_bytes * frac
+            elif kind == "all-gather":
+                vol = res_bytes * frac
+            elif kind == "reduce-scatter":
+                vol = res_bytes * (g - 1)
+            elif kind == "all-to-all":
+                vol = res_bytes * frac
+            else:
+                vol = float(res_bytes)
+            cost.coll[kind] += vol
+            cost.coll_count += 1
+    return cost
+
+
+def _trip_count(cond_cost: CompCost) -> int | None:
+    """Loop bound from the condition computation: compare(gte, constant(N))."""
+    for a, b in cond_cost.compare_ops:
+        for side in (a, b):
+            if side in cond_cost.constants:
+                return cond_cost.constants[side]
+    # single s32 constant in the computation: take it
+    if len(cond_cost.constants) == 1:
+        return next(iter(cond_cost.constants.values()))
+    return None
+
+
+def walk(hlo_text: str, default_group: int = 2) -> dict:
+    comps = split_computations(hlo_text)
+    sfuse = slice_fusion_names(comps)
+    costs = {n: analyze_computation(ls, default_group, sfuse)
+             for n, ls in comps.items()}
+    entry = entry_name(hlo_text)
+
+    total_flops = 0.0
+    total_coll = {k: 0.0 for k in COLLECTIVE_KINDS}
+    total_bytes = 0.0
+    dot_count = 0
+    coll_count = 0
+    unresolved = 0
+    visited_stack = []
+
+    def visit(name: str, mult: float, bytes_mult: float):
+        nonlocal total_flops, total_bytes, dot_count, coll_count, unresolved
+        c = costs.get(name)
+        if c is None or name in visited_stack:
+            return
+        visited_stack.append(name)
+        total_flops += c.dot_flops * mult
+        total_bytes += c.hbm_bytes * bytes_mult
+        dot_count += c.dot_count
+        coll_count += c.coll_count
+        for k in COLLECTIVE_KINDS:
+            total_coll[k] += c.coll[k] * mult
+        for cond, body in c.while_pairs:
+            trip = _trip_count(costs.get(cond, CompCost()))
+            if trip is None:
+                trip = 1
+                unresolved += 1
+            visit(cond, mult, 0.0)
+            visit(body, mult * trip, bytes_mult * trip)
+        for child, _kind in c.children:
+            visit(child, mult, 0.0)
+        visited_stack.pop()
+
+    visit(entry, 1.0, 1.0)
+    total_coll["total"] = sum(total_coll.values())
+    return {
+        "matmul_flops": total_flops,
+        "dot_count": dot_count,
+        "collective": total_coll,
+        "collective_count": coll_count,
+        "hbm_bytes": total_bytes,
+        "unresolved_trip_counts": unresolved,
+        "num_computations": len(comps),
+    }

@@ -1,0 +1,23 @@
+"""Target-hardware constants (TPU v5e), per the assignment brief."""
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class HWSpec:
+    name: str
+    peak_flops_bf16: float     # per chip
+    hbm_bw: float              # bytes/s per chip
+    ici_link_bw: float         # bytes/s per link
+    ici_links: int             # usable links per chip (2D torus, bidirectional)
+    hbm_bytes: float
+
+
+TPU_V5E = HWSpec(
+    name="tpu-v5e",
+    peak_flops_bf16=197e12,
+    hbm_bw=819e9,
+    ici_link_bw=50e9,
+    ici_links=2,       # conservative: one bidirectional ring axis in flight
+    hbm_bytes=16e9,
+)

@@ -1,0 +1,24 @@
+"""Sampling substrate: keyed bijective permutations + reservoir helpers.
+
+The paper shuffles the tuples of every chunk in memory (Section 4.1) and keeps
+independent orders across chunks.  Materialising a permutation array per chunk
+is hostile to the TPU memory hierarchy, so we use a keyed Feistel bijection
+evaluated on the fly: the synopsis (Section 6) then only has to remember
+``(key_j, start_j, count_j)`` to describe its circular sample window.
+"""
+
+from repro.sampling.permutation import (
+    chunk_seed,
+    feistel_permute,
+    permutation_window,
+    random_chunk_order,
+)
+from repro.sampling.reservoir import reservoir_insertion_order
+
+__all__ = [
+    "chunk_seed",
+    "feistel_permute",
+    "permutation_window",
+    "random_chunk_order",
+    "reservoir_insertion_order",
+]

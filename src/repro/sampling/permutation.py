@@ -1,0 +1,170 @@
+"""Keyed bijective permutations over ``[0, M)`` via a balanced Feistel network.
+
+Why Feistel and not ``jax.random.permutation``:
+
+* OLA-RAW needs an *incremental* random order per chunk (Section 4.1): tuples
+  are extracted a few at a time, the synopsis keeps a *circular window* into
+  the order (Section 6.2), and subsequent queries continue from ``start+count``.
+  A bijection evaluated on demand gives O(1) state per chunk instead of an
+  O(M_j) materialised permutation for every one of thousands of chunks.
+* The permutation must be recomputable bit-for-bit after a checkpoint restore
+  and on any worker — a pure keyed function is trivially so.
+
+Construction: 4-round balanced Feistel over ``2 * half_bits`` bits with a
+multiply-xor round function, cycle-walking down to the true domain ``M``.
+Balanced Feistel networks with >= 3 rounds are permutations of the full
+power-of-two domain for *any* round function; cycle-walking restricts the
+permutation to ``[0, M)`` while preserving bijectivity.  The domain is at most
+``4 * M`` so the expected walk length is < 4 steps.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+_NUM_ROUNDS = 4
+# SplitMix32 / Murmur3 finalizer constants.
+_C1 = np.uint32(0x9E3779B9)
+_C2 = np.uint32(0x85EBCA6B)
+_C3 = np.uint32(0xC2B2AE35)
+
+
+def _u32(x) -> jnp.ndarray:
+    return jnp.asarray(x).astype(jnp.uint32)
+
+
+def _mix32(x: jnp.ndarray) -> jnp.ndarray:
+    """SplitMix32 finalizer: a cheap, well-distributed 32-bit mixer."""
+    x = x.astype(jnp.uint32)
+    x = (x ^ (x >> 16)) * _C1
+    x = (x ^ (x >> 13)) * _C2
+    x = x ^ (x >> 16)
+    return x
+
+
+def chunk_seed(master_seed, chunk_id) -> jnp.ndarray:
+    """Derive an independent per-chunk permutation key (Section 4.1 requires
+    independent orders across chunks)."""
+    return _mix32(_u32(master_seed) ^ (_mix32(_u32(chunk_id)) + _C3))
+
+
+def _round_keys(seed: jnp.ndarray) -> jnp.ndarray:
+    """(NUM_ROUNDS,) uint32 round keys derived from one seed."""
+    r = jnp.arange(_NUM_ROUNDS, dtype=jnp.uint32)
+    return _mix32(_u32(seed) + (r + jnp.uint32(1)) * _C2)
+
+
+def _half_bits(domain_m: int) -> int:
+    """Half-width (in bits) of the smallest even-width Feistel domain >= M."""
+    m = max(int(domain_m), 2)
+    total = max(2, int(np.ceil(np.log2(m))))
+    total += total % 2  # balanced network needs an even bit count
+    return total // 2
+
+
+def _feistel_round_trip(x: jnp.ndarray, keys: jnp.ndarray, hb: int) -> jnp.ndarray:
+    """One full 4-round Feistel pass over the 2*hb-bit domain."""
+    mask = jnp.uint32((1 << hb) - 1)
+    left = (x >> hb) & mask
+    right = x & mask
+    for r in range(_NUM_ROUNDS):
+        f = _mix32(right ^ keys[r]) & mask
+        left, right = right, left ^ f
+    return ((left << hb) | right).astype(jnp.uint32)
+
+
+def feistel_permute(seed, index, domain_m: int) -> jnp.ndarray:
+    """``perm_seed(index)`` for ``index in [0, M)`` — a bijection on ``[0, M)``.
+
+    ``index`` may be any integer array; the result has the same shape with
+    dtype int32.  ``domain_m`` must be a static Python int (it fixes the
+    Feistel width), which is always the case for chunk tuple counts coming
+    from file metadata.
+    """
+    domain_m = int(domain_m)
+    if domain_m <= 1:
+        return jnp.zeros_like(jnp.asarray(index), dtype=jnp.int32)
+    hb = _half_bits(domain_m)
+    keys = _round_keys(seed)
+    m = jnp.uint32(domain_m)
+
+    def walk(x):
+        # Cycle-walk: re-encrypt until the value lands inside [0, M).
+        def cond(v):
+            return v >= m
+
+        def body(v):
+            return _feistel_round_trip(v, keys, hb)
+
+        first = _feistel_round_trip(x, keys, hb)
+        return jax.lax.while_loop(cond, body, first)
+
+    idx = _u32(index)
+    out = jax.vmap(walk)(idx.reshape(-1)).reshape(idx.shape)
+    return out.astype(jnp.int32)
+
+
+def feistel_permute_dyn(seed, index, m_dynamic, width_m: int) -> jnp.ndarray:
+    """Like :func:`feistel_permute` but with a *traced* target domain.
+
+    The Feistel width is fixed by the static ``width_m`` (>= any runtime
+    ``m_dynamic``); cycle-walking then restricts to ``[0, m_dynamic)``.  Used
+    inside the jitted engine where per-chunk tuple counts ``M_j`` are traced
+    values.  Walk length is geometric with mean ``width_domain / m_dynamic`` —
+    fine when chunk sizes are within a small factor of the maximum (chunk
+    sizing follows the paper's "tens-of-MB, near-uniform" guidance), and the
+    loop is bounded regardless because the walk visits a permutation cycle.
+    """
+    width_m = int(width_m)
+    hb = _half_bits(max(width_m, 2))
+    keys = _round_keys(seed)
+    m = jnp.maximum(_u32(m_dynamic), jnp.uint32(1))
+
+    def walk(x, mj):
+        def cond(v):
+            return v >= mj
+
+        def body(v):
+            return _feistel_round_trip(v, keys, hb)
+
+        first = _feistel_round_trip(x, keys, hb)
+        return jax.lax.while_loop(cond, body, first)
+
+    idx = _u32(index)
+    flat = jax.vmap(walk, in_axes=(0, None))(idx.reshape(-1), m)
+    return flat.reshape(idx.shape).astype(jnp.int32)
+
+
+def permutation_window_dyn(seed, start, count: int, m_dynamic, width_m: int) -> jnp.ndarray:
+    """Dynamic-domain circular window: ``perm[start : start+count] mod M_j``."""
+    offs = (jnp.asarray(start, jnp.int32) + jnp.arange(count, dtype=jnp.int32))
+    offs = offs % jnp.maximum(jnp.asarray(m_dynamic, jnp.int32), 1)
+    return feistel_permute_dyn(seed, offs, m_dynamic, width_m)
+
+
+def permutation_window(seed, start, count: int, domain_m: int) -> jnp.ndarray:
+    """Positions ``perm[start : start+count]`` of the chunk's random order,
+    wrapping circularly (the Section 6.2 "circular random scan").
+
+    ``count`` is static; ``start`` may be traced.  Returns ``(count,)`` int32
+    tuple indices.
+    """
+    domain_m = int(domain_m)
+    offs = (jnp.asarray(start, dtype=jnp.int32) + jnp.arange(count, dtype=jnp.int32))
+    offs = offs % jnp.int32(max(domain_m, 1))
+    return feistel_permute(seed, offs, domain_m)
+
+
+def random_chunk_order(master_seed: int, num_chunks: int) -> np.ndarray:
+    """The predetermined random chunk processing order (Section 3).
+
+    Committed *before* execution starts — this is what makes the started-set a
+    content-independent prefix and is the anchor of the no-inspection-paradox
+    argument.  Host-side numpy on purpose: the schedule is part of the query
+    plan, not of the jitted computation, and must be cheap to checkpoint.
+    """
+    rng = np.random.default_rng(np.uint32(master_seed))
+    return rng.permutation(num_chunks).astype(np.int32)

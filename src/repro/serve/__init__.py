@@ -1,0 +1,5 @@
+"""Serving plane: batched decode engine over the model zoo."""
+
+from repro.serve.engine import ServeEngine
+
+__all__ = ["ServeEngine"]

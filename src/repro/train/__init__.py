@@ -1,0 +1,7 @@
+"""Training plane: optimizer, train step, checkpointing, trainer loop."""
+
+from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
+from repro.train.train_step import TrainState, make_train_step
+
+__all__ = ["AdamWConfig", "TrainState", "adamw_init", "adamw_update",
+           "make_train_step"]

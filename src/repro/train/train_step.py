@@ -1,0 +1,74 @@
+"""The jitted training step: loss → grads → (optional compression) → AdamW.
+
+Gradient all-reduce across ``data``/``pod`` axes is implicit in GSPMD (the
+batch is sharded, parameters are not replicated along those axes except
+across pods); the optional error-feedback compression hook quantizes
+gradients before the update for bandwidth-bound regimes (DESIGN.md §7).
+
+Microbatching: ``accum_steps > 1`` splits the per-step batch and accumulates
+grads in f32 via ``lax.scan`` — activation memory scales with the microbatch
+while the optimizer sees the full global batch.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.train.optimizer import AdamWConfig, OptState, adamw_init, adamw_update
+
+
+class TrainState(NamedTuple):
+    params: dict
+    opt: OptState
+    step: jnp.ndarray
+    compress_error: Optional[dict] = None   # error-feedback residual
+
+
+def init_train_state(params, compress: bool = False) -> TrainState:
+    err = jax.tree.map(jnp.zeros_like, params) if compress else None
+    return TrainState(params=params, opt=adamw_init(params),
+                      step=jnp.zeros((), jnp.int32), compress_error=err)
+
+
+def make_train_step(loss_fn: Callable, opt_cfg: AdamWConfig,
+                    accum_steps: int = 1,
+                    compressor=None) -> Callable:
+    """loss_fn(params, batch) -> scalar.  Returns step(state, batch)."""
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(loss_fn)(params, batch)
+
+    def step(state: TrainState, batch):
+        if accum_steps > 1:
+            def micro(carry, mb):
+                loss_acc, grad_acc = carry
+                loss, grads = grads_of(state.params, mb)
+                grad_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32) / accum_steps,
+                    grad_acc, grads)
+                return (loss_acc + loss / accum_steps, grad_acc), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            mbs = jax.tree.map(
+                lambda x: x.reshape((accum_steps, x.shape[0] // accum_steps)
+                                    + x.shape[1:]), batch)
+            (loss, grads), _ = jax.lax.scan(micro, (0.0, zeros), mbs)
+        else:
+            loss, grads = grads_of(state.params, batch)
+
+        err = state.compress_error
+        if compressor is not None:
+            grads, err = compressor(grads, err)
+
+        params, opt, metrics = adamw_update(opt_cfg, state.params, grads,
+                                            state.opt)
+        new_state = TrainState(params=params, opt=opt, step=state.step + 1,
+                               compress_error=err)
+        metrics = dict(metrics, loss=loss)
+        return new_state, metrics
+
+    return step

@@ -1,0 +1,131 @@
+"""Trainer: segment-gated training loop with checkpoint/restart and failure
+injection.
+
+Flow per segment (the production ingest pattern, DESIGN.md §2):
+
+    1. OLA ingest gate verifies the segment's raw metadata table (PTF-style
+       HAVING sequence, ε-accurate, early-terminated).  Rejected segments
+       are skipped *before* any tokenization or training FLOPs.
+    2. Admitted segments stream batches through the jitted train step.
+    3. Atomic checkpoints every ``ckpt_every`` steps; the failure injector
+       can kill "devices" at a step boundary, triggering the elastic-restart
+       path (rebuild mesh via best_mesh_shape → restore → continue).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.data.corpus import SyntheticCorpus, standard_ingest_queries
+from repro.distributed.fault import FailureInjector, best_mesh_shape
+from repro.models import build_model
+from repro.ola_ml.verify import IngestGate
+from repro.train import checkpoint as ckpt
+from repro.train.optimizer import AdamWConfig
+from repro.train.train_step import init_train_state, make_train_step
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    steps_per_segment: int = 20
+    batch: int = 8
+    seq_len: int = 128
+    ckpt_every: int = 20
+    ckpt_dir: Optional[str] = None
+    max_steps: int = 10_000
+    seed: int = 0
+    gate_epsilon: float = 0.05
+
+
+class Trainer:
+    def __init__(self, model_cfg: ModelConfig, tcfg: TrainerConfig,
+                 opt_cfg: AdamWConfig = AdamWConfig(),
+                 injector: Optional[FailureInjector] = None):
+        self.model_cfg = model_cfg
+        self.tcfg = tcfg
+        self.opt_cfg = opt_cfg
+        self.injector = injector
+        self.model = build_model(model_cfg)
+        self.gate = IngestGate(standard_ingest_queries(tcfg.gate_epsilon))
+        self.step_fn = jax.jit(
+            make_train_step(self.model.loss, opt_cfg), donate_argnums=(0,))
+        self.restarts = 0
+        self.log: list[dict] = []
+
+    def init_state(self):
+        params, _ = self.model.init(jax.random.PRNGKey(self.tcfg.seed))
+        return init_train_state(params)
+
+    def run(self, corpus: SyntheticCorpus, state=None) -> dict:
+        tcfg = self.tcfg
+        state = state or self.init_state()
+        step = int(state.step)
+        admitted = rejected = 0
+        t0 = time.perf_counter()
+
+        for seg in corpus.segments:
+            if step >= tcfg.max_steps:
+                break
+            decision = self.gate.check(seg.meta_store)
+            self.log.append({"event": "gate", "segment": seg.index,
+                             "admitted": decision.admitted,
+                             "tuples_ratio": decision.tuples_ratio,
+                             "failed": decision.failed_query})
+            if not decision.admitted:
+                rejected += 1
+                continue
+            admitted += 1
+            for batch in corpus.batches(seg, tcfg.batch, tcfg.seq_len,
+                                        tcfg.steps_per_segment,
+                                        seed=tcfg.seed):
+                batch = {k: jnp.asarray(v) for k, v in batch.items()}
+                state, metrics = self.step_fn(state, batch)
+                step += 1
+                self.log.append({"event": "step", "step": step,
+                                 "loss": float(metrics["loss"]),
+                                 "grad_norm": float(metrics["grad_norm"])})
+                if tcfg.ckpt_dir and step % tcfg.ckpt_every == 0:
+                    ckpt.save(tcfg.ckpt_dir, step, state,
+                              extra={"segment": seg.index})
+                if self.injector is not None:
+                    delta = self.injector.check(step)
+                    if delta is not None:
+                        state = self._recover(state, delta)
+                        self.restarts += 1
+                if step >= tcfg.max_steps:
+                    break
+
+        losses = [e["loss"] for e in self.log if e["event"] == "step"]
+        return {
+            "steps": step,
+            "admitted": admitted,
+            "rejected": rejected,
+            "restarts": self.restarts,
+            "first_loss": losses[0] if losses else None,
+            "last_loss": losses[-1] if losses else None,
+            "wall_s": time.perf_counter() - t0,
+            "state": state,
+        }
+
+    # ---------------------------------------------------------- recovery --
+    def _recover(self, state, killed_devices: int):
+        """Simulated failure: rebuild a smaller mesh (single-host: recompute
+        the would-be mesh shape for the surviving count), restore the last
+        committed checkpoint — or reuse live state when no ckpt_dir is set."""
+        n_dev = max(len(jax.devices()) - killed_devices, 1)
+        shape = best_mesh_shape(n_dev, model_axis=1)
+        self.log.append({"event": "failure", "survivors": n_dev,
+                         "new_mesh": shape})
+        if self.tcfg.ckpt_dir:
+            last = ckpt.latest_step(self.tcfg.ckpt_dir)
+            if last is not None:
+                template = jax.tree.map(np.asarray, state)
+                return ckpt.restore(self.tcfg.ckpt_dir, last, template)
+        return state

@@ -1,0 +1,64 @@
+"""Estimation controller δ-reporting + verification chain; serve engine."""
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.controller import EstimationController
+from repro.core.engine import EngineConfig
+from repro.core.queries import Having, Linear, Query, TRUE
+from repro.data.generator import make_synthetic_zipf, store_dataset
+from repro.serve.engine import Request, ServeEngine
+
+COEF = tuple(1.0 / (k + 1) for k in range(8))
+
+
+@pytest.fixture(scope="module")
+def store_and_truth():
+    vals = make_synthetic_zipf(4096, 8, seed=3)
+    store = store_dataset(vals, 32, "ascii")
+    return store, float(vals @ np.asarray(COEF) @ np.ones(len(vals)))
+
+
+def test_delta_reports_monotone_time(store_and_truth):
+    store, truth = store_and_truth
+    ctrl = EstimationController(store, EngineConfig(num_workers=2, seed=1),
+                                delta_model_s=0.0005)
+    res = ctrl.run_query([Query(agg="sum", expr=Linear(COEF), epsilon=0.03)],
+                         max_rounds=4000)
+    ts = [r.t_model for r in res.reports]
+    assert all(b >= a for a, b in zip(ts, ts[1:]))
+    assert len(res.reports) >= 2
+    errs = [float(r.err[0]) for r in res.reports]
+    assert errs[-1] <= errs[0]   # accuracy improves over the run
+
+
+def test_verification_chain_stops_at_failure(store_and_truth):
+    store, truth = store_and_truth
+    qs = [
+        Query(agg="sum", expr=Linear(COEF), having=Having("<", truth * 2),
+              epsilon=0.05, name="q_pass"),
+        Query(agg="sum", expr=Linear(COEF), having=Having("<", truth * 0.5),
+              epsilon=0.05, name="q_fail"),
+        Query(agg="count", pred=TRUE, having=Having(">", 0.0),
+              epsilon=0.05, name="q_never"),
+    ]
+    ctrl = EstimationController(store, EngineConfig(num_workers=2, seed=1))
+    results = ctrl.run_verification(qs)
+    assert len(results) == 2          # stopped after the failing query
+    assert int(results[0].decisions[0]) == 1
+    assert int(results[1].decisions[0]) == 0
+
+
+@pytest.mark.parametrize("arch", ["smollm-135m", "zamba2-1.2b", "xlstm-125m"])
+def test_serve_engine_families(arch):
+    cfg = get_config(arch, reduced=True)
+    eng = ServeEngine(cfg, batch_slots=2, max_len=64)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, 4)
+                    .astype(np.int32), max_new=4) for i in range(3)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run(wall_timeout_s=300.0)
+    assert all(r.done for r in reqs)
+    assert all(len(r.out_tokens) == 4 for r in reqs)

@@ -1,0 +1,151 @@
+"""OLA engine behaviour: strategies, prefix invariant, convergence, stopping."""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core.engine import EngineConfig, OLAEngine, STRATEGIES
+from repro.core.queries import Having, Linear, Query, Range, TRUE, expand_group_by
+from repro.data.generator import make_synthetic_zipf, store_dataset
+
+
+@pytest.fixture(scope="module")
+def small_store():
+    vals = make_synthetic_zipf(4096, 8, seed=3)
+    return vals, store_dataset(vals[:, :8], 32, "ascii", uneven=True)
+
+
+COEF = tuple(1.0 / (k + 1) for k in range(8))
+
+
+def _truth(vals, lo=0.0, hi=0.5e8):
+    sel = (vals[:, 0] >= lo) & (vals[:, 0] < hi)
+    return float((vals[:, :8] @ np.asarray(COEF)) @ sel)
+
+
+@pytest.mark.parametrize("strategy", ["holistic", "single_pass",
+                                      "resource_aware", "chunk_level"])
+def test_strategy_converges(small_store, strategy):
+    vals, store = small_store
+    q = Query(agg="sum", expr=Linear(COEF), pred=Range(0, 0.0, 0.5e8),
+              epsilon=0.08)
+    eng = OLAEngine(store, [q],
+                    EngineConfig(num_workers=4, strategy=strategy,
+                                 budget_init=64, seed=5))
+    state, hist = eng.run(max_rounds=2000)
+    rep = hist[-1]
+    assert bool(rep.all_stopped) or bool(rep.exhausted)
+    truth = _truth(vals)
+    est = float(rep.estimate[0])
+    err = float(rep.err[0])
+    # estimate within its own reported CI of the truth (generous factor)
+    assert abs(est - truth) <= max(2.0 * err, 0.10) * abs(truth)
+
+
+def test_full_pass_is_exact(small_store):
+    """Holistic run to exhaustion == exact answer (census degeneracy)."""
+    vals, store = small_store
+    q = Query(agg="sum", expr=Linear(COEF), pred=TRUE, epsilon=1e-9)
+    eng = OLAEngine(store, [q], EngineConfig(num_workers=4,
+                                             strategy="holistic",
+                                             budget_init=256, seed=1))
+    state, hist = eng.run(max_rounds=5000)
+    rep = hist[-1]
+    assert bool(rep.exhausted)
+    truth = float(vals[:, :8] @ np.asarray(COEF) @ np.ones(len(vals)))
+    assert abs(float(rep.estimate[0]) - truth) / abs(truth) < 1e-3
+    assert float(rep.err[0]) < 1e-3
+
+
+def test_prefix_invariant(small_store):
+    """Inspection-paradox guard: the started chunk set is always a prefix of
+    the committed schedule (paper §3/§4.2)."""
+    vals, store = small_store
+    q = Query(agg="sum", expr=Linear(COEF), epsilon=0.001)
+    eng = OLAEngine(store, [q], EngineConfig(num_workers=4,
+                                             strategy="single_pass",
+                                             budget_init=32, seed=9))
+    state = eng.init_state()
+    sched = np.asarray(eng.program.schedule)
+    for _ in range(60):
+        b = eng.budget_ladder(float(state.budget))
+        state, rep = eng.round_fn(b)(state, eng.packed, eng.speeds)
+        started = np.asarray(state.stats.m) > 0
+        head = int(state.head)
+        assert started[sched[:head]].all()
+        assert not started[sched[head:]].any()
+        if bool(rep.exhausted):
+            break
+
+
+def test_straggler_speeds(small_store):
+    """Slow workers claim fewer chunks; the run still completes and is sound
+    (the global-queue mitigation, DESIGN.md §7)."""
+    vals, store = small_store
+    q = Query(agg="sum", expr=Linear(COEF), epsilon=1e-9)
+    eng = OLAEngine(store, [q],
+                    EngineConfig(num_workers=4, strategy="holistic",
+                                 budget_init=64, seed=2,
+                                 worker_speed=(1.0, 1.0, 0.25, 1.0)))
+    state, hist = eng.run(max_rounds=5000)
+    assert bool(hist[-1].exhausted)
+    truth = float((vals[:, :8] @ np.asarray(COEF)).sum())
+    assert abs(float(hist[-1].estimate[0]) - truth) / abs(truth) < 1e-3
+
+
+def test_having_early_stop(small_store):
+    vals, store = small_store
+    truth = _truth(vals, 0.0, np.inf)
+    q = Query(agg="sum", expr=Linear(COEF), pred=TRUE,
+              having=Having("<", truth * 2), epsilon=1e-9)
+    eng = OLAEngine(store, [q], EngineConfig(num_workers=4,
+                                             strategy="resource_aware",
+                                             budget_init=64, seed=5))
+    state, hist = eng.run(max_rounds=2000)
+    rep = hist[-1]
+    assert int(rep.decided[0]) == 1          # decidedly below 2x truth
+    assert int(rep.m_tuples) < len(vals)     # early: not a full pass
+
+
+def test_group_by_runs_simultaneously(small_store):
+    vals, store = small_store
+    base = Query(agg="count", pred=TRUE, epsilon=0.2)
+    qs = expand_group_by(base, group_col=7,
+                         group_values=np.unique(vals[:, 7] // 2.0e7)[:2] * 2.0e7)
+    eng = OLAEngine(store, qs, EngineConfig(num_workers=2,
+                                            strategy="holistic",
+                                            budget_init=128, seed=3))
+    state, hist = eng.run(max_rounds=3000)
+    assert hist[-1].estimate.shape == (len(qs),)
+
+
+def test_chunk_level_barrier(small_store):
+    """chunk_level only estimates from the done-prefix (reordering barrier)."""
+    vals, store = small_store
+    q = Query(agg="sum", expr=Linear(COEF), epsilon=1e-9)
+    eng = OLAEngine(store, [q], EngineConfig(num_workers=4,
+                                             strategy="chunk_level",
+                                             budget_init=32, seed=4))
+    state = eng.init_state()
+    sched = np.asarray(eng.program.schedule)
+    for _ in range(40):
+        b = eng.budget_ladder(float(state.budget))
+        state, rep = eng.round_fn(b)(state, eng.packed, eng.speeds)
+        closed = np.asarray(state.closed)
+        done_prefix = 0
+        for j in sched:
+            if closed[j]:
+                done_prefix += 1
+            else:
+                break
+        assert int(rep.n_chunks) == done_prefix
+        if bool(rep.exhausted):
+            break
+
+
+def test_all_strategies_valid():
+    for s in STRATEGIES:
+        EngineConfig(strategy=s)
+    with pytest.raises(AssertionError):
+        EngineConfig(strategy="bogus")

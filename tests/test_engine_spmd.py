@@ -1,0 +1,57 @@
+"""SPMD engine equivalence: 8 virtual devices == single device, bit-exact.
+
+Runs in a subprocess because XLA_FLAGS must be set before jax initializes.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import numpy as np, jax
+from repro.data.generator import make_synthetic_zipf, store_dataset
+from repro.core.queries import Query, Linear, Range
+from repro.core.engine import OLAEngine, EngineConfig
+from repro.core.engine_spmd import SPMDEngine
+
+vals = make_synthetic_zipf(4096, 8, seed=3)
+store = store_dataset(vals, 16, 'ascii', uneven=True)
+coef = tuple(1.0/(k+1) for k in range(8))
+q = Query(agg='sum', expr=Linear(coef), pred=Range(0, 0.0, 0.5e8), epsilon=0.05)
+cfg = EngineConfig(num_workers=8, strategy='single_pass', budget_init=64,
+                   seed=5, cache_cap=32)
+eng1 = OLAEngine(store, [q], cfg)
+s1, h1 = eng1.run(max_rounds=300)
+mesh = jax.make_mesh((8,), ('data',))
+eng2 = SPMDEngine(store, [q], cfg, mesh)
+s2, h2 = eng2.run(max_rounds=300)
+e1 = np.array([float(r.estimate[0]) for r in h1])
+e2 = np.array([float(r.estimate[0]) for r in h2])
+cache_diff = float(np.abs(np.asarray(s1.cache) - np.asarray(s2.cache)).max())
+print(json.dumps({
+    "rounds": [len(h1), len(h2)],
+    "max_est_diff": float(np.abs(e1[:min(len(e1),len(e2))] - e2[:min(len(e1),len(e2))]).max()),
+    "same_len": len(h1) == len(h2),
+    "cache_diff": cache_diff,
+}))
+"""
+
+
+@pytest.mark.slow
+def test_spmd_bit_exact_vs_single_device():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["same_len"], res
+    assert res["max_est_diff"] == 0.0, res
+    assert res["cache_diff"] == 0.0, res

@@ -1,0 +1,124 @@
+"""Eq. (1)/(2)/(3) statistical correctness (paper §4.3)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import estimators as E
+
+
+def _stats_from(data, chosen, m_per, rng, dtype=jnp.float32):
+    n, mj = data.shape
+    ysum = np.zeros(n)
+    ysq = np.zeros(n)
+    ms = np.zeros(n, np.int32)
+    ps = np.zeros(n)
+    for j in chosen:
+        idx = rng.choice(mj, size=m_per, replace=False)
+        v = data[j, idx]
+        ysum[j] = v.sum()
+        ysq[j] = (v ** 2).sum()
+        ms[j] = m_per
+        ps[j] = m_per
+    st_ = E.init_stats(jnp.full((n,), mj), dtype=dtype)
+    return st_._replace(m=jnp.asarray(ms), ysum=jnp.asarray(ysum, dtype),
+                        ysq=jnp.asarray(ysq, dtype), psum=jnp.asarray(ps, dtype))
+
+
+def test_census_is_exact():
+    rng = np.random.default_rng(0)
+    data = rng.normal(2.0, 1.0, (6, 30))
+    st_ = _stats_from(data, range(6), 30, rng)
+    tau = float(E.tau_hat(st_))
+    var, ok = E.var_hat(st_)
+    assert abs(tau - data.sum()) < 1e-2
+    assert abs(float(var)) < 1e-2
+    assert bool(ok)
+
+
+def test_unbiasedness_montecarlo():
+    rng = np.random.default_rng(7)
+    n, mj, nn, mm = 12, 24, 5, 8
+    data = rng.normal(1.0, 1.0, (n, mj)) * (1 + np.arange(n))[:, None] * 0.2
+    taus, vs = [], []
+    for _ in range(800):
+        chosen = rng.choice(n, nn, replace=False)
+        st_ = _stats_from(data, chosen, mm, rng)
+        taus.append(float(E.tau_hat(st_)))
+        vs.append(float(E.var_hat(st_)[0]))
+    taus = np.asarray(taus)
+    se = taus.std() / np.sqrt(len(taus))
+    assert abs(taus.mean() - data.sum()) < 4 * se
+    y = data.sum(1)
+    ss = ((data - data.mean(1, keepdims=True)) ** 2).sum(1)
+    vt = float(E.variance_true(jnp.asarray(y), jnp.asarray(ss),
+                               jnp.full((n,), mj), nn, jnp.full((n,), mm)))
+    assert abs(np.mean(vs) - vt) / vt < 0.15
+    assert abs(taus.var() - vt) / vt < 0.25
+
+
+def test_merge_equals_union():
+    """Worker-merge additivity: stats(A) ⊕ stats(B) == stats(A ∪ B)."""
+    rng = np.random.default_rng(3)
+    data = rng.normal(size=(4, 20))
+    a = _stats_from(data, [0, 1], 5, np.random.default_rng(1))
+    b = _stats_from(data, [2, 3], 7, np.random.default_rng(2))
+    merged = a.merge(b)
+    assert int(merged.n) == 4
+    np.testing.assert_allclose(np.asarray(merged.ysum),
+                               np.asarray(a.ysum) + np.asarray(b.ysum))
+
+
+def test_single_chunk_variance_is_inf():
+    rng = np.random.default_rng(0)
+    data = rng.normal(size=(5, 10))
+    st_ = _stats_from(data, [2], 4, rng)
+    var, ok = E.var_hat(st_)
+    assert np.isinf(float(var))
+
+
+def test_avg_ratio_estimator():
+    rng = np.random.default_rng(5)
+    n, mj = 8, 64
+    data = rng.uniform(0, 10, (n, mj))
+    sel = data > 4.0  # predicate
+    x = data * sel
+    st_ = E.init_stats(jnp.full((n,), mj))
+    st_ = st_._replace(
+        m=jnp.full((n,), mj, jnp.int32),
+        ysum=jnp.asarray(x.sum(1), jnp.float32),
+        ysq=jnp.asarray((x ** 2).sum(1), jnp.float32),
+        psum=jnp.asarray(sel.sum(1).astype(np.float32)))
+    r, v, ok = E.avg_estimate(st_)
+    truth = data[sel].mean()
+    assert abs(float(r) - truth) < 1e-3
+    assert float(v) < 1e-3  # census: variance ~ 0
+
+
+@pytest.mark.parametrize("op,thr,expect", [
+    ("<", 200.0, 1), ("<", 50.0, 0), ("<", 100.0, -1),
+    (">", 50.0, 1), (">", 200.0, 0),
+])
+def test_having_decisions(op, thr, expect):
+    lo, hi = jnp.asarray(90.0), jnp.asarray(110.0)
+    assert int(E.having_decision(lo, hi, op, thr)) == expect
+
+
+def test_error_ratio_matches_paper_definition():
+    lo, hi, estv = 90.0, 110.0, 100.0
+    assert abs(float(E.error_ratio(jnp.asarray(estv), jnp.asarray(lo),
+                                   jnp.asarray(hi))) - 0.2) < 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(scale=st.floats(0.1, 100.0), n_chunks=st.integers(2, 10))
+def test_tau_scales_linearly(scale, n_chunks):
+    rng = np.random.default_rng(11)
+    data = rng.normal(1.0, 1.0, (n_chunks, 16))
+    st1 = _stats_from(data, range(n_chunks), 8, np.random.default_rng(4))
+    st2 = st1._replace(ysum=st1.ysum * scale, ysq=st1.ysq * scale ** 2)
+    t1, t2 = float(E.tau_hat(st1)), float(E.tau_hat(st2))
+    assert t2 == pytest.approx(t1 * scale, rel=1e-4)

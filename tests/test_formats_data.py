@@ -1,0 +1,75 @@
+"""Raw formats, generators, chunk store."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.data.chunkstore import ChunkStore
+from repro.data.formats import AsciiFixedFormat, BinaryBigEndianFormat
+from repro.data.generator import (
+    bounded_zipf, make_ptf_like, make_synthetic_zipf, make_wiki_like,
+    store_dataset,
+)
+
+
+@settings(max_examples=20, deadline=None)
+@given(vals=st.lists(st.floats(-9e7, 9e7, allow_nan=False, width=32),
+                     min_size=1, max_size=20))
+def test_ascii_roundtrip_property(vals):
+    arr = np.asarray(vals, np.float64)[:, None]
+    fmt = AsciiFixedFormat(1)
+    dec = np.asarray(fmt.decode_ref(jnp.asarray(fmt.encode(arr))))
+    # f32 relative precision + fixed 1e-6 absolute fraction resolution
+    np.testing.assert_allclose(dec[:, 0], arr[:, 0], rtol=2e-6, atol=5e-6)
+
+
+def test_binary_roundtrip_exact():
+    rng = np.random.default_rng(0)
+    vals = rng.normal(scale=1e6, size=(64, 5))
+    fmt = BinaryBigEndianFormat(5)
+    dec = np.asarray(fmt.decode_ref(jnp.asarray(fmt.encode(vals))))
+    np.testing.assert_array_equal(dec, vals.astype(np.float32))
+
+
+def test_zipf_skew_ordering():
+    rng = np.random.default_rng(1)
+    flat = bounded_zipf(rng, 0.0, 4000)
+    skew = bounded_zipf(rng, 3.0, 4000)
+    assert skew.mean() < flat.mean()  # heavy skew concentrates at small ranks
+
+
+def test_generators_shapes():
+    assert make_synthetic_zipf(1000, 16, 0).shape == (1000, 16)
+    assert make_ptf_like(1000, 10, 0).shape == (1000, 8)
+    w, langs = make_wiki_like(1000, 10, 0)
+    assert w.shape == (1000, 4) and len(langs) == 10
+    # ptf time-sortedness within nights produces clumped chunks
+    p = make_ptf_like(2000, 20, 0)
+    assert (np.diff(p[:100, 2]) >= 0).all()
+
+
+def test_store_even_uneven_and_disk(tmp_path):
+    vals = make_synthetic_zipf(512, 4, 0)
+    st_even = store_dataset(vals, 8, "ascii")
+    assert st_even.num_tuples == 512 and st_even.num_chunks == 8
+    st_un = store_dataset(vals, 8, "ascii", uneven=True)
+    assert st_un.num_tuples == 512
+    assert st_un.chunk_sizes.std() > 0
+    st_disk = store_dataset(vals, 4, "binary", directory=str(tmp_path),
+                            name="t")
+    again = ChunkStore.open(str(tmp_path), "t")
+    np.testing.assert_array_equal(again.chunk_bytes(2), st_disk.chunk_bytes(2))
+    full = again.decode_all()
+    np.testing.assert_allclose(full, vals.astype(np.float32), rtol=1e-6)
+
+
+def test_packed_view_masks_padding():
+    vals = make_synthetic_zipf(100, 3, 0)
+    store = store_dataset(vals, 7, "ascii", uneven=True, seed=3)
+    packed, sizes = store.packed_device_view()
+    assert packed.shape[0] == 7
+    assert packed.shape[1] == sizes.max()
+    j = int(np.argmin(sizes))
+    assert (packed[j, sizes[j]:] == 0).all()

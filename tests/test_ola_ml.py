@@ -1,0 +1,62 @@
+"""Beyond-paper OLA integrations: eval early-stop, ingest gate, noise scale."""
+
+import numpy as np
+import pytest
+
+from repro.core.engine import EngineConfig
+from repro.data.corpus import SyntheticCorpus, standard_ingest_queries
+from repro.ola_ml.eval_ola import ola_eval
+from repro.ola_ml.gradnoise import estimate_noise_scale
+from repro.ola_ml.verify import IngestGate
+
+
+def test_ola_eval_early_stops_and_is_accurate():
+    rng = np.random.default_rng(0)
+    shards = [rng.normal(5.0, 1.0, size=rng.integers(300, 500))
+              for _ in range(20)]
+    all_vals = np.concatenate(shards)
+
+    res = ola_eval(lambda x: x, shards, epsilon=0.02, seed=3)
+    assert res.error_ratio <= 0.021
+    truth = all_vals.mean()
+    assert abs(res.estimate - truth) <= 0.05 * abs(truth)
+    assert res.examples_used < res.total_examples  # early termination
+
+
+def test_ola_eval_exhausts_on_tight_epsilon():
+    rng = np.random.default_rng(1)
+    shards = [rng.normal(0.0, 50.0, 100) for _ in range(4)]
+    res = ola_eval(lambda x: x, shards, epsilon=1e-9, seed=0,
+                   max_examples=10_000)
+    assert res.examples_used == res.total_examples
+
+
+def test_ingest_gate_separates_segments():
+    corpus = SyntheticCorpus(vocab=128, num_segments=4, docs_per_segment=256,
+                             doc_len=8, poison_every=2, seed=5)
+    gate = IngestGate(standard_ingest_queries(0.05),
+                      config=EngineConfig(num_workers=2,
+                                          strategy="resource_aware",
+                                          budget_init=32, seed=1))
+    for seg in corpus.segments:
+        d = gate.check(seg.meta_store)
+        assert d.admitted == (not seg.poison), (seg.index, d.failed_query)
+
+
+def test_noise_scale_estimation():
+    rng = np.random.default_rng(2)
+    true_g2 = 4.0   # |G|^2
+    tr_sigma = 8.0  # per-example gradient variance trace
+
+    def gnorm_fn(batch_size, seed):
+        r = np.random.default_rng(seed)
+        # E|g_b|^2 = |G|^2 + tr(Sigma)/b, with sampling noise
+        return (true_g2 + tr_sigma / batch_size
+                + r.normal(0, 0.05))
+
+    res = estimate_noise_scale(gnorm_fn, b_small=4, b_big=64,
+                               num_chunks=12, probes_per_chunk=4,
+                               epsilon=0.5, seed=0)
+    expect = tr_sigma / true_g2
+    assert res is not None
+    assert abs(res.b_simple - expect) < 0.8 * expect

@@ -1,0 +1,63 @@
+"""Query AST and compiled evaluator."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.queries import (
+    And, Cmp, Column, Custom, GroupEq, Having, Linear, Query, Range,
+    SquaredDiff, TRUE, compile_queries, expand_group_by, linear_plan,
+)
+
+
+def test_evaluator_matches_numpy():
+    rng = np.random.default_rng(0)
+    cols = rng.uniform(-10, 10, (100, 4)).astype(np.float32)
+    qs = [
+        Query(agg="sum", expr=Linear((1.0, 2.0, 0.0, 0.0)),
+              pred=Range(0, -5, 5)),
+        Query(agg="count", pred=And((Cmp(1, ">", 0.0), Cmp(2, "<=", 3.0)))),
+        Query(agg="sum", expr=SquaredDiff(0, 1), pred=TRUE),
+    ]
+    x, p = compile_queries(qs)(jnp.asarray(cols))
+    sel0 = (cols[:, 0] >= -5) & (cols[:, 0] < 5)
+    np.testing.assert_allclose(np.asarray(x[0]),
+                               (cols[:, 0] + 2 * cols[:, 1]) * sel0, rtol=1e-5)
+    sel1 = (cols[:, 1] > 0) & (cols[:, 2] <= 3)
+    np.testing.assert_allclose(np.asarray(p[1]), sel1.astype(np.float32))
+    np.testing.assert_allclose(np.asarray(x[2]),
+                               (cols[:, 0] - cols[:, 1]) ** 2, rtol=1e-4)
+
+
+def test_group_by_expansion():
+    base = Query(agg="count", pred=Range(1, 0, 50), name="hits")
+    qs = expand_group_by(base, group_col=0, group_values=[1.0, 2.0, 3.0])
+    assert len(qs) == 3
+    cols = jnp.asarray([[1.0, 10.0], [2.0, 10.0], [1.0, 99.0]], jnp.float32)
+    x, p = compile_queries(qs)(cols)
+    np.testing.assert_array_equal(np.asarray(p),
+                                  [[1, 0, 0], [0, 1, 0], [0, 0, 0]])
+
+
+def test_columns_used():
+    q = Query(agg="sum", expr=Linear((1.0, 1.0)), pred=Range(3, 0, 1))
+    assert q.columns_used == frozenset({0, 1, 3})
+    q2 = Query(agg="sum", expr=Custom(lambda c: c[..., 0]))
+    assert -1 in q2.columns_used  # unknown support -> full rebuild
+
+
+def test_linear_plan():
+    qs = [Query(agg="sum", expr=Linear((1.0, 0.5)), pred=Range(0, 2.0, 7.0)),
+          Query(agg="count", pred=Cmp(1, ">=", 1.5))]
+    plan = linear_plan(qs, 3)
+    np.testing.assert_allclose(plan.coeffs[0], [1.0, 0.5, 0.0])
+    assert plan.lo[0][0] == 2.0 and plan.hi[0][0] == 7.0
+    assert plan.lo[1][1] == 1.5
+    with pytest.raises(ValueError):
+        linear_plan([Query(agg="sum", expr=SquaredDiff(0, 1))], 3)
+
+
+def test_invalid_agg_rejected():
+    with pytest.raises(ValueError):
+        Query(agg="median")

@@ -1,0 +1,127 @@
+"""Bi-level sample synopsis (paper §6)."""
+
+import numpy as np
+import pytest
+
+from repro.core.controller import EstimationController
+from repro.core.engine import EngineConfig
+from repro.core.queries import Custom, Linear, Query, Range, TRUE
+from repro.core.synopsis import BiLevelSynopsis, SynopsisChunk
+from repro.data.generator import make_synthetic_zipf, store_dataset
+from repro.sampling.permutation import chunk_seed, feistel_permute
+
+import jax.numpy as jnp
+
+
+@pytest.fixture(scope="module")
+def setup():
+    vals = make_synthetic_zipf(4096, 8, seed=3)
+    store = store_dataset(vals, 32, "ascii")
+    return vals, store
+
+
+COEF = tuple(1.0 / (k + 1) for k in range(8))
+
+
+def test_budget_enforced_and_variance_allocation():
+    syn = BiLevelSynopsis(n_chunks=4, num_cols=2, budget_tuples=100,
+                          chunk_sizes=np.full(4, 1000))
+    rng = np.random.default_rng(0)
+    for j in range(4):
+        syn.chunks[j] = SynopsisChunk(start=0, values=rng.normal(size=(50, 2)))
+    variances = np.asarray([1.0, 1.0, 10.0, 0.1])
+    syn._fit_budget(variances)
+    assert syn.total_tuples <= 100
+    # variance-driven: high-variance chunk keeps the most tuples
+    assert syn.chunks[2].count > syn.chunks[3].count
+    assert syn.chunks[2].count >= syn.chunks[0].count
+
+
+def test_shrink_keeps_window_tail():
+    """Dropping from the front preserves the permutation-window property."""
+    syn = BiLevelSynopsis(n_chunks=2, num_cols=1, budget_tuples=10,
+                          chunk_sizes=np.asarray([40, 40]))
+    vals = np.arange(30, dtype=np.float64)[:, None]
+    syn.chunks[0] = SynopsisChunk(start=0, values=vals.copy())
+    syn.chunks[1] = SynopsisChunk(start=0, values=vals.copy())
+    syn._fit_budget(np.asarray([1.0, 1.0]))
+    ch = syn.chunks[0]
+    assert ch.count <= 5 + 1
+    # surviving values are the tail of the original window; start advanced
+    np.testing.assert_array_equal(ch.values[:, 0],
+                                  np.arange(30 - ch.count, 30))
+    assert ch.start == 30 - ch.count
+
+
+def test_seed_evaluates_new_query():
+    syn = BiLevelSynopsis(n_chunks=3, num_cols=2, budget_tuples=1000,
+                          chunk_sizes=np.full(3, 100))
+    rng = np.random.default_rng(1)
+    vals = rng.uniform(0, 10, (20, 2))
+    syn.chunks[1] = SynopsisChunk(start=5, values=vals)
+    q = Query(agg="sum", expr=Linear((2.0, 0.0)), pred=Range(1, 0.0, 5.0))
+    seed = syn.seed([q], cache_cap=32)
+    sel = (vals[:, 1] >= 0) & (vals[:, 1] < 5)
+    np.testing.assert_allclose(seed["ysum"][0, 1],
+                               (2 * vals[:, 0] * sel).sum(), rtol=1e-5)
+    assert seed["m"][1] == 20
+    assert seed["offset"][1] == 25     # cursor continues past the window
+
+
+def test_plan_schedule_uncached_first():
+    syn = BiLevelSynopsis(n_chunks=5, num_cols=1, budget_tuples=10,
+                          chunk_sizes=np.full(5, 10))
+    syn.chunks[0] = SynopsisChunk(start=0, values=np.zeros((2, 1)))
+    syn.chunks[3] = SynopsisChunk(start=0, values=np.zeros((2, 1)))
+    base = np.asarray([3, 1, 4, 0, 2])
+    out = syn.plan_schedule(base)
+    assert set(out[:3].tolist()) == {1, 4, 2}   # uncached first (orig order)
+    assert out[:3].tolist() == [1, 4, 2]
+    assert out[3:].tolist() == [3, 0]
+
+
+def test_supports_and_rebuild():
+    syn = BiLevelSynopsis(n_chunks=2, num_cols=3, budget_tuples=10,
+                          chunk_sizes=np.full(2, 10))
+    syn.columns_cached = frozenset({0, 1})
+    assert syn.supports([Query(agg="sum", expr=Linear((1.0,)))])
+    assert not syn.supports([Query(agg="sum", expr=Linear((1.0, 1.0, 1.0)))])
+    assert not syn.supports([Query(agg="sum", expr=Custom(lambda c: c[..., 0]))])
+    syn.chunks[0] = SynopsisChunk(start=0, values=np.zeros((2, 3)))
+    syn.rebuild()
+    assert len(syn.chunks) == 0 and syn.rebuilds == 1
+
+
+def test_query_sequence_uses_synopsis(setup):
+    """Paper Fig. 12 shape: repeat queries get cheaper through the synopsis."""
+    vals, store = setup
+    cfg = EngineConfig(num_workers=4, strategy="resource_aware",
+                       budget_init=64, seed=5)
+    ctrl = EstimationController(store, cfg, synopsis_budget_tuples=2048)
+    q = Query(agg="sum", expr=Linear(COEF), epsilon=0.05)
+    r1 = ctrl.run_query([q], max_rounds=4000)
+    r2 = ctrl.run_query([q], max_rounds=4000)
+    assert not r1.from_synopsis and r2.from_synopsis
+    assert r2.chunks_ratio <= r1.chunks_ratio + 1e-9
+    assert ctrl.synopsis.total_tuples <= 2048
+
+
+def test_synopsis_window_consistency(setup):
+    """Synopsis windows must equal the chunk's true permutation slice —
+    guarantees later cursor continuation samples without replacement."""
+    vals, store = setup
+    cfg = EngineConfig(num_workers=4, strategy="single_pass",
+                       budget_init=32, seed=7)
+    ctrl = EstimationController(store, cfg, synopsis_budget_tuples=4096)
+    q = Query(agg="sum", expr=Linear(COEF), epsilon=0.02)
+    ctrl.run_query([q], max_rounds=4000)
+    codec = store.codec
+    for j, ch in list(ctrl.synopsis.chunks.items())[:5]:
+        if ch.count == 0:
+            continue
+        m = int(store.chunk_sizes[j])
+        seed = chunk_seed(cfg.seed, j)
+        pos = (ch.start + np.arange(ch.count)) % m
+        idx = np.asarray(feistel_permute(seed, jnp.asarray(pos), m))
+        truth = np.asarray(codec.decode_ref(jnp.asarray(store.chunk_bytes(j))))[idx]
+        np.testing.assert_allclose(ch.values, truth, rtol=1e-5)

@@ -1,0 +1,132 @@
+"""Training substrate: optimizer, accumulation, checkpointing, compression."""
+
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.distributed.compression import int8_compressor, topk_compressor
+from repro.models import build_model
+from repro.train import checkpoint as ckpt
+from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update, lr_at
+from repro.train.train_step import init_train_state, make_train_step
+
+
+def _tiny_problem():
+    """Quadratic bowl: params should converge toward the target."""
+    target = jnp.asarray([1.0, -2.0, 3.0])
+
+    def loss(params, batch):
+        return jnp.sum((params["w"] - target) ** 2) * batch["scale"]
+
+    params = {"w": jnp.zeros(3)}
+    return loss, params, target
+
+
+def test_adamw_converges_quadratic():
+    loss, params, target = _tiny_problem()
+    cfg = AdamWConfig(lr=0.1, warmup_steps=0, total_steps=400,
+                      weight_decay=0.0)
+    step = jax.jit(make_train_step(loss, cfg))
+    state = init_train_state(params)
+    for _ in range(300):
+        state, m = step(state, {"scale": jnp.asarray(1.0)})
+    np.testing.assert_allclose(np.asarray(state.params["w"]),
+                               np.asarray(target), atol=0.05)
+
+
+def test_lr_schedule():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                      min_lr_ratio=0.1)
+    assert float(lr_at(cfg, jnp.asarray(5))) == pytest.approx(0.5)
+    assert float(lr_at(cfg, jnp.asarray(10))) == pytest.approx(1.0, rel=1e-3)
+    assert float(lr_at(cfg, jnp.asarray(100))) == pytest.approx(0.1, rel=1e-3)
+
+
+def test_grad_accumulation_equivalence():
+    """accum_steps=k on batch B == single step on the same batch."""
+    cfg = get_config("smollm-135m", reduced=True)
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    ocfg = AdamWConfig(lr=1e-3, warmup_steps=0)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (4, 32), 0,
+                                cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": tokens}
+    s1 = init_train_state(params)
+    s2 = init_train_state(params)
+    step1 = jax.jit(make_train_step(model.loss, ocfg, accum_steps=1))
+    step2 = jax.jit(make_train_step(model.loss, ocfg, accum_steps=2))
+    s1, m1 = step1(s1, batch)
+    s2, m2 = step2(s2, batch)
+    # losses equal; params close (grad means vs mean-of-split-grads identical
+    # for CE-mean over equal micro shards up to f32 summation order)
+    assert float(m1["loss"]) == pytest.approx(float(m2["loss"]), rel=1e-4)
+    # compare the accumulated gradient via its norm: step-1 Adam is sign-SGD
+    # (m̂/√v̂ = ±1 for any |g| >> eps), so param-space comparison is chaotic
+    # for near-zero-gradient params; the gradient itself must match.
+    assert float(m1["grad_norm"]) == pytest.approx(float(m2["grad_norm"]),
+                                                   rel=1e-3)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    loss, params, _ = _tiny_problem()
+    cfg = AdamWConfig()
+    step = jax.jit(make_train_step(loss, cfg))
+    state = init_train_state(params)
+    for _ in range(3):
+        state, _ = step(state, {"scale": jnp.asarray(1.0)})
+    path = ckpt.save(str(tmp_path), 3, state)
+    assert os.path.exists(os.path.join(path, "COMMIT"))
+    template = jax.tree.map(np.zeros_like, jax.tree.map(np.asarray, state))
+    restored = ckpt.restore(str(tmp_path), 3, template)
+    np.testing.assert_allclose(np.asarray(restored.params["w"]),
+                               np.asarray(state.params["w"]))
+    np.testing.assert_allclose(np.asarray(restored.opt.mu["w"]),
+                               np.asarray(state.opt.mu["w"]))
+
+
+def test_checkpoint_prune_and_latest(tmp_path):
+    loss, params, _ = _tiny_problem()
+    state = init_train_state(params)
+    for s in (1, 2, 3, 4, 5):
+        ckpt.save(str(tmp_path), s, state, keep=3)
+    assert ckpt.all_steps(str(tmp_path)) == [3, 4, 5]
+    assert ckpt.latest_step(str(tmp_path)) == 5
+
+
+def test_uncommitted_checkpoint_ignored(tmp_path):
+    loss, params, _ = _tiny_problem()
+    state = init_train_state(params)
+    ckpt.save(str(tmp_path), 1, state)
+    # fake a torn write
+    os.makedirs(os.path.join(tmp_path, "step_2"))
+    assert ckpt.latest_step(str(tmp_path)) == 1
+
+
+def test_int8_compressor_error_feedback():
+    g = {"w": jnp.asarray(np.linspace(-1, 1, 1000), jnp.float32)}
+    e = jax.tree.map(jnp.zeros_like, g)
+    total = jnp.zeros_like(g["w"])
+    # over many steps, transmitted sum ≈ true sum (error feedback property)
+    for _ in range(50):
+        out, e = int8_compressor(g, e)
+        total = total + out["w"]
+    np.testing.assert_allclose(np.asarray(total) / 50, np.asarray(g["w"]),
+                               atol=2e-3)
+
+
+def test_topk_compressor_sparsity():
+    g = {"w": jnp.asarray(np.random.default_rng(0).normal(size=2000),
+                          jnp.float32)}
+    e = jax.tree.map(jnp.zeros_like, g)
+    out, e2 = topk_compressor(g, e, frac=0.01)
+    nz = int(jnp.sum(out["w"] != 0))
+    assert nz <= 0.02 * 2000
+    # residual keeps the rest
+    np.testing.assert_allclose(np.asarray(out["w"] + e2["w"]),
+                               np.asarray(g["w"]), atol=1e-6)
