@@ -1,0 +1,154 @@
+"""Workload serving benchmark: shared-scan server vs one-query-at-a-time.
+
+A Poisson stream of aggregate queries (mixed SUM/COUNT/AVG, random
+selectivities and ε targets) is served two ways:
+
+* **server** — :class:`~repro.serve.ola_server.OLAWorkloadServer`: all
+  queries multiplex onto one shared scan with mid-scan admission and
+  synopsis seeding;
+* **sequential** — the classic :class:`EstimationController`, one query
+  batch per scan, in arrival order (reported both without and with the
+  between-queries synopsis).
+
+Headline stats: total raw tuples extracted per mode (the paper's scarce
+resource) and per-query latency on the Eq. (4) modeled clock.  Results are
+saved to ``BENCH_workload.json`` (and ``results/bench_workload.json`` per
+the harness convention).
+
+Standalone:  PYTHONPATH=src python -m benchmarks.bench_workload [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+from repro.core.controller import EstimationController
+from repro.core.engine import EngineConfig
+from repro.core.queries import Linear, Query, Range, TRUE
+from repro.data.generator import make_synthetic_zipf, store_dataset
+from repro.serve.ola_server import OLAWorkloadServer, poisson_workload
+
+
+def build_queries(num_cols: int, count: int, seed: int) -> list[Query]:
+    rng = np.random.default_rng(seed)
+    coeffs = tuple(1.0 / (k + 1) for k in range(num_cols))
+    out = []
+    for i in range(count):
+        kind = rng.choice(["sum", "count", "avg"], p=[0.5, 0.3, 0.2])
+        sel = float(rng.uniform(0.3, 1.0))
+        pred = Range(0, 0.0, 1e8 * sel) if sel < 0.999 else TRUE
+        eps = float(rng.uniform(0.04, 0.10))
+        expr = Linear(coeffs)
+        out.append(Query(agg=str(kind), expr=expr, pred=pred, epsilon=eps,
+                         name=f"q{i}-{kind}"))
+    return out
+
+
+def run_server(store, cfg, arrivals, max_slots):
+    srv = OLAWorkloadServer(store, cfg, max_slots=max_slots)
+    for q, at in arrivals:
+        srv.submit(q, arrival_t=at)
+    results = srv.run()
+    assert not srv.truncated, "workload did not finish; stats would be biased"
+    lat = np.asarray([r.latency for r in results])
+    return {
+        "tuples": srv.tuples_scanned,
+        "lat_mean": float(lat.mean()),
+        "lat_p95": float(np.percentile(lat, 95)),
+        "makespan": srv.t_model,
+        "rounds": srv.rounds,
+        "topup_passes": srv.topup_passes,
+        "answered_from_synopsis": sum(r.from_synopsis for r in results),
+    }
+
+
+def run_sequential(store, cfg, arrivals, synopsis_budget):
+    ctrl = EstimationController(store, cfg,
+                                synopsis_budget_tuples=synopsis_budget)
+    total = store.num_tuples
+    clock = 0.0
+    tuples = 0
+    lats = []
+    for q, at in arrivals:
+        res = ctrl.run_query([q])
+        start = max(clock, at)
+        clock = start + res.t_model_total
+        tuples += int(round(res.tuples_ratio * total))
+        lats.append(clock - at)
+    lat = np.asarray(lats)
+    return {
+        "tuples": tuples,
+        "lat_mean": float(lat.mean()),
+        "lat_p95": float(np.percentile(lat, 95)),
+        "makespan": clock,
+    }
+
+
+def run(fast: bool = False, smoke: bool = False) -> str:
+    if smoke:
+        t, chunks, nq, slots = 2048, 16, 6, 4
+    elif fast:
+        t, chunks, nq, slots = 8192, 32, 12, 8
+    else:
+        t, chunks, nq, slots = 16384, 64, 24, 8
+    store = store_dataset(make_synthetic_zipf(t, 8, seed=0), chunks, "ascii")
+    cfg = EngineConfig(num_workers=4, seed=7)
+    queries = build_queries(8, nq, seed=1)
+    # arrival rate scaled so several queries overlap one scan's modeled time
+    arrivals = poisson_workload(queries, rate_per_model_s=2000.0, seed=2)
+
+    server = run_server(store, cfg, arrivals, slots)
+    seq = run_sequential(store, cfg, arrivals, synopsis_budget=0)
+    seq_syn = run_sequential(store, cfg, arrivals, synopsis_budget=4096)
+
+    out = {
+        "num_queries": nq,
+        "table_tuples": t,
+        "server": server,
+        "sequential": seq,
+        "sequential_synopsis": seq_syn,
+        "tuples_saved_vs_sequential": seq["tuples"] - server["tuples"],
+        "tuples_ratio_vs_sequential": round(
+            server["tuples"] / max(seq["tuples"], 1), 4),
+    }
+    for path in ("BENCH_workload.json", os.path.join(
+            "results", "bench_workload.json")):
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(out, f, indent=1)
+
+    print(f"[bench_workload] {nq} queries over {t} tuples")
+    print(f"  server     : {server['tuples']:8d} tuples extracted, "
+          f"mean latency {server['lat_mean']:.4f}s (modeled), "
+          f"p95 {server['lat_p95']:.4f}s, {server['rounds']} rounds, "
+          f"{server['answered_from_synopsis']} answered from synopsis")
+    print(f"  sequential : {seq['tuples']:8d} tuples extracted, "
+          f"mean latency {seq['lat_mean']:.4f}s, p95 {seq['lat_p95']:.4f}s")
+    print(f"  seq+synopsis: {seq_syn['tuples']:7d} tuples extracted, "
+          f"mean latency {seq_syn['lat_mean']:.4f}s")
+    print(f"  shared scan extracts {out['tuples_ratio_vs_sequential']:.2%} "
+          f"of the sequential baseline's tuples")
+    return json.dumps({
+        "tuples_ratio_vs_sequential": out["tuples_ratio_vs_sequential"],
+        "server_tuples": server["tuples"],
+        "sequential_tuples": seq["tuples"],
+        "server_lat_mean": round(server["lat_mean"], 5),
+        "sequential_lat_mean": round(seq["lat_mean"], 5),
+    })
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny config for the CI bench-smoke step")
+    args = ap.parse_args()
+    run(fast=args.fast, smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

@@ -21,6 +21,7 @@ BENCHES = [
     ("bounds_mc", "benchmarks.bench_bounds_mc"),         # Table 3
     ("kernels", "benchmarks.bench_kernels"),             # EXTRACT hot spot
     ("ola_eval", "benchmarks.bench_ola_eval"),           # beyond-paper eval
+    ("workload", "benchmarks.bench_workload"),           # shared-scan serving
 ]
 
 

@@ -37,6 +37,22 @@ mode reproduces the inspection paradox for the Table 3 experiment.
 Worker state (``cur``) is the only sharded piece; chunk-slot arrays are
 replicated and advanced by identical (psum-merged) updates on every device,
 so the SPMD engine is deterministic and checkpointable as a plain pytree.
+
+Two query planes share this round machinery:
+
+* **frozen** (classic): the query list is compiled into the round program
+  (``compile_queries``); stats carry a leading (Q,) dim and ``stats.m`` is
+  the shared ``(N,)`` per-chunk sample size.
+* **slot table** (workload serving): ``round_body`` takes a dynamic
+  :class:`~repro.core.queries.SlotTable` argument describing up to S
+  concurrent linear+range queries.  Queries can be admitted or retired
+  between rounds by host-side row writes — no recompilation.  Because a
+  query admitted mid-scan has not seen earlier tuples, ``stats.m`` becomes
+  per-slot ``(S, N)`` while the *scan-level* extraction count lives in
+  ``state.scan_m (N,)`` (cursor bounds, READ accounting, calibration).
+  :class:`SlotOLAEngine` is the host-facing wrapper; the workload server
+  (``repro.serve.ola_server``) drives admission, early leave, and top-up
+  passes on top of it.
 """
 
 from __future__ import annotations
@@ -51,7 +67,18 @@ import numpy as np
 
 from repro.core import estimators as est
 from repro.core.estimators import BiLevelStats
-from repro.core.queries import Query, compile_queries
+from repro.core.queries import (
+    AGG_COUNT,
+    AGG_SUM,
+    HAVING_NONE,
+    PLAN_CHUNK_LEVEL,
+    PLAN_RESOURCE_AWARE,
+    PLAN_SINGLE_PASS,
+    Query,
+    SlotTable,
+    compile_queries,
+    slot_evaluate,
+)
 from repro.sampling.permutation import (
     chunk_seed,
     permutation_window_dyn,
@@ -89,7 +116,11 @@ class EngineConfig:
 
 
 class EngineState(NamedTuple):
-    stats: BiLevelStats          # ysum/ysq/psum: (Q, N) — replicated
+    stats: BiLevelStats          # ysum/ysq/psum: (Q, N) — replicated.
+                                 # stats.m is (N,) in frozen-query mode and
+                                 # per-slot (S, N) in slot-table mode.
+    scan_m: jnp.ndarray          # (N,) tuples the *scan* extracted per chunk
+                                 # (== stats.m in frozen mode)
     offset: jnp.ndarray          # (N,) tuples extracted so far per chunk
     closed: jnp.ndarray          # (N,) bool — chunk closed for sampling
     acc_met: jnp.ndarray         # (N,) bool — local accuracy ε_j reached
@@ -165,14 +196,17 @@ class EngineProgram:
     model); per-round dynamic state is the :class:`EngineState` pytree.
     """
 
-    def __init__(self, *, codec, queries: Sequence[Query], config: EngineConfig,
-                 n_chunks: int, m_max: int, chunk_sizes: np.ndarray,
-                 schedule: Optional[np.ndarray] = None):
+    def __init__(self, *, codec, queries: Sequence[Query] = (),
+                 config: EngineConfig, n_chunks: int, m_max: int,
+                 chunk_sizes: np.ndarray,
+                 schedule: Optional[np.ndarray] = None,
+                 max_slots: Optional[int] = None, confidence: float = 0.95):
         self.codec = codec
         self.queries = list(queries)
         self.config = config
         self.n_chunks = int(n_chunks)
         self.m_max = int(m_max)
+        self.max_slots = None if max_slots is None else int(max_slots)
         if schedule is None:
             schedule = random_chunk_order(config.seed, self.n_chunks)
         self.schedule = jnp.asarray(schedule, jnp.int32)
@@ -181,24 +215,47 @@ class EngineProgram:
         self.chunk_sizes_np = np.asarray(chunk_sizes, np.int32)
         self.chunk_bytes = jnp.asarray(
             np.asarray(chunk_sizes, np.float32) * codec.record_bytes)
-        self.evaluate = compile_queries(self.queries)
-        self.eps = jnp.asarray([q.epsilon for q in self.queries], jnp.float32)
-        self.conf = float(self.queries[0].confidence)
+        if self.max_slots is None:
+            assert self.queries, "frozen mode needs a non-empty query list"
+            self.evaluate = compile_queries(self.queries)
+            self.eps = jnp.asarray([q.epsilon for q in self.queries],
+                                   jnp.float32)
+            self.conf = float(self.queries[0].confidence)
+        else:
+            # slot-table mode: the query plane is a dynamic round argument;
+            # confidence is per-slot (the table carries each slot's z), and
+            # ``confidence`` here is only the default for reporting helpers.
+            assert not self.queries, "slot mode takes queries via the table"
+            self.evaluate = None
+            self.eps = jnp.zeros((self.max_slots,), jnp.float32)
+            self.conf = float(confidence)
         self.z = float(jax.scipy.special.ndtri((1.0 + self.conf) / 2.0))
         self.cost_per_tuple = float(codec.extract_cost_per_tuple())
         self.total_tuples = int(np.sum(chunk_sizes))
         self.num_cols = int(codec.num_cols)
 
+    @property
+    def q_dim(self) -> int:
+        """Leading stats dimension: query count or slot count."""
+        return self.max_slots if self.max_slots is not None else len(self.queries)
+
     # ------------------------------------------------------------ state ----
     def init_state(self, synopsis_seed: Optional[dict] = None) -> EngineState:
         cfg = self.config
-        q = len(self.queries)
+        q = self.q_dim
         dtype = jnp.dtype(cfg.stats_dtype)
         sizes = jnp.asarray(self.chunk_sizes_np)
         stats = est.init_stats(sizes, query_shape=(q,), dtype=dtype,
                                m_total=self.total_tuples)
+        if self.max_slots is not None:
+            # per-slot sample sizes: each slot joined the scan at its own time
+            assert synopsis_seed is None, (
+                "slot mode seeds per-slot via the workload server")
+            stats = stats._replace(
+                m=jnp.zeros((q, self.n_chunks), jnp.int32))
         state = EngineState(
             stats=stats,
+            scan_m=jnp.zeros((self.n_chunks,), jnp.int32),
             offset=jnp.zeros((self.n_chunks,), jnp.int32),
             closed=jnp.zeros((self.n_chunks,), bool),
             acc_met=jnp.zeros((self.n_chunks,), bool),
@@ -228,6 +285,7 @@ class EngineProgram:
             )
             state = state._replace(
                 stats=stats,
+                scan_m=jnp.asarray(synopsis_seed["m"], jnp.int32),
                 offset=jnp.asarray(synopsis_seed["offset"], jnp.int32),
                 closed=jnp.asarray(synopsis_seed.get(
                     "closed", np.zeros(self.n_chunks, bool))),
@@ -239,16 +297,32 @@ class EngineProgram:
                     cache=state.cache.at[:, : pre.shape[1]].set(pre))
         return state
 
+    def _closed_prefix_mask(self, closed: jnp.ndarray) -> jnp.ndarray:
+        """Reordering barrier (§3): chunk-level estimation may only use the
+        *closed prefix* of the schedule — the chunks up to the first not-yet
+        -closed schedule position.  Returns the (N,) chunk mask."""
+        n = self.n_chunks
+        done_sched = closed[self.schedule]
+        prefix_len = jnp.where(jnp.all(done_sched), n, jnp.argmax(~done_sched))
+        return jnp.zeros((n,), bool).at[self.schedule].set(
+            jnp.arange(n) < prefix_len)
+
     # ------------------------------------------------------------ round ----
     def round_body(self, state: EngineState, packed: jnp.ndarray,
                    speeds: jnp.ndarray, b_static: int,
-                   coll: _Collectives) -> tuple[EngineState, RoundReport]:
+                   coll: _Collectives, slots: Optional[SlotTable] = None,
+                   ) -> tuple[EngineState, RoundReport]:
         """One engine round.  ``state.cur``/``speeds`` are *local* worker
         slices (the full arrays in single-device mode); everything else is
-        replicated.  ``packed`` is the raw chunk bytes (N, M_max, rec)."""
+        replicated.  ``packed`` is the raw chunk bytes (N, M_max, rec).
+
+        With ``slots`` (slot-table mode) the query plane is data-driven:
+        evaluation, ε targets, plan policies, and HAVING verdicts all come
+        from the table, and per-query arrays are sized ``max_slots``."""
         cfg = self.config
         n = self.n_chunks
-        q = len(self.queries)
+        slot_mode = slots is not None
+        q = self.q_dim
         dtype = state.stats.ysum.dtype
         sizes = state.stats.M
 
@@ -268,7 +342,7 @@ class EngineProgram:
         j = self.schedule[jnp.clip(cur, 0, n - 1)]               # (W,) chunk ids
         mj = sizes[j]
         off = state.offset[j]                                    # permutation cursor
-        m_before = state.stats.m[j]                              # tuples sampled so far
+        m_before = state.scan_m[j]                               # scan tuples so far
 
         # ---- 2. EXTRACT ----------------------------------------------------
         # remaining unsampled tuples bounds the budget (cursor may wrap when a
@@ -285,10 +359,15 @@ class EngineProgram:
         idx = jax.vmap(window)(self.seeds[j], off, mj)           # (W, B)
         raw = jax.vmap(lambda jj, ii: packed[jj][ii])(j, idx)    # (W, B, rec)
         cols = jax.vmap(self.codec.decode_ref)(raw)              # (W, B, C)
-        x, pr = jax.vmap(self.evaluate, in_axes=0, out_axes=1)(cols)  # (Q, W, B)
+        if slot_mode:
+            x, pr = slot_evaluate(slots, cols)                   # (S, W, B)
+            gate = slots.active.astype(dtype)[:, None, None]
+        else:
+            x, pr = jax.vmap(self.evaluate, in_axes=0, out_axes=1)(cols)  # (Q, W, B)
+            gate = jnp.ones((), dtype)
         vf = valid.astype(dtype)[None]
-        x = x.astype(dtype) * vf
-        pr = pr.astype(dtype) * vf
+        x = x.astype(dtype) * vf * gate
+        pr = pr.astype(dtype) * vf * gate
 
         # ---- 3. MERGE -------------------------------------------------------
         af = active.astype(jnp.int32)
@@ -299,13 +378,18 @@ class EngineProgram:
             dps=jnp.zeros((q, n), dtype).at[:, j].add(jnp.sum(pr, -1) * af),
         )
         deltas = coll.merge(deltas)
+        if slot_mode:
+            # a slot only counts tuples extracted while it is active
+            dm_q = slots.active.astype(jnp.int32)[:, None] * deltas["dm"][None]
+        else:
+            dm_q = deltas["dm"]
         stats = state.stats._replace(
-            m=state.stats.m + deltas["dm"],
+            m=state.stats.m + dm_q,
             ysum=state.stats.ysum + deltas["dys"],
             ysq=state.stats.ysq + deltas["dyq"],
             psum=state.stats.psum + deltas["dps"])
-        offset = state.offset + coll.merge(
-            jnp.zeros((n,), jnp.int32).at[j].add(b_eff * af))
+        scan_m = state.scan_m + deltas["dm"]
+        offset = state.offset + deltas["dm"]
 
         # READ accounting: a chunk costs its full raw bytes the first time it
         # is extracted *beyond* what the synopsis supplied (Section 6.3 —
@@ -333,37 +417,59 @@ class EngineProgram:
             cache = state.cache
 
         # ---- 4. DECIDE -------------------------------------------------------
-        mj_new = stats.m[j].astype(dtype)
+        # per-slot sample sizes: (W,) in frozen mode, (S, W) in slot mode
+        mj_new = jnp.take(stats.m, j, axis=-1).astype(dtype)
+        scan_mj = scan_m[j].astype(dtype)                        # (W,) scan-level
         big_m = sizes[j].astype(dtype)
         scale = big_m / jnp.maximum(mj_new, 1.0)
-        ys_j = stats.ysum[:, j]                                  # (Q, W)
+        ys_j = stats.ysum[:, j]                                  # (Q|S, W)
         yq_j = stats.ysq[:, j]
         ss = yq_j - ys_j * ys_j / jnp.maximum(mj_new, 1.0)
         fpc = (big_m - mj_new) / jnp.maximum(mj_new - 1.0, 1.0)
         v_local = scale * fpc * jnp.maximum(ss, 0.0)             # Eq. (5) LHS
         yhat_local = scale * ys_j
         tiny = jnp.asarray(1e-12, dtype)
+        eps_vec = slots.eps.astype(dtype) if slot_mode else self.eps.astype(dtype)
+        # per-slot confidence: each slot carries its own z (frozen mode bakes
+        # in the query list's shared confidence level)
+        z_q = slots.z.astype(dtype)[:, None] if slot_mode else self.z
+        # slots that are retired/not-yet-admitted never hold a chunk open
+        stopped_mask = (state.stopped | ~slots.active) if slot_mode else state.stopped
         # ε_j = ε rule (Theorem 3), in error-ratio form: 2 z √v_j <= ε |ŷ_j|
-        local_ok_q = 2.0 * self.z * jnp.sqrt(jnp.maximum(v_local, 0.0)) <= (
-            self.eps[:, None].astype(dtype) * jnp.maximum(jnp.abs(yhat_local), tiny))
-        local_ok = jnp.all(local_ok_q | state.stopped[:, None], axis=0)
-        local_ok = local_ok & (mj_new >= 2.0)
-        exhausted_w = stats.m[j] >= sizes[j]
+        local_ok_q = 2.0 * z_q * jnp.sqrt(jnp.maximum(v_local, 0.0)) <= (
+            eps_vec[:, None] * jnp.maximum(jnp.abs(yhat_local), tiny))
+        if slot_mode:
+            # per-slot m: each live slot needs >= 2 of its own tuples
+            local_ok = jnp.all((local_ok_q & (mj_new >= 2.0))
+                               | stopped_mask[:, None], axis=0)
+        else:
+            local_ok = jnp.all(local_ok_q | stopped_mask[:, None], axis=0)
+            local_ok = local_ok & (mj_new >= 2.0)
+        exhausted_w = scan_m[j] >= sizes[j]
         newly_acc = active & local_ok & ~state.acc_met[j]
 
-        strategy = cfg.strategy
-        if strategy in ("chunk_level", "chunk_level_unordered", "holistic"):
-            close_w = exhausted_w
-        elif strategy == "single_pass":
-            close_w = exhausted_w | local_ok
-        else:  # resource_aware
-            close_w = exhausted_w | (local_ok & state.cpu_bound)
+        if slot_mode:
+            # a chunk may close before exhaustion only if every live slot's
+            # plan permits early close (single-pass semantics, or
+            # resource-aware while the monitor says CPU-bound)
+            allow_early = (slots.plan == PLAN_SINGLE_PASS) | (
+                (slots.plan == PLAN_RESOURCE_AWARE) & state.cpu_bound)
+            early_ok = jnp.all(allow_early | stopped_mask)
+            close_w = exhausted_w | (local_ok & early_ok)
+        else:
+            strategy = cfg.strategy
+            if strategy in ("chunk_level", "chunk_level_unordered", "holistic"):
+                close_w = exhausted_w
+            elif strategy == "single_pass":
+                close_w = exhausted_w | local_ok
+            else:  # resource_aware
+                close_w = exhausted_w | (local_ok & state.cpu_bound)
         close_w = close_w & active
 
         flag_deltas = coll.merge(dict(
             acc=jnp.zeros((n,), jnp.int32).at[j].add((local_ok & active).astype(jnp.int32)),
             cls=jnp.zeros((n,), jnp.int32).at[j].add(close_w.astype(jnp.int32)),
-            calib_sum=jnp.sum(jnp.where(newly_acc, mj_new, 0.0)),
+            calib_sum=jnp.sum(jnp.where(newly_acc, scan_mj, 0.0)),
             calib_cnt=jnp.sum(newly_acc.astype(dtype)),
             b_eff_total=jnp.sum(b_eff),
         ))
@@ -388,58 +494,97 @@ class EngineProgram:
         base = jnp.where(calib_cnt > 0, calib_sum / jnp.maximum(calib_cnt, 1.0),
                          jnp.asarray(float(cfg.budget_init), jnp.float32))
         budget = jnp.clip(base * decay, float(cfg.budget_min), float(cfg.budget_max))
-        if strategy != "resource_aware":
+        if slot_mode:
+            # adapt t_eval iff some live slot runs the resource-aware plan
+            use_adapt = jnp.any(slots.active & ~state.stopped
+                                & (slots.plan == PLAN_RESOURCE_AWARE))
+            budget = jnp.where(use_adapt, budget, state.budget)
+            decay = jnp.where(use_adapt, decay, state.decay)
+        elif cfg.strategy != "resource_aware":
             budget = state.budget      # fixed t_eval for the simpler strategies
             decay = state.decay
 
         # ---- 5. ESTIMATE -----------------------------------------------------
-        if strategy == "chunk_level":
-            done_sched = closed[self.schedule]
-            # reordering barrier: first not-done position == done-prefix length
-            prefix_len = jnp.where(jnp.all(done_sched), n, jnp.argmax(~done_sched))
-            in_est = jnp.arange(n) < prefix_len
-            est_mask = jnp.zeros((n,), bool).at[self.schedule].set(in_est)
-        elif strategy == "chunk_level_unordered":
-            est_mask = closed                      # inspection-paradox-vulnerable
+        if slot_mode:
+            # per-slot estimation mask (S, N): chunk-level slots see only the
+            # closed schedule prefix (reordering barrier); everything else
+            # sees all chunks the slot has sampled
+            base_mask = stats.m > 0                              # (S, N)
+            est_mask = jnp.where(
+                (slots.plan == PLAN_CHUNK_LEVEL)[:, None],
+                base_mask & self._closed_prefix_mask(closed)[None], base_mask)
         else:
-            est_mask = stats.m > 0
+            strategy = cfg.strategy
+            if strategy == "chunk_level":
+                est_mask = self._closed_prefix_mask(closed)
+            elif strategy == "chunk_level_unordered":
+                est_mask = closed                  # inspection-paradox-vulnerable
+            else:
+                est_mask = stats.m > 0
+        # (N,) masks broadcast over the leading query dim; (S, N) are per-slot
         stats_est = stats._replace(
             m=jnp.where(est_mask, stats.m, 0),
-            ysum=jnp.where(est_mask[None], stats.ysum, 0),
-            ysq=jnp.where(est_mask[None], stats.ysq, 0),
-            psum=jnp.where(est_mask[None], stats.psum, 0))
+            ysum=jnp.where(est_mask, stats.ysum, 0),
+            ysq=jnp.where(est_mask, stats.ysq, 0),
+            psum=jnp.where(est_mask, stats.psum, 0))
 
         sum_t = est.tau_hat(stats_est)
         sum_v, _ = est.var_hat(stats_est)
         cnt_t = est.count_tau_hat(stats_est)
         cnt_v, _ = est.count_var_hat(stats_est)
-        need_avg = any(qq.agg == "avg" for qq in self.queries)
+        need_avg = slot_mode or any(qq.agg == "avg" for qq in self.queries)
         if need_avg:
             avg_t, avg_v, _ = est.avg_estimate(stats_est)
-        estimate = jnp.zeros((q,), dtype)
-        variance = jnp.zeros((q,), dtype)
-        for qi, qq in enumerate(self.queries):
-            t_, v_ = {"sum": (sum_t, sum_v), "count": (cnt_t, cnt_v),
-                      "avg": (avg_t, avg_v) if need_avg else (sum_t, sum_v)}[qq.agg]
-            estimate = estimate.at[qi].set(t_[qi])
-            variance = variance.at[qi].set(v_[qi])
-        lo, hi = est.confidence_bounds(estimate, variance, self.conf)
-        err = est.error_ratio(estimate, lo, hi)
 
-        decided = jnp.full((q,), -1, jnp.int8)
-        stop_now = err <= self.eps.astype(dtype)
-        for qi, qq in enumerate(self.queries):
-            if qq.having is not None:
-                d = est.having_decision(lo[qi], hi[qi], qq.having.op,
-                                        qq.having.threshold)
-                decided = decided.at[qi].set(d)
-                stop_now = stop_now.at[qi].set(stop_now[qi] | (d != -1))
-        stopped = state.stopped | stop_now
+        if slot_mode:
+            agg = slots.agg
+            estimate = jnp.where(agg == AGG_SUM, sum_t,
+                                 jnp.where(agg == AGG_COUNT, cnt_t, avg_t))
+            variance = jnp.where(agg == AGG_SUM, sum_v,
+                                 jnp.where(agg == AGG_COUNT, cnt_v, avg_v))
+            # per-slot confidence bounds: estimate ± z_s √var
+            half = slots.z.astype(dtype) * jnp.sqrt(jnp.maximum(variance, 0.0))
+            lo, hi = estimate - half, estimate + half
+            err = est.error_ratio(estimate, lo, hi)
+
+            # vectorized HAVING verdicts over the per-slot code columns
+            op = slots.having_op
+            decided = est.having_decision_coded(
+                lo, hi, op, slots.having_thr.astype(dtype))
+            stop_now = (err <= eps_vec) | (
+                (op != HAVING_NONE) & (decided != -1))
+            stopped = state.stopped | stop_now
+            all_stopped = jnp.all(stopped | ~slots.active)
+            n_chunks_rep = jnp.sum((scan_m > 0).astype(jnp.int32))
+            m_tuples_rep = jnp.sum(scan_m)
+        else:
+            estimate = jnp.zeros((q,), dtype)
+            variance = jnp.zeros((q,), dtype)
+            for qi, qq in enumerate(self.queries):
+                t_, v_ = {"sum": (sum_t, sum_v), "count": (cnt_t, cnt_v),
+                          "avg": (avg_t, avg_v) if need_avg else (sum_t, sum_v)}[qq.agg]
+                estimate = estimate.at[qi].set(t_[qi])
+                variance = variance.at[qi].set(v_[qi])
+            lo, hi = est.confidence_bounds(estimate, variance, self.conf)
+            err = est.error_ratio(estimate, lo, hi)
+
+            decided = jnp.full((q,), -1, jnp.int8)
+            stop_now = err <= self.eps.astype(dtype)
+            for qi, qq in enumerate(self.queries):
+                if qq.having is not None:
+                    d = est.having_decision(lo[qi], hi[qi], qq.having.op,
+                                            qq.having.threshold)
+                    decided = decided.at[qi].set(d)
+                    stop_now = stop_now.at[qi].set(stop_now[qi] | (d != -1))
+            stopped = state.stopped | stop_now
+            all_stopped = jnp.all(stopped)
+            n_chunks_rep = stats_est.n
+            m_tuples_rep = jnp.sum(stats_est.m)
 
         all_closed = jnp.all(closed) & (head >= n)
         new_state = EngineState(
-            stats=stats, offset=offset, closed=closed, acc_met=acc_met,
-            head=head, cur=cur, budget=budget, decay=decay,
+            stats=stats, scan_m=scan_m, offset=offset, closed=closed,
+            acc_met=acc_met, head=head, cur=cur, budget=budget, decay=decay,
             calib_sum=calib_sum, calib_cnt=calib_cnt,
             first_est=jnp.asarray(True), stopped=stopped,
             round=state.round + 1, t_io=state.t_io + round_io,
@@ -447,11 +592,17 @@ class EngineProgram:
             cached_m=state.cached_m, raw_touched=raw_touched, cache=cache)
         report = RoundReport(
             estimate=estimate, lo=lo, hi=hi, err=err, decided=decided,
-            n_chunks=stats_est.n, m_tuples=jnp.sum(stats_est.m),
+            n_chunks=n_chunks_rep, m_tuples=m_tuples_rep,
             round_io_s=round_io, round_cpu_s=round_cpu,
             tuples_round=flag_deltas["b_eff_total"], bytes_round=bytes_round,
-            all_stopped=jnp.all(stopped), exhausted=all_closed)
+            all_stopped=all_stopped, exhausted=all_closed)
         return new_state, report
+
+
+def budget_ladder(config: EngineConfig, m_max: int, b: float) -> int:
+    """Snap a fractional t_eval budget to the power-of-two compile ladder."""
+    b = float(np.clip(b, config.budget_min, min(config.budget_max, m_max)))
+    return int(2 ** int(np.ceil(np.log2(max(b, 1.0)))))
 
 
 class OLAEngine:
@@ -491,9 +642,7 @@ class OLAEngine:
         return self._round_fns[b_static]
 
     def budget_ladder(self, b: float) -> int:
-        b = float(np.clip(b, self.config.budget_min,
-                          min(self.config.budget_max, self.m_max)))
-        return int(2 ** int(np.ceil(np.log2(max(b, 1.0)))))
+        return budget_ladder(self.config, self.m_max, b)
 
     def run(self, max_rounds: int = 100_000, wall_timeout_s: float = 300.0,
             synopsis_seed: Optional[dict] = None, collect_history: bool = True):
@@ -511,3 +660,55 @@ class OLAEngine:
             if time.perf_counter() - t0 > wall_timeout_s:
                 break
         return state, history
+
+
+class SlotOLAEngine:
+    """Host-facing engine whose query plane is a dynamic slot table.
+
+    Mirrors :class:`OLAEngine` but the jitted round takes a
+    :class:`~repro.core.queries.SlotTable` as a *data* argument: admitting a
+    query mid-scan, retiring one early, or changing a slot's ε/plan is a
+    host-side row write between rounds, with no recompilation and no
+    disturbance to the other slots' statistics.  The workload server
+    (``repro.serve.ola_server.OLAWorkloadServer``) owns admission policy,
+    synopsis seeding, and top-up passes; this class owns device buffers and
+    the jitted step.
+    """
+
+    def __init__(self, store, max_slots: int, config: EngineConfig,
+                 schedule: Optional[np.ndarray] = None,
+                 confidence: float = 0.95):
+        self.store = store
+        self.config = config
+        packed, sizes = store.packed_device_view()
+        self.packed = jnp.asarray(packed)
+        self.program = EngineProgram(
+            codec=store.codec, config=config, n_chunks=store.num_chunks,
+            m_max=store.max_chunk_tuples, chunk_sizes=sizes,
+            schedule=schedule, max_slots=max_slots, confidence=confidence)
+        speeds = config.worker_speed or (1.0,) * config.num_workers
+        assert len(speeds) == config.num_workers
+        self.speeds = jnp.asarray(speeds, jnp.float32)
+        self._round_fns: dict[int, callable] = {}
+        self.m_max = int(store.max_chunk_tuples)
+
+    @property
+    def max_slots(self) -> int:
+        return self.program.max_slots
+
+    def init_state(self) -> EngineState:
+        return self.program.init_state()
+
+    def round_fn(self, b_static: int):
+        if b_static not in self._round_fns:
+            coll = _Collectives()
+
+            def step(state, table, packed, speeds):
+                return self.program.round_body(state, packed, speeds,
+                                               b_static, coll, slots=table)
+
+            self._round_fns[b_static] = jax.jit(step, donate_argnums=(0,))
+        return self._round_fns[b_static]
+
+    def budget_ladder(self, b: float) -> int:
+        return budget_ladder(self.config, self.m_max, b)

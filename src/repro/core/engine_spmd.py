@@ -36,9 +36,22 @@ from repro.core.estimators import BiLevelStats
 from repro.core.queries import Query
 
 try:  # jax >= 0.6 exposes shard_map at the top level
-    shard_map = jax.shard_map
+    _shard_map = jax.shard_map
 except AttributeError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+
+def shard_map(f, **kw):
+    """Version shim: the replication-check kwarg was renamed
+    check_rep -> check_vma across jax releases."""
+    try:
+        return _shard_map(f, **kw)
+    except TypeError:
+        if "check_vma" in kw:
+            kw = dict(kw)
+            kw["check_rep"] = kw.pop("check_vma")
+            return _shard_map(f, **kw)
+        raise
 
 
 def engine_state_specs() -> EngineState:
@@ -51,10 +64,10 @@ def engine_state_specs() -> EngineState:
     stats_spec = BiLevelStats(M=rep, m=rep, ysum=rep, ysq=rep, psum=rep,
                               n_total=rep, m_total=rep)
     return EngineState(
-        stats=stats_spec, offset=rep, closed=rep, acc_met=rep, head=rep,
-        cur=P("data"), budget=rep, decay=rep, calib_sum=rep, calib_cnt=rep,
-        first_est=rep, stopped=rep, round=rep, t_io=rep, t_cpu=rep,
-        cpu_bound=rep, cached_m=rep, raw_touched=rep, cache=rep)
+        stats=stats_spec, scan_m=rep, offset=rep, closed=rep, acc_met=rep,
+        head=rep, cur=P("data"), budget=rep, decay=rep, calib_sum=rep,
+        calib_cnt=rep, first_est=rep, stopped=rep, round=rep, t_io=rep,
+        t_cpu=rep, cpu_bound=rep, cached_m=rep, raw_touched=rep, cache=rep)
 
 
 def report_specs() -> RoundReport:

@@ -14,6 +14,12 @@ All functions broadcast over leading query/group dimensions: arrays are
 ``(..., N)`` where N is the number of chunk slots; slots with ``m == 0`` are
 outside the sample (U') and are masked out.
 
+``m`` itself may carry leading dimensions too: under the workload server each
+query slot joined the scan at a different point, so slot s has its own sample
+size ``m[s, j]`` for chunk j.  Every estimator treats ``m`` as ``(..., N)``
+broadcasting against ``ysum``; the classic single-scan case is the ``(N,)``
+special case and is numerically unchanged.
+
 Numerical conventions: the library computes in the dtype of its inputs
 (float32 inside the engine, float64 under ``jax.experimental.enable_x64`` in
 the statistical tests).  Degenerate cases follow the paper's semantics:
@@ -59,8 +65,9 @@ class BiLevelStats(NamedTuple):
 
     @property
     def n(self) -> jnp.ndarray:
-        """|U'| — number of chunks currently in the sample."""
-        return jnp.sum(self.in_sample.astype(jnp.int32))
+        """|U'| — number of chunks currently in the sample (per leading dim
+        when ``m`` carries per-slot dimensions)."""
+        return jnp.sum(self.in_sample.astype(jnp.int32), axis=-1)
 
     def merge(self, other: "BiLevelStats") -> "BiLevelStats":
         """Combine disjoint samples of the same table (cross-worker psum/add)."""
@@ -116,7 +123,7 @@ def chunk_estimates(stats: BiLevelStats) -> jnp.ndarray:
 def tau_hat(stats: BiLevelStats) -> jnp.ndarray:
     """Eq. (1):  τ̂ = (N / n) Σ_{j∈U'} ŷ_j  — unbiased for τ = Σ_i x_i."""
     dtype = stats.ysum.dtype
-    n = jnp.maximum(stats.n, 1).astype(dtype)
+    n = jnp.maximum(stats.n, 1).astype(dtype)          # (...,) per-slot |U'|
     big_n = _f(stats.n_total, dtype)
     return big_n / n * jnp.sum(chunk_estimates(stats), axis=-1)
 
@@ -138,7 +145,7 @@ def _cov_hat(stats: BiLevelStats, sum_a, sum_b, cross) -> tuple[jnp.ndarray, jnp
     mask = stats.in_sample
     maskf = mask.astype(dtype)
     big_n = _f(stats.n_total, dtype)
-    n = jnp.maximum(stats.n, 1).astype(dtype)
+    n = jnp.maximum(stats.n, 1).astype(dtype)          # (...,) per-slot |U'|
     m = stats.m
     m_safe = jnp.maximum(m, 1).astype(dtype)
     big_m = _f(stats.M, dtype)
@@ -148,8 +155,8 @@ def _cov_hat(stats: BiLevelStats, sum_a, sum_b, cross) -> tuple[jnp.ndarray, jnp
     bhat = jnp.where(mask, scale * sum_b, 0.0)
 
     # ---- between-chunk term:  N/n · (N-n)/(n-1) · Σ_j (âⱼ - ā)(b̂ⱼ - b̄)
-    abar = jnp.sum(ahat, axis=-1, keepdims=True) / n
-    bbar = jnp.sum(bhat, axis=-1, keepdims=True) / n
+    abar = jnp.sum(ahat, axis=-1, keepdims=True) / n[..., None]
+    bbar = jnp.sum(bhat, axis=-1, keepdims=True) / n[..., None]
     between_ss = jnp.sum(maskf * (ahat - abar) * (bhat - bbar), axis=-1)
     n_gt1 = stats.n > 1
     between = jnp.where(
@@ -172,7 +179,8 @@ def _cov_hat(stats: BiLevelStats, sum_a, sum_b, cross) -> tuple[jnp.ndarray, jnp
     within_j = jnp.where(singleton, 0.0, within_j)
     within = big_n / n * jnp.sum(within_j, axis=-1)
 
-    valid = jnp.logical_not(jnp.any(singleton)) & (n_gt1 | (stats.n == stats.n_total))
+    valid = jnp.logical_not(jnp.any(singleton, axis=-1)) & (
+        n_gt1 | (stats.n == stats.n_total))
     return between + within, valid
 
 
@@ -232,23 +240,37 @@ def error_ratio(estimate, lo, hi) -> jnp.ndarray:
     return (hi - lo) / denom
 
 
-def having_decision(lo, hi, op: str, threshold) -> jnp.ndarray:
-    """Decide ``HAVING agg <op> threshold`` from the confidence interval.
+# HAVING op codes shared by the frozen path (string ops) and the slot-table
+# path (per-slot code columns); -1 marks "no HAVING clause".
+HAVING_NONE = -1
+HAVING_OP_CODES = {"<": 0, "<=": 1, ">": 2, ">=": 3}
 
-    Returns int8: 1 = decidedly true, 0 = decidedly false, -1 = undecided.
-    The PTF early-out (Section 1): a verification query stops as soon as the
-    whole interval is on one side of the threshold.
+
+def having_decision_coded(lo, hi, op, threshold) -> jnp.ndarray:
+    """Decide ``HAVING agg <op> threshold`` from the confidence interval,
+    with ``op`` given as (arrays of) ``HAVING_OP_CODES`` values.
+
+    Returns int8: 1 = decidedly true, 0 = decidedly false, -1 = undecided
+    (also -1 wherever ``op == HAVING_NONE``).  The PTF early-out (Section
+    1): a verification query stops as soon as the whole interval is on one
+    side of the threshold.
     """
     t = jnp.asarray(threshold, jnp.asarray(lo).dtype)
-    if op in ("<", "<="):
-        true_ = hi < t if op == "<" else hi <= t
-        false_ = lo > t if op == "<" else lo > t
-    elif op in (">", ">="):
-        true_ = lo > t if op == ">" else lo >= t
-        false_ = hi < t
-    else:
+    op = jnp.asarray(op, jnp.int32)
+    true_ = jnp.select([op == 0, op == 1, op == 2, op == 3],
+                       [hi < t, hi <= t, lo > t, lo >= t], False)
+    false_ = jnp.where(op <= 1, lo > t, hi < t)
+    return jnp.where(
+        op == HAVING_NONE, jnp.int8(-1),
+        jnp.where(true_, jnp.int8(1),
+                  jnp.where(false_, jnp.int8(0), jnp.int8(-1))))
+
+
+def having_decision(lo, hi, op: str, threshold) -> jnp.ndarray:
+    """String-op convenience wrapper over :func:`having_decision_coded`."""
+    if op not in HAVING_OP_CODES:
         raise ValueError(f"unsupported HAVING op: {op}")
-    return jnp.where(true_, jnp.int8(1), jnp.where(false_, jnp.int8(0), jnp.int8(-1)))
+    return having_decision_coded(lo, hi, HAVING_OP_CODES[op], threshold)
 
 
 # ---------------------------------------------------------------------------

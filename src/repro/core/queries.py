@@ -22,10 +22,11 @@ evaluator's coefficient form.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional, Sequence
+from typing import Callable, NamedTuple, Optional, Sequence
 
 import jax.numpy as jnp
 import numpy as np
+from jax.scipy.special import ndtri
 
 # ---------------------------------------------------------------------------
 # Expressions
@@ -245,6 +246,140 @@ class LinearPlan:
     @property
     def num_queries(self) -> int:
         return self.coeffs.shape[0]
+
+
+# ---------------------------------------------------------------------------
+# Dynamic query slot table (workload serving)
+# ---------------------------------------------------------------------------
+#
+# The slot table is the *data-driven* counterpart of ``compile_queries``: a
+# fixed-size (max_slots) array pytree describing up to S concurrently-running
+# linear+range queries.  Because the table is a plain pytree of arrays, the
+# engine round step can take it as a dynamic argument — admitting or retiring
+# a query is a host-side row write, with no recompilation.  Only queries whose
+# expression/predicate fit :class:`LinearPlan` coefficient form are encodable
+# (the same restriction as the Pallas kernels); arbitrary ``Custom`` queries
+# still go through the frozen ``compile_queries`` path.
+
+AGG_SUM, AGG_COUNT, AGG_AVG = 0, 1, 2
+_AGG_CODES = {"sum": AGG_SUM, "count": AGG_COUNT, "avg": AGG_AVG}
+
+PLAN_CHUNK_LEVEL, PLAN_HOLISTIC, PLAN_SINGLE_PASS, PLAN_RESOURCE_AWARE = 0, 1, 2, 3
+PLAN_CODES = {"chunk_level": PLAN_CHUNK_LEVEL, "holistic": PLAN_HOLISTIC,
+              "single_pass": PLAN_SINGLE_PASS,
+              "resource_aware": PLAN_RESOURCE_AWARE}
+
+# op codes live with the decision rule (single source of truth)
+from repro.core.estimators import HAVING_NONE, HAVING_OP_CODES as _HAVING_CODES
+
+
+class SlotTable(NamedTuple):
+    """Dynamic per-slot query descriptors, all arrays of leading dim S.
+
+    ``coeffs/lo/hi`` are the :class:`LinearPlan` coefficient form; ``agg``
+    and ``plan`` are code columns (``AGG_*`` / ``PLAN_*``); ``having_op`` is
+    ``HAVING_NONE`` for slots without a HAVING clause.  ``active`` gates a
+    slot's participation in extraction, chunk-close voting, and stopping.
+    """
+
+    coeffs: jnp.ndarray      # (S, C) f32
+    lo: jnp.ndarray          # (S, C) f32
+    hi: jnp.ndarray          # (S, C) f32
+    agg: jnp.ndarray         # (S,) int32  AGG_* code
+    plan: jnp.ndarray        # (S,) int32  PLAN_* code
+    eps: jnp.ndarray         # (S,) f32 target error ratio
+    z: jnp.ndarray           # (S,) f32 z-score of the slot's confidence level
+    having_op: jnp.ndarray   # (S,) int32  _HAVING_CODES or HAVING_NONE
+    having_thr: jnp.ndarray  # (S,) f32
+    active: jnp.ndarray      # (S,) bool
+
+    @property
+    def max_slots(self) -> int:
+        return int(self.agg.shape[0])
+
+
+def empty_slot_table(max_slots: int, num_cols: int) -> SlotTable:
+    """All-inactive table; inactive slots have an always-false predicate."""
+    s, c = int(max_slots), int(num_cols)
+    return SlotTable(
+        coeffs=jnp.zeros((s, c), jnp.float32),
+        lo=jnp.full((s, c), jnp.inf, jnp.float32),   # empty range: pred False
+        hi=jnp.full((s, c), -jnp.inf, jnp.float32),
+        agg=jnp.zeros((s,), jnp.int32),
+        plan=jnp.full((s,), PLAN_RESOURCE_AWARE, jnp.int32),
+        eps=jnp.ones((s,), jnp.float32),
+        z=jnp.full((s,), 1.959964, jnp.float32),   # 95% placeholder
+        having_op=jnp.full((s,), HAVING_NONE, jnp.int32),
+        having_thr=jnp.zeros((s,), jnp.float32),
+        active=jnp.zeros((s,), bool),
+    )
+
+
+def encode_slot(query: Query, num_cols: int, plan: str = "resource_aware",
+                ) -> dict:
+    """Encode one linear+range query as a slot-table row (numpy scalars/rows).
+
+    Raises ``ValueError`` (via :func:`linear_plan`) for queries outside the
+    coefficient form.
+    """
+    lp = linear_plan([query], num_cols)
+    hop = HAVING_NONE if query.having is None else _HAVING_CODES[query.having.op]
+    thr = 0.0 if query.having is None else float(query.having.threshold)
+    return dict(
+        coeffs=lp.coeffs[0], lo=lp.lo[0], hi=lp.hi[0],
+        agg=np.int32(_AGG_CODES[query.agg]),
+        plan=np.int32(PLAN_CODES[plan]),
+        eps=np.float32(query.epsilon),
+        z=np.float32(ndtri((1.0 + query.confidence) / 2.0)),
+        having_op=np.int32(hop), having_thr=np.float32(thr),
+        active=True,
+    )
+
+
+def slot_table_set(table: SlotTable, s: int, row: dict) -> SlotTable:
+    """Functional row write (host-side, between rounds)."""
+    return SlotTable(
+        coeffs=table.coeffs.at[s].set(jnp.asarray(row["coeffs"], jnp.float32)),
+        lo=table.lo.at[s].set(jnp.asarray(row["lo"], jnp.float32)),
+        hi=table.hi.at[s].set(jnp.asarray(row["hi"], jnp.float32)),
+        agg=table.agg.at[s].set(jnp.int32(row["agg"])),
+        plan=table.plan.at[s].set(jnp.int32(row["plan"])),
+        eps=table.eps.at[s].set(jnp.float32(row["eps"])),
+        z=table.z.at[s].set(jnp.float32(row["z"])),
+        having_op=table.having_op.at[s].set(jnp.int32(row["having_op"])),
+        having_thr=table.having_thr.at[s].set(jnp.float32(row["having_thr"])),
+        active=table.active.at[s].set(bool(row["active"])),
+    )
+
+
+def slot_table_clear(table: SlotTable, s: int) -> SlotTable:
+    """Deactivate a slot (query retired); descriptors are left in place so
+    the final round's report for the slot stays readable."""
+    return table._replace(active=table.active.at[s].set(False))
+
+
+def slot_evaluate(table: SlotTable, cols: jnp.ndarray,
+                  ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Data-driven tile evaluator: ``cols (..., C) -> (x, p) (S, ...)``.
+
+    Mirrors ``compile_queries`` semantics: ``p`` is the 0/1 conjunctive-range
+    predicate indicator, ``x`` the predicate-masked expression value (1 for
+    COUNT slots).  Inactive slots produce all-zero rows (their range is
+    empty), so they never contaminate merged statistics.
+    """
+    dtype = cols.dtype
+    c = cols[..., None, :]                                      # (..., 1, C)
+    # unconstrained columns carry lo=-inf / hi=+inf, which satisfy both
+    # comparisons for any finite value — no special-casing needed
+    inb = (c >= table.lo.astype(dtype)) & (c < table.hi.astype(dtype))
+    p = jnp.all(inb, axis=-1)                                   # (..., S)
+    lin = jnp.einsum("...c,sc->...s", cols, table.coeffs.astype(dtype))
+    is_count = table.agg == AGG_COUNT
+    expr = jnp.where(is_count, jnp.ones_like(lin), lin)
+    pf = p.astype(dtype)
+    x = expr * pf
+    # move the slot axis to the front: (..., S) -> (S, ...)
+    return jnp.moveaxis(x, -1, 0), jnp.moveaxis(pf, -1, 0)
 
 
 def linear_plan(queries: Sequence[Query], num_cols: int) -> LinearPlan:

@@ -25,6 +25,17 @@ Maintenance is a between-queries host-side pass (numpy) over the engine's
 device-built extraction cache; estimation seeding evaluates the *new* query
 on the cached tuples, which is what lets a different expression/predicate
 reuse the same sample (Section 6.3).
+
+Under the workload server the same machinery runs *mid-scan*: the synopsis
+absorbs the shared scan's extraction cache on demand, and :meth:`seed_slot`
+produces per-slot stats rows for a query admitted while the scan is running.
+Because every cached window lies inside the already-scanned prefix of each
+chunk's permutation (the scan cursor is at or past the window end), a seeded
+window and the slot's future extraction are disjoint index sets of one keyed
+permutation — their union is still a uniform without-replacement sample.
+The scan *top-up* (re-opening early-closed chunks when a later query needs
+more tuples) is driven by the server; the synopsis only guarantees window
+alignment.
 """
 
 from __future__ import annotations
@@ -91,9 +102,14 @@ class BiLevelSynopsis:
         in schedule order (= extraction order); windows merge with any
         existing window for the same chunk (engine cursors continued from the
         synopsis window end, so cached rows align with window ordinals).
+
+        ``state`` may come from a frozen-query engine or the slot-table
+        engine — extraction counts are read from the scan-level ``scan_m``
+        (identical to ``stats.m`` in frozen mode, shared across slots in
+        slot mode).
         """
         cache = np.asarray(state.cache)          # (N, cap, C)
-        m = np.asarray(state.stats.m)            # (N,)
+        m = np.asarray(state.scan_m)             # (N,) scan-level
         cached_m = np.asarray(state.cached_m)
         offset = np.asarray(state.offset)
         cap = cache.shape[1]
@@ -145,12 +161,23 @@ class BiLevelSynopsis:
 
     # ---------------------------------------------------------- estimation --
     def within_variances(self, state) -> np.ndarray:
-        """Per-chunk within-variance proxy from engine stats (allocation key)."""
+        """Per-chunk within-variance proxy from engine stats (allocation key).
+
+        Frozen mode keys the allocation on the origin (first) query, as
+        before.  In slot mode ``stats.m`` is per-slot ``(S, N)``; the
+        allocation driver is the worst case (max) across slots, so the
+        budget favors chunks that are high-variance for *any* live query.
+        """
         m = np.asarray(state.stats.m, np.float64)
-        ys = np.asarray(state.stats.ysum)[0].astype(np.float64)
-        yq = np.asarray(state.stats.ysq)[0].astype(np.float64)
+        ys = np.asarray(state.stats.ysum).astype(np.float64)
+        yq = np.asarray(state.stats.ysq).astype(np.float64)
+        if m.ndim == 1:
+            ys, yq = ys[0], yq[0]
+            ss = yq - np.where(m > 0, ys * ys / np.maximum(m, 1.0), 0.0)
+            return np.maximum(ss / np.maximum(m - 1.0, 1.0), 0.0)
         ss = yq - np.where(m > 0, ys * ys / np.maximum(m, 1.0), 0.0)
-        return np.maximum(ss / np.maximum(m - 1.0, 1.0), 0.0)
+        v = np.maximum(ss / np.maximum(m - 1.0, 1.0), 0.0)
+        return v.max(axis=0)
 
     def seed(self, queries: Sequence[Query], cache_cap: int) -> dict:
         """Engine seed for a follow-up query (Section 6.3): evaluate the new
@@ -179,6 +206,39 @@ class BiLevelSynopsis:
             cache[j, :rows] = ch.values[:rows]
         return dict(m=m, ysum=ysum, ysq=ysq, psum=psum, offset=offset,
                     cache=cache)
+
+    def seed_slot(self, query: Query) -> Optional[dict]:
+        """Per-slot sufficient-statistics rows for one mid-scan admission.
+
+        Evaluates ``query`` over every cached window and returns
+        ``dict(m (N,), ysum (N,), ysq (N,), psum (N,))`` — the slot's seed
+        sample over the already-started chunk set.  Returns ``None`` when the
+        synopsis is empty or cannot serve the query's column support (the
+        slot then starts cold and only accumulates from future rounds).
+
+        The window/cursor alignment argument from the module docstring makes
+        the seeded sample and the scan's future extraction disjoint, so the
+        engine can simply keep adding round deltas on top of these rows.
+        """
+        if not self.chunks or not self.supports([query]):
+            return None
+        n = self.n_chunks
+        evaluate = compile_queries([query])
+        m = np.zeros(n, np.int32)
+        ysum = np.zeros(n, np.float32)
+        ysq = np.zeros(n, np.float32)
+        psum = np.zeros(n, np.float32)
+        for j, ch in self.chunks.items():
+            if ch.count == 0:
+                continue
+            x, p = evaluate(jnp.asarray(ch.values, jnp.float32))
+            x = np.asarray(x)[0]
+            p = np.asarray(p)[0]
+            m[j] = ch.count
+            ysum[j] = x.sum()
+            ysq[j] = (x * x).sum()
+            psum[j] = p.sum()
+        return dict(m=m, ysum=ysum, ysq=ysq, psum=psum)
 
     def plan_schedule(self, base_schedule: np.ndarray,
                       by_variance: Optional[np.ndarray] = None) -> np.ndarray:

@@ -35,10 +35,8 @@ from repro.core.queries import Column, Having, Query, Range, TRUE
 from repro.data.formats import AsciiFixedFormat
 from repro.sampling.permutation import permutation_window_dyn, random_chunk_order
 
-try:
-    shard_map = jax.shard_map
-except AttributeError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map
+# version-shimmed (check_rep -> check_vma rename handled there)
+from repro.core.engine_spmd import shard_map
 
 
 def production_verify_program(n_chunks: int = 4096, m_per_chunk: int = 65536,
@@ -174,7 +172,8 @@ def _sharded_round(program: EngineProgram, n_dev: int, budget: int):
         from repro.core.engine import EngineState, RoundReport
 
         new_state = EngineState(
-            stats=stats, offset=offset, closed=closed, acc_met=state.acc_met,
+            stats=stats, scan_m=state.scan_m + deltas["dm"],
+            offset=offset, closed=closed, acc_met=state.acc_met,
             head=state.head + 1, cur=state.cur, budget=state.budget,
             decay=state.decay, calib_sum=state.calib_sum,
             calib_cnt=state.calib_cnt, first_est=jnp.asarray(True),

@@ -1,5 +1,14 @@
-"""Serving plane: batched decode engine over the model zoo."""
+"""Serving plane: batched decode engine over the model zoo, plus the OLA
+workload server (shared-scan multi-query serving)."""
 
 from repro.serve.engine import ServeEngine
+from repro.serve.ola_server import (
+    OLAWorkloadServer,
+    WorkloadQuery,
+    WorkloadResult,
+    poisson_workload,
+    select_plan,
+)
 
-__all__ = ["ServeEngine"]
+__all__ = ["ServeEngine", "OLAWorkloadServer", "WorkloadQuery",
+           "WorkloadResult", "poisson_workload", "select_plan"]

@@ -1,0 +1,437 @@
+"""Workload serving for OLA queries: one shared scan, many concurrent queries.
+
+The paper's end goal is workload-level exploration — "OLA-RAW chooses the
+sampling plan that minimizes the execution time and guarantees the required
+accuracy for each query in a given workload".  This module turns the
+single-batch engine into a *server*: aggregate queries arrive as a stream and
+are multiplexed onto a **single shared scan** of the raw table, mirroring the
+slot/queue shape of ``serve/engine.py`` (continuous batching):
+
+* **slots** — up to ``max_slots`` queries are resident at once, described by
+  a dynamic :class:`~repro.core.queries.SlotTable` the jitted round step
+  takes as data (no recompilation on admission/retirement);
+* **mid-scan admission** — a query can join while the scan is running: its
+  per-slot sufficient statistics are seeded from the
+  :class:`~repro.core.synopsis.BiLevelSynopsis` (which absorbs the scan's
+  extraction cache on demand), so it starts with an estimate over the
+  already-started chunk set instead of cold;
+* **early leave** — a query retires the moment its HAVING verdict or ε
+  target is met, freeing its slot *without* stopping the scan for others
+  (the scan is query-independent, so survivors' statistics are untouched);
+* **top-up passes** — if the scan wound down (chunks closed at the then-live
+  accuracy targets) but a newly admitted query needs more data, the server
+  re-opens non-exhausted chunks and restarts the schedule head; per-chunk
+  permutation cursors continue, so samples stay prefix-of-permutation;
+* **per-query plan selection** — :func:`select_plan` picks
+  chunk_level/holistic/single_pass/resource_aware per admitted query from
+  the Eq. (4) cost terms the resource monitor already models.
+
+Total work is sub-additive in the number of queries: a shared scan serves the
+whole workload with roughly the tuple budget of its most demanding member,
+instead of one scan per query (see ``benchmarks/bench_workload.py``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.controller import _answer_from_stats
+from repro.core.engine import IDLE, EngineConfig, SlotOLAEngine
+from repro.core.queries import (
+    PLAN_CODES,
+    Query,
+    empty_slot_table,
+    encode_slot,
+    slot_table_clear,
+    slot_table_set,
+)
+from repro.core.synopsis import BiLevelSynopsis
+from repro.core import estimators as est
+
+
+def select_plan(store, config: EngineConfig, query: Query) -> str:
+    """Cost-model plan selector for one admitted query.
+
+    Uses the two Eq. (4) cost terms the resource monitor models — a full
+    pass's READ time ``T_io`` and EXTRACT time ``T_cpu`` — to pick the
+    strategy whose regime the paper's Fig. 11 shows it wins:
+
+    * ``epsilon <= 0`` (an exact answer is demanded): ``chunk_level`` — the
+      reordering barrier delivers fully-extracted chunks in schedule order.
+    * IO-bound (``T_cpu < T_io / 2``): ``holistic`` — extraction is free
+      relative to reading, so extract everything that is read.
+    * CPU-bound (``T_cpu > 2 T_io``): ``single_pass`` — stop extracting a
+      chunk at local accuracy; reading ahead is cheap.
+    * otherwise: ``resource_aware`` — let the runtime monitor switch.
+    """
+    total_bytes = float(store.chunk_sizes.sum()) * store.codec.record_bytes
+    t_io = total_bytes / config.io_bytes_per_sec
+    t_cpu = (float(store.num_tuples) * store.codec.extract_cost_per_tuple()
+             / config.cpu_tuple_ops_per_sec / config.num_workers)
+    if query.epsilon <= 0.0:
+        return "chunk_level"
+    ratio = t_cpu / max(t_io, 1e-12)
+    if ratio < 0.5:
+        return "holistic"
+    if ratio > 2.0:
+        return "single_pass"
+    return "resource_aware"
+
+
+@dataclasses.dataclass
+class WorkloadQuery:
+    """One submitted query: the aggregate plus its workload metadata."""
+
+    qid: int
+    query: Query
+    arrival_t: float = 0.0          # modeled seconds on the server clock
+    plan: Optional[str] = None      # None -> cost-model selector
+    row: Optional[dict] = None      # slot row encoded (and validated) at submit
+
+
+@dataclasses.dataclass
+class WorkloadResult:
+    qid: int
+    name: str
+    estimate: float
+    lo: float
+    hi: float
+    err: float
+    decision: int                   # HAVING verdict (-1/0/1)
+    plan: str
+    t_submit: float                 # arrival (modeled s)
+    t_admit: float                  # slot grant (modeled s)
+    t_done: float                   # retirement (modeled s)
+    seeded_tuples: int              # tuples supplied by the synopsis at admit
+    tuples_seen: int                # slot sample size at retirement
+    rounds_resident: int
+    from_synopsis: bool = False     # answered at admission, zero scan rounds
+    unserved: bool = False          # scan exhausted before the slot saw any
+                                    # tuple (no synopsis seed): estimate is NaN
+
+    @property
+    def latency(self) -> float:
+        return self.t_done - self.t_submit
+
+
+class OLAWorkloadServer:
+    """Admits a stream of aggregate queries onto one shared OLA scan.
+
+    The server is a host-side loop around :class:`SlotOLAEngine`:
+    ``submit`` enqueues, ``step`` runs one engine round (admitting and
+    retiring between rounds), ``run`` drives to completion.  The modeled
+    clock is Eq. (4)'s overlapped-pipeline time ``max(t_io, t_cpu)`` plus
+    any idle gaps the server skips while waiting for arrivals.
+    """
+
+    def __init__(self, store, config: EngineConfig, max_slots: int = 8,
+                 synopsis_budget_tuples: int = 4096,
+                 confidence: float = 0.95,
+                 schedule: Optional[np.ndarray] = None):
+        if config.cache_cap == 0 and synopsis_budget_tuples > 0:
+            # mid-scan seeding needs the extraction cache
+            cap = max(64, int(np.ceil(4 * synopsis_budget_tuples
+                                      / max(store.num_chunks, 1))))
+            config = dataclasses.replace(config, cache_cap=cap)
+        self.store = store
+        self.config = config
+        self.engine = SlotOLAEngine(store, max_slots, config,
+                                    schedule=schedule, confidence=confidence)
+        self.table = empty_slot_table(max_slots, store.codec.num_cols)
+        self.state = self.engine.init_state()
+        self.max_slots = max_slots
+        self.synopsis: Optional[BiLevelSynopsis] = None
+        if synopsis_budget_tuples > 0:
+            self.synopsis = BiLevelSynopsis(
+                n_chunks=store.num_chunks, num_cols=store.codec.num_cols,
+                budget_tuples=synopsis_budget_tuples,
+                chunk_sizes=store.chunk_sizes)
+        self.queue: list[WorkloadQuery] = []
+        self.slot_wq: list[Optional[WorkloadQuery]] = [None] * max_slots
+        self.slot_admit_t = np.zeros(max_slots)
+        self.slot_admit_round = np.zeros(max_slots, np.int64)
+        self.slot_plan = [""] * max_slots
+        self.slot_seeded = np.zeros(max_slots, np.int64)
+        self.results: list[WorkloadResult] = []
+        self.rounds = 0
+        self.topup_passes = 0
+        self.idle_offset = 0.0
+        self.truncated = False
+        self._next_qid = 0
+
+    # ------------------------------------------------------------- clock ----
+    @property
+    def t_model(self) -> float:
+        """Modeled seconds since server start (Eq. 4 clock + idle skips)."""
+        return max(float(self.state.t_io), float(self.state.t_cpu)) \
+            + self.idle_offset
+
+    @property
+    def tuples_scanned(self) -> int:
+        """Raw tuples the shared scan has extracted (workload total)."""
+        return int(np.asarray(self.state.scan_m).sum())
+
+    # ------------------------------------------------------------ intake ----
+    def submit(self, query: Query, arrival_t: Optional[float] = None,
+               plan: Optional[str] = None) -> int:
+        """Enqueue a query; returns its qid.  ``arrival_t`` defaults to the
+        current modeled time (an online submission).
+
+        Raises at submit time (not mid-scan at admission) when the query is
+        outside the slot-encodable linear+range form, the plan is unknown,
+        or the scan is already fully extracted with no synopsis to answer
+        from (the query could never receive a tuple).
+        """
+        if plan is not None and plan not in PLAN_CODES:
+            raise ValueError(
+                f"unknown plan {plan!r}; expected one of {sorted(PLAN_CODES)}")
+        row = encode_slot(query, self.store.codec.num_cols)  # validates early
+        if self.synopsis is None and not (
+                np.asarray(self.state.scan_m)
+                < np.asarray(self.store.chunk_sizes)).any():
+            raise ValueError(
+                "scan fully extracted and no synopsis configured: the query "
+                "can never be served; construct the server with "
+                "synopsis_budget_tuples > 0")
+        qid = self._next_qid
+        self._next_qid += 1
+        at = self.t_model if arrival_t is None else float(arrival_t)
+        self.queue.append(WorkloadQuery(qid=qid, query=query, arrival_t=at,
+                                        plan=plan, row=row))
+        self.queue.sort(key=lambda wq: (wq.arrival_t, wq.qid))
+        return qid
+
+    # --------------------------------------------------------- admission ----
+    def _free_slots(self) -> list[int]:
+        return [s for s in range(self.max_slots) if self.slot_wq[s] is None]
+
+    def _refresh_synopsis(self) -> None:
+        """Absorb the scan's extraction cache into the synopsis (on demand,
+        before seeding a newcomer)."""
+        if self.synopsis is None:
+            return
+        if int(np.asarray(self.state.scan_m).sum()) == 0:
+            return
+        variances = self.synopsis.within_variances(self.state)
+        self.synopsis.update_from_engine(
+            self.state, np.asarray(self.engine.program.schedule), variances)
+
+    def _admit_ready(self) -> None:
+        now = self.t_model
+        while self.queue and self.queue[0].arrival_t <= now:
+            free = self._free_slots()   # recompute: seed-answered slots refree
+            if not free:
+                break
+            wq = self.queue.pop(0)
+            self._admit(free[0], wq)
+
+    def _admit(self, s: int, wq: WorkloadQuery) -> None:
+        plan = wq.plan or select_plan(self.store, self.config, wq.query)
+        row = wq.row or encode_slot(wq.query, self.store.codec.num_cols)
+        row["plan"] = np.int32(PLAN_CODES[plan])
+        self._refresh_synopsis()
+        seed = self.synopsis.seed_slot(wq.query) if self.synopsis else None
+
+        n = self.store.num_chunks
+        dtype = self.state.stats.ysum.dtype
+        if seed is None:
+            m_row = jnp.zeros((n,), jnp.int32)
+            zs = jnp.zeros((n,), dtype)
+            ys_row, yq_row, ps_row = zs, zs, zs
+            seeded = 0
+        else:
+            m_row = jnp.asarray(seed["m"], jnp.int32)
+            ys_row = jnp.asarray(seed["ysum"], dtype)
+            yq_row = jnp.asarray(seed["ysq"], dtype)
+            ps_row = jnp.asarray(seed["psum"], dtype)
+            seeded = int(seed["m"].sum())
+
+        stats = self.state.stats
+        stats = stats._replace(
+            m=stats.m.at[s].set(m_row),
+            ysum=stats.ysum.at[s].set(ys_row),
+            ysq=stats.ysq.at[s].set(yq_row),
+            psum=stats.psum.at[s].set(ps_row))
+        self.state = self.state._replace(
+            stats=stats, stopped=self.state.stopped.at[s].set(False))
+        self.table = slot_table_set(self.table, s, row)
+        self.slot_wq[s] = wq
+        self.slot_admit_t[s] = self.t_model
+        self.slot_admit_round[s] = self.rounds
+        self.slot_plan[s] = plan
+        self.slot_seeded[s] = seeded
+
+        # Section 6.3 best case, per slot: the seed alone may already meet
+        # the target — answer at admission without consuming scan rounds.
+        # No top-up here: while the newcomer is live its accuracy votes keep
+        # chunks from closing early, and if the scan still winds down before
+        # it is satisfied, step()'s exhausted branch re-opens chunks then —
+        # top-up passes happen only when provably needed.
+        if seed is not None:
+            self._try_retire_from_seed(s, wq)
+
+    def _try_retire_from_seed(self, s: int, wq: WorkloadQuery) -> bool:
+        q = wq.query
+        stats_row = self.state.stats._replace(
+            m=self.state.stats.m[s], ysum=self.state.stats.ysum[s][None],
+            ysq=self.state.stats.ysq[s][None],
+            psum=self.state.stats.psum[s][None])
+        est_v, lo, hi, err = _answer_from_stats([q], stats_row)
+        e = float(np.asarray(err)[0])
+        decision = -1
+        if q.having is not None:
+            decision = int(est.having_decision(
+                np.asarray(lo)[0], np.asarray(hi)[0], q.having.op,
+                q.having.threshold))
+        if e > q.epsilon and decision == -1:
+            return False
+        self.results.append(WorkloadResult(
+            qid=wq.qid, name=q.name, estimate=float(np.asarray(est_v)[0]),
+            lo=float(np.asarray(lo)[0]), hi=float(np.asarray(hi)[0]), err=e,
+            decision=decision, plan=self.slot_plan[s],
+            t_submit=wq.arrival_t, t_admit=self.slot_admit_t[s],
+            t_done=self.t_model, seeded_tuples=int(self.slot_seeded[s]),
+            tuples_seen=int(np.asarray(self.state.stats.m[s]).sum()),
+            rounds_resident=0, from_synopsis=True))
+        self._release(s)
+        return True
+
+    def _release(self, s: int) -> None:
+        self.table = slot_table_clear(self.table, s)
+        self.state = self.state._replace(
+            stopped=self.state.stopped.at[s].set(True))
+        self.slot_wq[s] = None
+
+    # ----------------------------------------------------------- top-up ----
+    def _begin_topup_pass(self) -> bool:
+        """Re-open early-closed chunks and rewind the schedule head to the
+        first not-closed position (not all the way to 0 — fully-extracted
+        prefix chunks would only burn a claim round each).  Worker claims
+        are dropped to IDLE so re-claiming is race-free; a re-opened chunk
+        is charged as a fresh raw READ when extraction resumes past its
+        cached tuples.  Per-chunk permutation cursors continue where they
+        left off, so samples stay prefixes of each chunk's random order.
+        Returns False when every chunk is fully extracted (nothing to top
+        up)."""
+        sizes = np.asarray(self.store.chunk_sizes)
+        scan_m = np.asarray(self.state.scan_m)
+        not_exhausted = scan_m < sizes
+        if not not_exhausted.any():
+            return False
+        reopened = np.asarray(self.state.closed) & not_exhausted
+        closed = np.asarray(self.state.closed) & ~not_exhausted
+        schedule = np.asarray(self.engine.program.schedule)
+        done_sched = closed[schedule]
+        new_head = (len(schedule) if done_sched.all()
+                    else int(np.argmax(~done_sched)))
+        raw_touched = np.asarray(self.state.raw_touched) & ~reopened
+        self.state = self.state._replace(
+            closed=jnp.asarray(closed),
+            head=jnp.asarray(new_head, jnp.int32),
+            cur=jnp.full_like(self.state.cur, IDLE),
+            raw_touched=jnp.asarray(raw_touched))
+        self.topup_passes += 1
+        return True
+
+    # -------------------------------------------------------------- step ----
+    def _retire_finished(self, rep, unserved: frozenset = frozenset()) -> None:
+        stopped = np.asarray(self.state.stopped)
+        for s in range(self.max_slots):
+            wq = self.slot_wq[s]
+            if wq is None or not stopped[s]:
+                continue
+            bad = s in unserved
+            self.results.append(WorkloadResult(
+                qid=wq.qid, name=wq.query.name,
+                estimate=float("nan") if bad else float(rep.estimate[s]),
+                lo=float(rep.lo[s]),
+                hi=float(rep.hi[s]), err=float(rep.err[s]),
+                decision=int(rep.decided[s]), plan=self.slot_plan[s],
+                t_submit=wq.arrival_t, t_admit=self.slot_admit_t[s],
+                t_done=self.t_model, seeded_tuples=int(self.slot_seeded[s]),
+                tuples_seen=int(np.asarray(self.state.stats.m[s]).sum()),
+                rounds_resident=int(self.rounds - self.slot_admit_round[s]),
+                unserved=bad))
+            self._release(s)
+
+    def _any_active(self) -> bool:
+        return any(wq is not None for wq in self.slot_wq)
+
+    def step(self) -> bool:
+        """Admit ready arrivals, run one engine round, retire finished
+        queries.  Returns False when there is nothing to do right now."""
+        self._admit_ready()
+        if not self._any_active():
+            return False
+        b = self.engine.budget_ladder(float(self.state.budget))
+        self.state, rep = self.engine.round_fn(b)(
+            self.state, self.table, self.engine.packed, self.engine.speeds)
+        self.rounds += 1
+        self._retire_finished(rep)
+        if self._any_active() and bool(rep.exhausted):
+            if not self._begin_topup_pass():
+                # census complete: estimates are as good as they will get
+                self._force_retire_exhausted(rep)
+        return True
+
+    def _force_retire_exhausted(self, rep) -> None:
+        """Every chunk is fully extracted; retire survivors with their final
+        (near-exact for slots that saw the whole scan) estimates.  A slot
+        that never received a single tuple (admitted post-exhaustion with no
+        synopsis seed) cannot be answered — its result is flagged
+        ``unserved`` with a NaN estimate rather than a plausible-looking 0."""
+        m = np.asarray(self.state.stats.m)
+        unserved = frozenset(
+            s for s in range(self.max_slots)
+            if self.slot_wq[s] is not None and int(m[s].sum()) == 0)
+        self.state = self.state._replace(
+            stopped=jnp.ones_like(self.state.stopped))
+        self._retire_finished(rep, unserved=unserved)
+
+    # --------------------------------------------------------------- run ----
+    def run(self, max_rounds: int = 200_000, wall_timeout_s: float = 600.0,
+            ) -> list[WorkloadResult]:
+        """Drive until the queue drains and every resident query retires.
+
+        If ``max_rounds`` or ``wall_timeout_s`` cuts the loop short,
+        ``self.truncated`` is set and the returned list is missing the
+        unfinished queries — callers indexing results by name/qid should
+        check it rather than assume completeness.
+        """
+        self.truncated = False
+        t0 = time.perf_counter()
+        while self.queue or self._any_active():
+            if self.rounds >= max_rounds:
+                self.truncated = True
+                break
+            if time.perf_counter() - t0 > wall_timeout_s:
+                self.truncated = True
+                break
+            if not self.step():
+                if not self.queue:
+                    break
+                # idle: jump the modeled clock to the next arrival
+                nxt = self.queue[0].arrival_t
+                if nxt > self.t_model:
+                    self.idle_offset += nxt - self.t_model
+        self.results.sort(key=lambda r: r.qid)
+        return self.results
+
+
+def poisson_workload(queries: Sequence[Query], rate_per_model_s: float,
+                     seed: int = 0) -> list[tuple[Query, float]]:
+    """Poisson arrival process over a fixed query list (benchmark helper):
+    returns ``(query, arrival_t)`` pairs with exponential inter-arrivals at
+    ``rate_per_model_s`` arrivals per modeled second."""
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    out = []
+    for q in queries:
+        t += float(rng.exponential(1.0 / rate_per_model_s))
+        out.append((q, t))
+    return out

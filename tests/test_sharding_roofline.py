@@ -69,7 +69,10 @@ for arch in ["smollm-135m", "mixtral-8x7b", "zamba2-1.2b", "xlstm-125m"]:
 cell = build_cell("smollm-135m", "train_4k", mesh, unroll_for_cost=False)
 lowered = lower_cell(cell)
 compiled = lowered.compile()
-report["cell_ok"] = compiled.cost_analysis()["flops"] > 0
+ca = compiled.cost_analysis()
+if isinstance(ca, list):  # older jax returns [dict]
+    ca = ca[0]
+report["cell_ok"] = ca["flops"] > 0
 print(json.dumps(report))
 """
 
