@@ -20,6 +20,7 @@ BENCHES = [
     ("utilization", "benchmarks.bench_utilization"),     # Fig. 14
     ("bounds_mc", "benchmarks.bench_bounds_mc"),         # Table 3
     ("kernels", "benchmarks.bench_kernels"),             # EXTRACT hot spot
+    ("slot_kernel", "benchmarks.bench_slot_kernel"),     # fused round extract
     ("ola_eval", "benchmarks.bench_ola_eval"),           # beyond-paper eval
     ("workload", "benchmarks.bench_workload"),           # shared-scan serving
 ]

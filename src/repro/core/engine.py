@@ -77,8 +77,10 @@ from repro.core.queries import (
     Query,
     SlotTable,
     compile_queries,
+    linear_plan,
     slot_evaluate,
 )
+from repro.kernels import ops as kernel_ops
 from repro.sampling.permutation import (
     chunk_seed,
     permutation_window_dyn,
@@ -110,9 +112,19 @@ class EngineConfig:
     worker_speed: Optional[tuple] = None
     stats_dtype: str = "float32"
     cache_cap: int = 0           # per-chunk extracted-tuple cache rows (synopsis)
+    # round EXTRACT implementation: "ref" keeps the decode_ref + evaluator
+    # composition (supports arbitrary Custom queries); "pallas" routes the
+    # gather+parse+eval+reduce through the fused kernels/slot_extract.py
+    # kernel (linear+range plans only; interpret-mode fallback off-TPU);
+    # "pallas-interpret" forces the Pallas interpreter even on TPU (the
+    # benchmark's correctness-mode lane); "auto" picks pallas on TPU when the
+    # plan supports it and ref elsewhere.
+    extract_backend: str = "ref"
 
     def __post_init__(self):
         assert self.strategy in STRATEGIES, self.strategy
+        assert self.extract_backend in ("ref", "pallas", "pallas-interpret",
+                                        "auto"), self.extract_backend
 
 
 class EngineState(NamedTuple):
@@ -233,6 +245,46 @@ class EngineProgram:
         self.cost_per_tuple = float(codec.extract_cost_per_tuple())
         self.total_tuples = int(np.sum(chunk_sizes))
         self.num_cols = int(codec.num_cols)
+        # EXTRACT backend resolution (static — baked into the jitted round).
+        # The fused kernel parses fixed-width ASCII, needs linear+range
+        # plans, and accumulates in float32: an explicit
+        # "pallas"/"pallas-interpret" outside that raises here (not
+        # mid-scan), while "auto" quietly keeps the ref path — binary decode
+        # is near-free anyway (those stores are IO-bound, not EXTRACT-bound),
+        # Custom frozen queries have no coefficient form, and a non-f32
+        # stats dtype must not be silently degraded to f32 sums.  Explicit
+        # "pallas" off-TPU runs the kernel in interpret mode;
+        # "pallas-interpret" forces the interpreter even on TPU.
+        kernel_ok = (getattr(codec, "name", "") == "ascii"
+                     and jnp.dtype(config.stats_dtype) == jnp.float32)
+        backend = config.extract_backend
+        lp = None
+        if backend == "auto":
+            backend = ("pallas" if jax.default_backend() == "tpu" and kernel_ok
+                       else "ref")
+            if backend == "pallas" and self.max_slots is None:
+                try:
+                    lp = linear_plan(self.queries, self.num_cols)
+                except ValueError:
+                    backend = "ref"
+        elif backend != "ref" and not kernel_ok:
+            raise ValueError(
+                f"extract_backend={backend!r} requires the fixed-width ASCII "
+                "codec and float32 stats (the fused kernel parses ASCII "
+                "records and accumulates its sums in f32)")
+        self._ops_backend = None if backend == "ref" else backend
+        self.extract_pallas = self._ops_backend is not None
+        if self.extract_pallas:
+            if self.max_slots is None:
+                # frozen plane: lower the query list to coefficient form once;
+                # raises for queries outside linear+range (use 'ref' there)
+                lp = lp or linear_plan(self.queries, self.num_cols)
+                self._plan_coeffs = jnp.asarray(lp.coeffs)
+                self._plan_lo = jnp.asarray(lp.lo)
+                self._plan_hi = jnp.asarray(lp.hi)
+                self._plan_is_count = jnp.asarray(
+                    [1.0 if qq.agg == "count" else 0.0 for qq in self.queries],
+                    jnp.float32)
 
     @property
     def q_dim(self) -> int:
@@ -357,25 +409,50 @@ class EngineProgram:
             return permutation_window_dyn(seed_j, off_j, b_static, mj_j, self.m_max)
 
         idx = jax.vmap(window)(self.seeds[j], off, mj)           # (W, B)
-        raw = jax.vmap(lambda jj, ii: packed[jj][ii])(j, idx)    # (W, B, rec)
-        cols = jax.vmap(self.codec.decode_ref)(raw)              # (W, B, C)
-        if slot_mode:
-            x, pr = slot_evaluate(slots, cols)                   # (S, W, B)
-            gate = slots.active.astype(dtype)[:, None, None]
+        cap = cfg.cache_cap
+        if self.extract_pallas:
+            # Fused kernel: gather + parse + slot eval + per-(worker, slot)
+            # partial stats in one pass — no (S, W, B) eval tensor and no
+            # decoded (W, B, C) copy (the decoded slab is emitted only when
+            # the synopsis extraction cache needs it).
+            if slot_mode:
+                coeffs, p_lo, p_hi = slots.coeffs, slots.lo, slots.hi
+                isc = (slots.agg == AGG_COUNT).astype(jnp.float32)
+                gate_v = slots.active.astype(jnp.float32)
+            else:
+                coeffs, p_lo, p_hi = (self._plan_coeffs, self._plan_lo,
+                                      self._plan_hi)
+                isc = self._plan_is_count
+                gate_v = jnp.ones((q,), jnp.float32)
+            stats4, cols = kernel_ops.slot_extract(
+                packed, j, idx, b_eff, coeffs, p_lo, p_hi, isc, gate_v,
+                return_cols=cap > 0, backend=self._ops_backend)
+            sum_x = stats4[..., 1].astype(dtype).T               # (Q|S, W)
+            sum_xx = stats4[..., 2].astype(dtype).T
+            sum_p = stats4[..., 3].astype(dtype).T
         else:
-            x, pr = jax.vmap(self.evaluate, in_axes=0, out_axes=1)(cols)  # (Q, W, B)
-            gate = jnp.ones((), dtype)
-        vf = valid.astype(dtype)[None]
-        x = x.astype(dtype) * vf * gate
-        pr = pr.astype(dtype) * vf * gate
+            raw = jax.vmap(lambda jj, ii: packed[jj][ii])(j, idx)  # (W, B, rec)
+            cols = jax.vmap(self.codec.decode_ref)(raw)          # (W, B, C)
+            if slot_mode:
+                x, pr = slot_evaluate(slots, cols)               # (S, W, B)
+                gate = slots.active.astype(dtype)[:, None, None]
+            else:
+                x, pr = jax.vmap(self.evaluate, in_axes=0, out_axes=1)(cols)  # (Q, W, B)
+                gate = jnp.ones((), dtype)
+            vf = valid.astype(dtype)[None]
+            x = x.astype(dtype) * vf * gate
+            pr = pr.astype(dtype) * vf * gate
+            sum_x = jnp.sum(x, -1)                               # (Q|S, W)
+            sum_xx = jnp.sum(x * x, -1)
+            sum_p = jnp.sum(pr, -1)
 
         # ---- 3. MERGE -------------------------------------------------------
         af = active.astype(jnp.int32)
         deltas = dict(
             dm=jnp.zeros((n,), jnp.int32).at[j].add(b_eff * af),
-            dys=jnp.zeros((q, n), dtype).at[:, j].add(jnp.sum(x, -1) * af),
-            dyq=jnp.zeros((q, n), dtype).at[:, j].add(jnp.sum(x * x, -1) * af),
-            dps=jnp.zeros((q, n), dtype).at[:, j].add(jnp.sum(pr, -1) * af),
+            dys=jnp.zeros((q, n), dtype).at[:, j].add(sum_x * af),
+            dyq=jnp.zeros((q, n), dtype).at[:, j].add(sum_xx * af),
+            dps=jnp.zeros((q, n), dtype).at[:, j].add(sum_p * af),
         )
         deltas = coll.merge(deltas)
         if slot_mode:
@@ -404,7 +481,6 @@ class EngineProgram:
         # extracted-tuple cache for synopsis construction: row r of chunk j
         # holds the r-th tuple of its permutation window (append-only; the
         # maintenance pass shrinks windows host-side).  OOB rows are dropped.
-        cap = cfg.cache_cap
         if cap > 0:
             kk = jnp.arange(b_static, dtype=jnp.int32)
             rows = m_before[:, None] + kk[None, :]               # (W, B) ordinals

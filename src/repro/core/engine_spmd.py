@@ -31,9 +31,10 @@ from repro.core.engine import (
     EngineState,
     RoundReport,
     _Collectives,
+    budget_ladder,
 )
 from repro.core.estimators import BiLevelStats
-from repro.core.queries import Query
+from repro.core.queries import Query, SlotTable
 
 try:  # jax >= 0.6 exposes shard_map at the top level
     _shard_map = jax.shard_map
@@ -74,11 +75,19 @@ def report_specs() -> RoundReport:
     return RoundReport(*([P()] * len(RoundReport._fields)))
 
 
-class SPMDEngine:
-    """Multi-device OLA engine over a mesh with a ``data`` axis."""
+def slot_table_specs() -> SlotTable:
+    """The slot table is replicated: every device evaluates every slot (the
+    query plane is tiny next to the data plane)."""
+    return SlotTable(*([P()] * len(SlotTable._fields)))
 
-    def __init__(self, store, queries: Sequence[Query], config: EngineConfig,
-                 mesh: Mesh, schedule: Optional[np.ndarray] = None):
+
+class _SPMDEngineBase:
+    """Shared mesh plumbing for the SPMD engines: worker split over the
+    ``data`` axis, replicated chunk buffer, sharded per-worker speeds, state
+    sharding, the per-budget compile cache, and the t_eval ladder."""
+
+    def __init__(self, store, config: EngineConfig, mesh: Mesh):
+        self.store = store
         self.mesh = mesh
         self.n_dev = mesh.shape["data"]
         assert config.num_workers % self.n_dev == 0, (
@@ -86,49 +95,63 @@ class SPMDEngine:
             f"data axis size {self.n_dev}")
         self.wpd = config.num_workers // self.n_dev
         self.config = config
-        packed, sizes = store.packed_device_view()
-        self.program = EngineProgram(
-            codec=store.codec, queries=queries, config=config,
-            n_chunks=store.num_chunks, m_max=store.max_chunk_tuples,
-            chunk_sizes=sizes, schedule=schedule)
+        packed, self.chunk_sizes = store.packed_device_view()
         self.m_max = int(store.max_chunk_tuples)
         speeds = config.worker_speed or (1.0,) * config.num_workers
+        assert len(speeds) == config.num_workers
         self.packed = jax.device_put(packed, NamedSharding(mesh, P()))
         self.speeds = jax.device_put(np.asarray(speeds, np.float32),
                                      NamedSharding(mesh, P("data")))
         self._round_fns: dict[int, callable] = {}
+
+    def _put_state(self, state: EngineState) -> EngineState:
+        shardings = jax.tree.map(lambda spec: NamedSharding(self.mesh, spec),
+                                 engine_state_specs(),
+                                 is_leaf=lambda x: isinstance(x, P))
+        return jax.device_put(state, shardings)
+
+    def _compile_round(self, step, extra_in_specs: tuple):
+        """shard_map + jit one round step; ``step`` takes
+        ``(state, *extras, packed, speeds)``."""
+        specs = engine_state_specs()
+        sm = shard_map(step, mesh=self.mesh,
+                       in_specs=(specs, *extra_in_specs, P(), P("data")),
+                       out_specs=(specs, report_specs()),
+                       check_vma=False)
+        return jax.jit(sm, donate_argnums=(0,))
+
+    def budget_ladder(self, b: float) -> int:
+        return budget_ladder(self.config, self.m_max, b)
+
+
+class SPMDEngine(_SPMDEngineBase):
+    """Multi-device OLA engine over a mesh with a ``data`` axis."""
+
+    def __init__(self, store, queries: Sequence[Query], config: EngineConfig,
+                 mesh: Mesh, schedule: Optional[np.ndarray] = None):
+        super().__init__(store, config, mesh)
+        self.program = EngineProgram(
+            codec=store.codec, queries=queries, config=config,
+            n_chunks=store.num_chunks, m_max=store.max_chunk_tuples,
+            chunk_sizes=self.chunk_sizes, schedule=schedule)
 
     @property
     def queries(self):
         return self.program.queries
 
     def init_state(self, synopsis_seed: Optional[dict] = None) -> EngineState:
-        state = self.program.init_state(synopsis_seed)
-        shardings = jax.tree.map(lambda spec: NamedSharding(self.mesh, spec),
-                                 engine_state_specs(),
-                                 is_leaf=lambda x: isinstance(x, P))
-        return jax.device_put(state, shardings)
+        return self._put_state(self.program.init_state(synopsis_seed))
 
     def round_fn(self, b_static: int):
         if b_static not in self._round_fns:
             coll = _Collectives(axis_name="data", workers_per_device=self.wpd)
-            specs = engine_state_specs()
 
             def step(state, packed, speeds):
                 return self.program.round_body(state, packed, speeds,
                                                b_static, coll)
 
-            sm = shard_map(step, mesh=self.mesh,
-                           in_specs=(specs, P(), P("data")),
-                           out_specs=(specs, report_specs()),
-                           check_vma=False)
-            self._round_fns[b_static] = jax.jit(sm, donate_argnums=(0,))
+            self._round_fns[b_static] = self._compile_round(step, ())
         return self._round_fns[b_static]
-
-    def budget_ladder(self, b: float) -> int:
-        b = float(np.clip(b, self.config.budget_min,
-                          min(self.config.budget_max, self.m_max)))
-        return int(2 ** int(np.ceil(np.log2(max(b, 1.0)))))
 
     def run(self, max_rounds: int = 100_000, wall_timeout_s: float = 600.0,
             synopsis_seed: Optional[dict] = None, collect_history: bool = True):
@@ -145,3 +168,46 @@ class SPMDEngine:
             if time.perf_counter() - t0 > wall_timeout_s:
                 break
         return state, history
+
+
+class SlotSPMDEngine(_SPMDEngineBase):
+    """Multi-device slot-table engine: :class:`~repro.core.engine.SlotOLAEngine`
+    with the worker axis sharded over the mesh ``data`` axis.
+
+    Drop-in round-step compatible with the single-device slot engine (the
+    workload server drives either through the same
+    ``round_fn(b)(state, table, packed, speeds)`` signature): the slot table
+    is replicated, ``cur`` is sharded, and chunk-slot deltas are psum-merged,
+    so chunk hand-out order — and therefore every slot's sample — is
+    deterministic and independent of device count (the claim step's
+    prefix-sum runs over all-gathered idle flags in global worker order).
+    Parity is property-tested in tests/test_engine_spmd.py.
+    """
+
+    def __init__(self, store, max_slots: int, config: EngineConfig,
+                 mesh: Mesh, schedule: Optional[np.ndarray] = None,
+                 confidence: float = 0.95):
+        super().__init__(store, config, mesh)
+        self.program = EngineProgram(
+            codec=store.codec, config=config, n_chunks=store.num_chunks,
+            m_max=store.max_chunk_tuples, chunk_sizes=self.chunk_sizes,
+            schedule=schedule, max_slots=max_slots, confidence=confidence)
+
+    @property
+    def max_slots(self) -> int:
+        return self.program.max_slots
+
+    def init_state(self) -> EngineState:
+        return self._put_state(self.program.init_state())
+
+    def round_fn(self, b_static: int):
+        if b_static not in self._round_fns:
+            coll = _Collectives(axis_name="data", workers_per_device=self.wpd)
+
+            def step(state, table, packed, speeds):
+                return self.program.round_body(state, packed, speeds,
+                                               b_static, coll, slots=table)
+
+            self._round_fns[b_static] = self._compile_round(
+                step, (slot_table_specs(),))
+        return self._round_fns[b_static]

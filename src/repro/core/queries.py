@@ -400,22 +400,38 @@ def linear_plan(queries: Sequence[Query], num_cols: int) -> LinearPlan:
                              "use the pure-JAX evaluator path")
 
         def add_pred(node):
+            # Lowering must be *exact* in f32 (the engine compares decoded
+            # f32 values against these bounds with `lo <= c < hi`): closed
+            # upper bounds and strict lower bounds shift by one f32 ulp via
+            # nextafter, equality becomes the degenerate range [v, v⁺), and
+            # '!=' has no conjunctive-range form — it must raise, never be
+            # silently approximated (the ref evaluator computes it exactly,
+            # so a lossy encoding would make the backends disagree).
             if isinstance(node, And):
                 for t in node.terms:
                     add_pred(t)
             elif isinstance(node, Range):
                 lo[qi, node.col] = max(lo[qi, node.col], node.lo)
                 hi[qi, node.col] = min(hi[qi, node.col], node.hi)
-            elif isinstance(node, Cmp) and node.op in ("<", "<=", ">", ">="):
-                if node.op in ("<", "<="):
-                    hi[qi, node.col] = min(hi[qi, node.col], node.value)
-                else:
-                    lo[qi, node.col] = max(lo[qi, node.col], node.value)
             elif isinstance(node, (GroupEq, Cmp)):
-                # equality: encode as a degenerate [v, v] closed range via eps
-                v = node.value
-                lo[qi, node.col] = max(lo[qi, node.col], v)
-                hi[qi, node.col] = min(hi[qi, node.col], np.nextafter(np.float32(v), np.float32(np.inf)))
+                op = "==" if isinstance(node, GroupEq) else node.op
+                v = np.float32(node.value)
+                up = np.nextafter(v, np.float32(np.inf))
+                if op == "<":
+                    hi[qi, node.col] = min(hi[qi, node.col], v)
+                elif op == "<=":    # c <= v  ≡  c < nextafter(v)
+                    hi[qi, node.col] = min(hi[qi, node.col], up)
+                elif op == ">":     # c > v   ≡  c >= nextafter(v)
+                    lo[qi, node.col] = max(lo[qi, node.col], up)
+                elif op == ">=":
+                    lo[qi, node.col] = max(lo[qi, node.col], v)
+                elif op == "==":
+                    lo[qi, node.col] = max(lo[qi, node.col], v)
+                    hi[qi, node.col] = min(hi[qi, node.col], up)
+                else:
+                    raise ValueError(
+                        f"query {q.name}: {op!r} is not range-encodable, "
+                        "use the pure-JAX evaluator path")
             else:
                 raise ValueError(f"query {q.name}: predicate not range-conjunctive")
 

@@ -12,7 +12,12 @@ three access patterns the engine uses:
   of Instant Loading's SIMD tokenizer feeding an aggregator).
 * :mod:`round_stats`   — fused parse + multi-query eval + budget-masked
   partial statistics over a gathered ``(workers, budget)`` slab — the
-  bi-level engine's per-round hot loop.
+  bi-level engine's per-round hot loop (frozen query plans, HBM-side gather).
+* :mod:`slot_extract`  — the fully fused round: in-kernel permutation-window
+  gather (scalar-prefetch chunk/window indexing) + parse + *slot table*
+  evaluation + per-(worker, slot) sufficient statistics.  This is the
+  ``EngineConfig.extract_backend="pallas"`` path of the engine round for
+  both query planes.
 
 ``ref.py`` holds the pure-jnp oracles; ``ops.py`` the jitted wrappers that
 dispatch to Pallas on TPU and to the oracle (or ``interpret=True``) on CPU.
@@ -22,6 +27,7 @@ from repro.kernels.ops import (
     chunk_agg,
     extract_parse,
     round_stats,
+    slot_extract,
 )
 
-__all__ = ["chunk_agg", "extract_parse", "round_stats"]
+__all__ = ["chunk_agg", "extract_parse", "round_stats", "slot_extract"]

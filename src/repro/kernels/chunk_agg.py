@@ -25,17 +25,18 @@ from repro.kernels.extract_parse import DEFAULT_TILE, _parse_block
 
 
 def _eval_plan_block(vals, coeffs, lo, hi):
-    """vals (tile, C) -> x (Q, tile) predicate-masked expr, p (Q, tile)."""
-    q = coeffs.shape[0]
-    xs, ps = [], []
-    for qi in range(q):
-        pred = jnp.all((vals >= lo[qi][None, :]) & (vals < hi[qi][None, :]),
-                       axis=-1)
-        pf = pred.astype(jnp.float32)
-        expr = jnp.sum(vals * coeffs[qi][None, :], axis=-1)
-        xs.append(expr * pf)
-        ps.append(pf)
-    return jnp.stack(xs), jnp.stack(ps)
+    """vals (tile, C) -> x (Q, tile) predicate-masked expr, p (Q, tile).
+
+    Batched over the query axis (no Python loop): one broadcast compare and
+    one broadcast multiply-reduce, so trace/compile time and the emitted code
+    stop scaling with Q.  The reduction runs over the same trailing axis in
+    the same order as the old per-query loop, so results are bit-identical.
+    """
+    v = vals[None]                                           # (1, tile, C)
+    pred = jnp.all((v >= lo[:, None, :]) & (v < hi[:, None, :]), axis=-1)
+    pf = pred.astype(jnp.float32)                            # (Q, tile)
+    expr = jnp.sum(v * coeffs[:, None, :], axis=-1)          # (Q, tile)
+    return expr * pf, pf
 
 
 def _chunk_agg_kernel(raw_ref, size_ref, coeffs_ref, lo_ref, hi_ref, out_ref,

@@ -7,6 +7,8 @@
                   ``interpret=True`` is a debugging interpreter).
 * ``"pallas"``  — force pallas_call; on CPU this sets ``interpret=True``
                   (used by the correctness sweeps in tests/).
+* ``"pallas-interpret"`` — force the Pallas interpreter even on TPU (the
+                  benchmarks' correctness-mode lane).
 * ``"ref"``     — force the oracle.
 """
 
@@ -19,6 +21,7 @@ from repro.kernels import ref as _ref
 from repro.kernels.chunk_agg import chunk_agg_pallas
 from repro.kernels.extract_parse import extract_parse_pallas
 from repro.kernels.round_stats import round_stats_pallas
+from repro.kernels.slot_extract import slot_extract_pallas
 
 
 def _on_tpu() -> bool:
@@ -31,6 +34,8 @@ def _resolve(backend: str) -> tuple[bool, bool]:
         return (_on_tpu(), False)
     if backend == "pallas":
         return (True, not _on_tpu())
+    if backend == "pallas-interpret":
+        return (True, True)
     if backend == "ref":
         return (False, False)
     raise ValueError(backend)
@@ -60,6 +65,31 @@ def chunk_agg(raw: jnp.ndarray, sizes: jnp.ndarray, coeffs, lo, hi,
                               jnp.asarray(lo, jnp.float32),
                               jnp.asarray(hi, jnp.float32),
                               jnp.asarray(sizes, jnp.int32))
+
+
+def slot_extract(packed: jnp.ndarray, jw: jnp.ndarray, idx: jnp.ndarray,
+                 b_eff: jnp.ndarray, coeffs, lo, hi, is_count, gate,
+                 return_cols: bool = False, backend: str = "auto"):
+    """Fused round extraction: gather + parse + slot eval + partial stats.
+
+    packed (N, M, rec) uint8, jw (W,) chunk ids, idx (W, B) window rows ->
+    (stats (W, S, 4), cols (W, B, C) | None).  This is the engine round's
+    ``extract_backend="pallas"`` path (see core/engine.py).
+    """
+    num_cols = int(coeffs.shape[1])
+    use_pallas, interpret = _resolve(backend)
+    jw, idx, b_eff = (jnp.asarray(jw, jnp.int32), jnp.asarray(idx, jnp.int32),
+                      jnp.asarray(b_eff, jnp.int32))
+    coeffs, lo, hi, is_count, gate = (
+        jnp.asarray(a, jnp.float32) for a in (coeffs, lo, hi, is_count, gate))
+    if use_pallas:
+        return slot_extract_pallas(packed, jw, idx, b_eff, coeffs, lo, hi,
+                                   is_count, gate, num_cols=num_cols,
+                                   return_cols=return_cols,
+                                   interpret=interpret)
+    return _ref.slot_extract_ref(packed, jw, idx, b_eff, coeffs, lo, hi,
+                                 is_count, gate, num_cols=num_cols,
+                                 return_cols=return_cols)
 
 
 def round_stats(slab: jnp.ndarray, b_eff: jnp.ndarray, coeffs, lo, hi,

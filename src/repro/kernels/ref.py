@@ -63,6 +63,31 @@ def chunk_agg_ref(raw: jnp.ndarray, num_cols: int, coeffs, lo, hi,
     return jnp.transpose(out, (1, 0, 2))          # (N, Q, 4)
 
 
+def slot_extract_ref(packed: jnp.ndarray, jw: jnp.ndarray, idx: jnp.ndarray,
+                     b_eff: jnp.ndarray, coeffs, lo, hi, is_count, gate,
+                     num_cols: int, return_cols: bool = False):
+    """Fused round extraction oracle (see kernels/slot_extract.py).
+
+    packed (N, M, rec) uint8, jw (W,) chunk ids, idx (W, B) permutation-window
+    rows, b_eff (W,), coeffs/lo/hi (S, C), is_count/gate (S,) ->
+    (stats (W, S, 4) = (m, Σx, Σx², Σp), cols (W, B, C) | None).
+    """
+    w, b = idx.shape
+    raw = packed[jw[:, None], idx]                # (W, B, rec) gathered rows
+    cols = parse_ascii_ref(raw.reshape(w * b, -1), num_cols).reshape(
+        w, b, num_cols)
+    x, p = eval_plan_ref(cols, coeffs, lo, hi)    # (S, W, B)
+    x = jnp.where(jnp.asarray(is_count)[:, None, None] > 0.0, p, x)
+    ok = (jnp.arange(b)[None, :] < b_eff[:, None]).astype(cols.dtype)  # (W, B)
+    mask = ok[None] * jnp.asarray(gate, cols.dtype)[:, None, None]
+    x = x * mask
+    p = p * mask
+    cnt = jnp.broadcast_to(jnp.sum(ok, -1)[None], x.shape[:2])  # (S, W)
+    out = jnp.stack([cnt, jnp.sum(x, -1), jnp.sum(x * x, -1), jnp.sum(p, -1)],
+                    axis=-1)                      # (S, W, 4)
+    return jnp.transpose(out, (1, 0, 2)), (cols if return_cols else None)
+
+
 def round_stats_ref(slab: jnp.ndarray, num_cols: int, coeffs, lo, hi,
                     b_eff: jnp.ndarray) -> jnp.ndarray:
     """Bi-level round slab: fused parse+eval+budget-masked stats.

@@ -1,0 +1,133 @@
+"""Fused engine-round extraction as a Pallas kernel: gather + parse + slot eval.
+
+This is the bi-level round's hot loop for the *dynamic* query plane (and the
+frozen plane lowered to coefficient form): for each worker, gather its
+permutation-window rows from the packed chunk buffer, parse the raw bytes in
+VMEM, evaluate the slot table — per-slot ``coeffs/lo/hi`` with the active
+mask as a multiplicative gate — and accumulate the per-(worker, slot)
+sufficient statistics ``(m, Σx, Σx², Σp)`` in one pass.  Neither the
+``(S, W, B)`` evaluation tensor nor a decoded ``(W, B, C)`` copy is ever
+materialized in HBM (the decoded slab is emitted *only* when the caller needs
+it for the synopsis extraction cache).
+
+Geometry (grid ``(W,)`` — one step per worker):
+
+* ``packed (N, M_max, rec)`` uint8 stays in HBM; the worker's chunk id is a
+  **scalar-prefetch** argument, so the BlockSpec index map selects block
+  ``(1, M_max, rec)`` — the worker's whole chunk — for the VMEM window.
+  This is the paper's in-memory chunk: M_max·rec bytes must fit VMEM
+  (~16 MiB/core), which holds for the tens-of-MB/chunk guidance once a chunk
+  is split across cores; stores beyond that need a slab-streaming variant.
+* ``idx (W, B)`` int32 permutation-window rows and ``b_eff (W,)`` budgets are
+  scalar-prefetch too (SMEM): row indices drive the in-kernel gather loop —
+  B dynamic sublane slices chunk→scratch, the canonical Pallas gather.
+* plan blocks ``coeffs/lo/hi (S, C)`` f32, ``is_count/gate (S,)`` f32 are
+  whole-array VMEM blocks shared by every step.
+* out ``(1, S, 4)`` f32 per step; optional ``(1, B, C)`` decoded block.
+
+B is a power of two from the engine's t_eval ladder, so block shapes are
+stable across rounds and recompiles are bounded.  VMEM per step at
+B=4096, C=16: 2 MiB scratch (int32 bytes) + chunk block + small plan/out
+blocks — fine; the (S, B, C) predicate temp is fused by Mosaic and never
+hits HBM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.data.formats import FIELD_BYTES
+from repro.kernels.chunk_agg import _eval_plan_block
+from repro.kernels.extract_parse import _parse_block
+
+
+def _slot_extract_kernel(jw_ref, beff_ref, idx_ref, packed_ref, coeffs_ref,
+                         lo_ref, hi_ref, isc_ref, gate_ref, *refs,
+                         num_cols: int, budget: int, return_cols: bool):
+    if return_cols:
+        stats_ref, cols_ref, scratch = refs
+    else:
+        (stats_ref, scratch), cols_ref = refs, None
+    w = pl.program_id(0)
+
+    # gather the worker's permutation-window rows chunk→scratch (VMEM)
+    def gather(i, carry):
+        row = idx_ref[w, i]
+        r = pl.load(packed_ref, (pl.ds(0, 1), pl.ds(row, 1), slice(None)))
+        pl.store(scratch, (pl.ds(i, 1), slice(None)),
+                 r.reshape(1, -1).astype(jnp.int32))
+        return carry
+
+    jax.lax.fori_loop(0, budget, gather, 0)
+
+    vals = _parse_block(scratch[...], num_cols)              # (B, C) f32
+    if cols_ref is not None:
+        cols_ref[0] = vals
+    x, p = _eval_plan_block(vals, coeffs_ref[...],
+                            lo_ref[...], hi_ref[...])        # (S, B)
+    # COUNT slots carry zero coefficients; their x is the indicator itself
+    x = jnp.where(isc_ref[...][:, None] > 0.0, p, x)
+    ok = (jax.lax.iota(jnp.int32, budget) < beff_ref[w]).astype(jnp.float32)
+    mask = ok[None, :] * gate_ref[...][:, None]              # (S, B)
+    x = x * mask
+    p = p * mask
+    stats_ref[0] = jnp.stack([
+        jnp.broadcast_to(jnp.sum(ok), (x.shape[0],)),
+        jnp.sum(x, -1), jnp.sum(x * x, -1), jnp.sum(p, -1)], axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("num_cols", "return_cols",
+                                             "interpret"))
+def slot_extract_pallas(packed: jnp.ndarray, jw: jnp.ndarray,
+                        idx: jnp.ndarray, b_eff: jnp.ndarray,
+                        coeffs, lo, hi, is_count, gate, num_cols: int,
+                        return_cols: bool = False, interpret: bool = False):
+    """Fused round extraction.
+
+    packed (N, M_max, rec) uint8, jw (W,) chunk ids, idx (W, B) window rows,
+    b_eff (W,) budgets, coeffs/lo/hi (S, C) f32, is_count/gate (S,) f32
+    -> stats (W, S, 4) f32 ``(m, Σx, Σx², Σp)`` [, cols (W, B, C) f32].
+    """
+    n, m_max, rec = packed.shape
+    assert rec == num_cols * FIELD_BYTES, (rec, num_cols)
+    w, b = idx.shape
+    s = coeffs.shape[0]
+    out_shape = [jax.ShapeDtypeStruct((w, s, 4), jnp.float32)]
+    out_specs = [pl.BlockSpec((1, s, 4), lambda i, *refs: (i, 0, 0))]
+    if return_cols:
+        out_shape.append(jax.ShapeDtypeStruct((w, b, num_cols), jnp.float32))
+        out_specs.append(pl.BlockSpec((1, b, num_cols),
+                                      lambda i, *refs: (i, 0, 0)))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,   # jw, b_eff, idx
+        grid=(w,),
+        in_specs=[
+            # the worker's whole chunk, selected by the prefetched chunk id
+            pl.BlockSpec((1, m_max, rec),
+                         lambda i, jw_ref, *refs: (jw_ref[i], 0, 0)),
+            pl.BlockSpec((s, num_cols), lambda i, *refs: (0, 0)),
+            pl.BlockSpec((s, num_cols), lambda i, *refs: (0, 0)),
+            pl.BlockSpec((s, num_cols), lambda i, *refs: (0, 0)),
+            pl.BlockSpec((s,), lambda i, *refs: (0,)),
+            pl.BlockSpec((s,), lambda i, *refs: (0,)),
+        ],
+        out_specs=out_specs,
+        scratch_shapes=[pltpu.VMEM((b, rec), jnp.int32)],
+    )
+    out = pl.pallas_call(
+        functools.partial(_slot_extract_kernel, num_cols=num_cols,
+                          budget=b, return_cols=return_cols),
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(jnp.asarray(jw, jnp.int32), jnp.asarray(b_eff, jnp.int32),
+      jnp.asarray(idx, jnp.int32), packed,
+      jnp.asarray(coeffs, jnp.float32), jnp.asarray(lo, jnp.float32),
+      jnp.asarray(hi, jnp.float32), jnp.asarray(is_count, jnp.float32),
+      jnp.asarray(gate, jnp.float32))
+    return tuple(out) if return_cols else (out[0], None)

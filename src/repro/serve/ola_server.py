@@ -34,6 +34,8 @@ instead of one scan per query (see ``benchmarks/bench_workload.py``).
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
 import time
 from typing import Optional, Sequence
 
@@ -54,7 +56,58 @@ from repro.core.synopsis import BiLevelSynopsis
 from repro.core import estimators as est
 
 
-def select_plan(store, config: EngineConfig, query: Query) -> str:
+@dataclasses.dataclass(frozen=True)
+class MeasuredRates:
+    """Measured IO/CPU rates for the Eq. (4) cost model.
+
+    ``cpu_tuples_per_sec`` is the *aggregate* extraction throughput of one
+    engine round step across the ``workers`` workers of the calibration run,
+    ``io_bytes_per_sec`` the measured raw read bandwidth — both as reported
+    by ``benchmarks/bench_slot_kernel.py``.  :func:`select_plan` rescales the
+    CPU rate to the serving config's worker count (extraction parallelizes
+    over workers; the read path does not).  The modeled constants in
+    :class:`EngineConfig` remain the fallback when no measurement is
+    available.
+    """
+
+    io_bytes_per_sec: float
+    cpu_tuples_per_sec: float
+    workers: int = 1
+    source: str = "measured"
+
+
+def load_measured_rates(path: str = "BENCH_slot_kernel.json",
+                        ) -> Optional[MeasuredRates]:
+    """Load the calibration block of a ``bench_slot_kernel`` result file.
+
+    Returns ``None`` (→ the caller falls back to the modeled defaults) when
+    the file is missing or has no usable calibration — a server deployed
+    without ever running the benchmark keeps working on the modeled rates.
+    """
+    import math
+
+    try:
+        with open(path) as f:
+            data = json.load(f)
+        cal = data["calibration"]
+        rates = MeasuredRates(
+            io_bytes_per_sec=float(cal["io_bytes_per_sec"]),
+            cpu_tuples_per_sec=float(cal["cpu_tuples_per_sec"]),
+            workers=int(cal.get("workers", data.get("workers", 1))),
+            source=f"{path}:{cal.get('backend', '?')}")
+        # json.load accepts the NaN literal, and NaN compares False to
+        # everything — require finite positives or fall back to modeled
+        if not all(math.isfinite(v) and v > 0 for v in
+                   (rates.io_bytes_per_sec, rates.cpu_tuples_per_sec,
+                    rates.workers)):
+            return None
+        return rates
+    except (OSError, KeyError, TypeError, ValueError):
+        return None
+
+
+def select_plan(store, config: EngineConfig, query: Query,
+                rates: Optional[MeasuredRates] = None) -> str:
     """Cost-model plan selector for one admitted query.
 
     Uses the two Eq. (4) cost terms the resource monitor models — a full
@@ -68,11 +121,24 @@ def select_plan(store, config: EngineConfig, query: Query) -> str:
     * CPU-bound (``T_cpu > 2 T_io``): ``single_pass`` — stop extracting a
       chunk at local accuracy; reading ahead is cheap.
     * otherwise: ``resource_aware`` — let the runtime monitor switch.
+
+    With ``rates`` (bench-measured, see :func:`load_measured_rates`) the two
+    terms use the machine's *actual* read bandwidth and round-step extraction
+    throughput instead of the modeled constants — the measured analogue of
+    the paper's testbed calibration.
     """
     total_bytes = float(store.chunk_sizes.sum()) * store.codec.record_bytes
-    t_io = total_bytes / config.io_bytes_per_sec
-    t_cpu = (float(store.num_tuples) * store.codec.extract_cost_per_tuple()
-             / config.cpu_tuple_ops_per_sec / config.num_workers)
+    if rates is not None:
+        t_io = total_bytes / rates.io_bytes_per_sec
+        # the measured tuple rate is aggregate over the calibration run's
+        # worker count; extraction scales with workers, reads do not
+        cpu_rate = (rates.cpu_tuples_per_sec
+                    * config.num_workers / rates.workers)
+        t_cpu = float(store.num_tuples) / cpu_rate
+    else:
+        t_io = total_bytes / config.io_bytes_per_sec
+        t_cpu = (float(store.num_tuples) * store.codec.extract_cost_per_tuple()
+                 / config.cpu_tuple_ops_per_sec / config.num_workers)
     if query.epsilon <= 0.0:
         return "chunk_level"
     ratio = t_cpu / max(t_io, 1e-12)
@@ -132,16 +198,50 @@ class OLAWorkloadServer:
     def __init__(self, store, config: EngineConfig, max_slots: int = 8,
                  synopsis_budget_tuples: int = 4096,
                  confidence: float = 0.95,
-                 schedule: Optional[np.ndarray] = None):
-        if config.cache_cap == 0 and synopsis_budget_tuples > 0:
+                 schedule: Optional[np.ndarray] = None,
+                 mesh=None, engine=None,
+                 measured_rates: Optional[MeasuredRates] = None,
+                 rates_path: Optional[str] = None):
+        """``engine`` may be a pre-built :class:`SlotOLAEngine` or
+        :class:`~repro.core.engine_spmd.SlotSPMDEngine` (the server only uses
+        the shared round-step protocol); with ``mesh`` and no ``engine`` a
+        :class:`SlotSPMDEngine` is built over it.  ``measured_rates`` (or a
+        ``rates_path`` benchmark file, see :func:`load_measured_rates`) feeds
+        the Eq. (4) plan selector bench-measured IO/CPU rates; the modeled
+        :class:`EngineConfig` constants stay the fallback.
+        """
+        if engine is not None:
+            if engine.store is not store:
+                raise ValueError("engine was built over a different store")
+            if synopsis_budget_tuples > 0 and engine.config.cache_cap == 0:
+                raise ValueError(
+                    "mid-scan synopsis seeding needs the extraction cache: "
+                    "build the engine with cache_cap > 0 or pass "
+                    "synopsis_budget_tuples=0")
+            config = engine.config
+            max_slots = engine.max_slots
+        elif config.cache_cap == 0 and synopsis_budget_tuples > 0:
             # mid-scan seeding needs the extraction cache
             cap = max(64, int(np.ceil(4 * synopsis_budget_tuples
                                       / max(store.num_chunks, 1))))
             config = dataclasses.replace(config, cache_cap=cap)
         self.store = store
         self.config = config
-        self.engine = SlotOLAEngine(store, max_slots, config,
-                                    schedule=schedule, confidence=confidence)
+        if engine is not None:
+            self.engine = engine
+        elif mesh is not None:
+            from repro.core.engine_spmd import SlotSPMDEngine
+
+            self.engine = SlotSPMDEngine(store, max_slots, config, mesh,
+                                         schedule=schedule,
+                                         confidence=confidence)
+        else:
+            self.engine = SlotOLAEngine(store, max_slots, config,
+                                        schedule=schedule,
+                                        confidence=confidence)
+        self.rates = measured_rates
+        if self.rates is None and rates_path is not None:
+            self.rates = load_measured_rates(rates_path)
         self.table = empty_slot_table(max_slots, store.codec.num_cols)
         self.state = self.engine.init_state()
         self.max_slots = max_slots
@@ -231,7 +331,8 @@ class OLAWorkloadServer:
             self._admit(free[0], wq)
 
     def _admit(self, s: int, wq: WorkloadQuery) -> None:
-        plan = wq.plan or select_plan(self.store, self.config, wq.query)
+        plan = wq.plan or select_plan(self.store, self.config, wq.query,
+                                      rates=self.rates)
         row = wq.row or encode_slot(wq.query, self.store.codec.num_cols)
         row["plan"] = np.int32(PLAN_CODES[plan])
         self._refresh_synopsis()

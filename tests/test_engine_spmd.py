@@ -55,3 +55,86 @@ def test_spmd_bit_exact_vs_single_device():
     assert res["same_len"], res
     assert res["max_est_diff"] == 0.0, res
     assert res["cache_diff"] == 0.0, res
+
+
+_SLOT_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import json
+import numpy as np, jax
+from repro.data.generator import make_synthetic_zipf, store_dataset
+from repro.core.queries import (Query, Linear, Range, empty_slot_table,
+                                encode_slot, slot_table_set)
+from repro.core.engine import SlotOLAEngine, EngineConfig
+from repro.core.engine_spmd import SlotSPMDEngine
+from repro.serve.ola_server import OLAWorkloadServer
+
+vals = make_synthetic_zipf(2048, 8, seed=3)
+store = store_dataset(vals, 12, 'ascii', uneven=True)
+coef = tuple(1.0/(k+1) for k in range(8))
+q0 = Query(agg='sum', expr=Linear(coef), pred=Range(0, 0.0, 0.6e8), epsilon=0.04)
+q1 = Query(agg='count', pred=Range(1, 0.0, 0.7e8), epsilon=0.06)
+q2 = Query(agg='avg', expr=Linear(coef), epsilon=0.05)
+# fixed t_eval: one jitted step per engine (bounds subprocess compile time)
+cfg = EngineConfig(num_workers=8, budget_init=32, budget_min=32,
+                   budget_max=32, seed=5, cache_cap=16)
+mesh = jax.make_mesh((4,), ('data',))
+
+def drive(engine):
+    # deterministic slot-table driver with a mid-scan admission at round 3
+    table = empty_slot_table(4, 8)
+    table = slot_table_set(table, 0, encode_slot(q0, 8, plan='single_pass'))
+    table = slot_table_set(table, 1, encode_slot(q1, 8, plan='single_pass'))
+    state = engine.init_state()
+    ests, curs = [], []
+    for r in range(24):
+        if r == 3:
+            table = slot_table_set(table, 2,
+                                   encode_slot(q2, 8, plan='single_pass'))
+        b = engine.budget_ladder(float(state.budget))
+        state, rep = engine.round_fn(b)(state, table, engine.packed,
+                                        engine.speeds)
+        ests.append(np.asarray(rep.estimate))
+        curs.append(np.asarray(state.cur))
+    return (np.stack(ests), np.stack(curs), np.asarray(state.stats.m),
+            np.asarray(state.scan_m))
+
+e1 = drive(SlotOLAEngine(store, 4, cfg))
+e2 = drive(SlotSPMDEngine(store, 4, cfg, mesh))
+
+# workload server over the SPMD engine == server over the single-device one
+def serve(mesh=None):
+    srv = OLAWorkloadServer(store, cfg, max_slots=4,
+                            synopsis_budget_tuples=0, mesh=mesh)
+    srv.submit(q0, arrival_t=0.0)
+    srv.submit(q1, arrival_t=0.0)
+    res = srv.run(max_rounds=4000)
+    return [(r.qid, round(r.estimate, 3), r.tuples_seen) for r in res]
+
+print(json.dumps({
+    "est_diff": float(np.abs(e1[0] - e2[0]).max()),
+    "handout_same": bool((e1[1] == e2[1]).all()),
+    "m_same": bool((e1[2] == e2[2]).all()),
+    "scan_m_same": bool((e1[3] == e2[3]).all()),
+    "server_single": serve(None),
+    "server_spmd": serve(mesh),
+}))
+"""
+
+
+def test_slot_spmd_parity_and_server():
+    """SlotSPMDEngine on a forced 4-device CPU mesh hands out chunks in the
+    same order and produces the same estimates as SlotOLAEngine, including a
+    mid-scan admission; the workload server runs over either engine."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", _SLOT_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["handout_same"], res
+    assert res["m_same"], res
+    assert res["scan_m_same"], res
+    assert res["est_diff"] == 0.0, res
+    assert res["server_spmd"] == res["server_single"], res

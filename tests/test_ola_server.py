@@ -17,7 +17,12 @@ from repro.core.queries import (
 )
 from repro.core.synopsis import BiLevelSynopsis
 from repro.data.generator import make_synthetic_zipf, store_dataset
-from repro.serve.ola_server import OLAWorkloadServer, select_plan
+from repro.serve.ola_server import (
+    MeasuredRates,
+    OLAWorkloadServer,
+    load_measured_rates,
+    select_plan,
+)
 
 COEF = tuple(1.0 / (k + 1) for k in range(8))
 
@@ -240,6 +245,48 @@ def test_select_plan_regimes(setup):
     assert select_plan(store, cpu_cfg,
                        Query(agg="sum", expr=Linear(COEF),
                              epsilon=0.0)) == "chunk_level"
+
+
+def test_select_plan_measured_rates_override(setup, tmp_path):
+    """Bench-measured rates override the modeled constants in Eq. (4); a
+    missing/garbled measurement file falls back to the modeled defaults."""
+    vals, store = setup
+    q = Query(agg="sum", expr=Linear(COEF), epsilon=0.05)
+    # modeled config says CPU-bound, the measurement says IO-bound
+    cpu_cfg = EngineConfig(num_workers=1, cpu_tuple_ops_per_sec=1e6,
+                           io_bytes_per_sec=1e12)
+    assert select_plan(store, cpu_cfg, q) == "single_pass"
+    io_rates = MeasuredRates(io_bytes_per_sec=1e3, cpu_tuples_per_sec=1e12)
+    assert select_plan(store, cpu_cfg, q, rates=io_rates) == "holistic"
+
+    # loader round-trip through a bench result file
+    path = tmp_path / "BENCH_slot_kernel.json"
+    path.write_text('{"calibration": {"backend": "ref", '
+                    '"cpu_tuples_per_sec": 1e12, "io_bytes_per_sec": 1e3}}')
+    rates = load_measured_rates(str(path))
+    assert rates is not None and rates.io_bytes_per_sec == 1e3
+    assert select_plan(store, cpu_cfg, q, rates=rates) == "holistic"
+    # the measured CPU rate is aggregate over the calibration run's worker
+    # count and must be rescaled to the serving config's: with these rates a
+    # same-shape deployment is CPU-bound, a 16x-wider one IO-bound
+    few = EngineConfig(num_workers=8)
+    many = EngineConfig(num_workers=128)
+    tb = float(store.chunk_sizes.sum()) * store.codec.record_bytes
+    bal = MeasuredRates(io_bytes_per_sec=tb,                       # t_io = 1s
+                        cpu_tuples_per_sec=store.num_tuples / 4.0,  # 4s @ 8w
+                        workers=8)
+    assert select_plan(store, few, q, rates=bal) == "single_pass"
+    assert select_plan(store, many, q, rates=bal) == "holistic"
+    # fallback paths: missing file, unusable payload, NaN rates
+    assert load_measured_rates(str(tmp_path / "nope.json")) is None
+    path.write_text('{"calibration": {"cpu_tuples_per_sec": 0}}')
+    assert load_measured_rates(str(path)) is None
+    path.write_text('{"calibration": {"cpu_tuples_per_sec": NaN, '
+                    '"io_bytes_per_sec": 1e6}}')
+    assert load_measured_rates(str(path)) is None
+    srv = OLAWorkloadServer(store, EngineConfig(num_workers=2),
+                            rates_path=str(tmp_path / "nope.json"))
+    assert srv.rates is None  # modeled defaults still in force
 
 
 def test_post_exhaustion_without_synopsis_fails_loud(setup):
