@@ -167,6 +167,8 @@ def run(fast: bool = False, smoke: bool = False) -> str:
     speedup = (round(pallas_bar["tuples_per_sec"] / ref_bar["tuples_per_sec"],
                      3) if pallas_bar else None)
 
+    from benchmarks.common import memory_report
+
     io_bps = _measure_read_bw(store)
     # calibration uses the production backend for this platform: the compiled
     # kernel on TPU, the XLA ref path elsewhere (interpret is a debug mode)
@@ -183,16 +185,21 @@ def run(fast: bool = False, smoke: bool = False) -> str:
         "speedup_interpret_vs_ref": round(
             interp_bar["tuples_per_sec"] / ref_bar["tuples_per_sec"], 3),
         "interpret_exempt": not on_tpu,
+        "memory": memory_report(),
         "calibration": {
             "backend": cal_entry["backend"],
             "S": cal_entry["S"], "B": cal_entry["B"],
             "workers": WORKERS,
             "cpu_tuples_per_sec": cal_entry["tuples_per_sec"],
             "io_bytes_per_sec": round(io_bps, 1),
+            # extraction cost of the calibration codec: lets select_plan
+            # rescale the tuple rate when serving a different codec
+            "cost_per_tuple": float(store.codec.extract_cost_per_tuple()),
         },
     }
-    for path in ("BENCH_slot_kernel.json",
-                 os.path.join("results", "bench_slot_kernel.json")):
+    from benchmarks.common import bench_output_paths
+
+    for path in bench_output_paths("slot_kernel"):
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
         with open(path, "w") as f:
             json.dump(out, f, indent=1)

@@ -14,6 +14,32 @@ SYN_COEF16 = tuple(1.0 / (k + 1) for k in range(16))
 PTF_COEF = (0.0, 0.0, 0.0, 1.0, 2.0, 1.5, 0.0, 0.0)  # mag/err/flux expression
 
 
+def bench_output_paths(name: str) -> tuple:
+    """Result-file paths anchored to the repo root, not the process CWD —
+    the server's ``default_rates_path`` reads from the same anchor, so the
+    calibration round-trips no matter where either process was started."""
+    import os
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    return (os.path.join(root, f"BENCH_{name}.json"),
+            os.path.join(root, "results", f"bench_{name}.json"))
+
+
+def memory_report() -> dict:
+    """Peak host RSS + resident device bytes for BENCH_*.json outputs.
+
+    ``device_raw_bytes`` counts only uint8 arrays — the packed views / slabs
+    whose footprint the streaming residency bounds; ``device_total_bytes``
+    adds the f32 state pytrees."""
+    from repro.data.pipeline import device_resident_bytes, peak_host_rss_bytes
+
+    return {
+        "peak_host_rss_bytes": peak_host_rss_bytes(),
+        "device_raw_bytes": device_resident_bytes(np.uint8),
+        "device_total_bytes": device_resident_bytes(),
+    }
+
+
 def datasets(fast: bool):
     t = 8192 if fast else 16384
     chunks = 32 if fast else 64

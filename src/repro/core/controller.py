@@ -110,6 +110,7 @@ class EstimationController:
                 if self.synopsis is not None:
                     # refresh variances for subsequent allocation decisions
                     pass
+                engine.close()
                 return zero
 
         reports: list[EstimateReport] = []
@@ -121,7 +122,8 @@ class EstimationController:
         last = None
         for _ in range(max_rounds):
             b = engine.budget_ladder(float(state.budget))
-            state, rep = engine.round_fn(b)(state, engine.packed, engine.speeds)
+            state, rep = engine.round_fn(b)(state, engine.round_data(state),
+                                            engine.speeds)
             rounds += 1
             io_s = float(rep.round_io_s)
             cpu_s = float(rep.round_cpu_s)
@@ -151,6 +153,9 @@ class EstimationController:
             variances = self.synopsis.within_variances(state)
             self.synopsis.update_from_engine(
                 state, np.asarray(engine.program.schedule), variances)
+
+        # one engine per query: release its prefetcher (stream residency)
+        engine.close()
 
         chunks_raw = int(np.asarray(state.raw_touched).sum())
         return QueryResult(

@@ -120,11 +120,21 @@ class EngineConfig:
     # benchmark's correctness-mode lane); "auto" picks pallas on TPU when the
     # plan supports it and ref elsewhere.
     extract_backend: str = "ref"
+    # raw-data residency: "packed" keeps the whole store on device as one
+    # (N, M_max, rec) tensor (fine for small stores); "stream" feeds each
+    # round a bounded (W, rows_max, rec) slab through
+    # data/pipeline.SlabPrefetcher — device residency O(slab), host residency
+    # O(cache), READ overlapped with compute.  Round-for-round estimates are
+    # identical (bit-exact on the ref backend).
+    residency: str = "packed"
+    slab_row_tile: int = 256     # streaming kernel's row-tile (VMEM bound)
+    prefetch_lookahead: int = 8  # schedule chunks the reader thread runs ahead
 
     def __post_init__(self):
         assert self.strategy in STRATEGIES, self.strategy
         assert self.extract_backend in ("ref", "pallas", "pallas-interpret",
                                         "auto"), self.extract_backend
+        assert self.residency in ("packed", "stream"), self.residency
 
 
 class EngineState(NamedTuple):
@@ -221,6 +231,7 @@ class EngineProgram:
         self.max_slots = None if max_slots is None else int(max_slots)
         if schedule is None:
             schedule = random_chunk_order(config.seed, self.n_chunks)
+        self.schedule_np = np.asarray(schedule, np.int32)
         self.schedule = jnp.asarray(schedule, jnp.int32)
         self.seeds = chunk_seed(jnp.uint32(config.seed),
                                 jnp.arange(self.n_chunks, dtype=jnp.uint32))
@@ -349,6 +360,30 @@ class EngineProgram:
                     cache=state.cache.at[:, : pre.shape[1]].set(pre))
         return state
 
+    def plan_claims(self, state: EngineState
+                    ) -> tuple[np.ndarray, np.ndarray, int]:
+        """Host-side replica of the round's CLAIM step (streaming residency).
+
+        The claim rule is a pure function of ``(cur, head, schedule)`` — no
+        chunk content — so the slab pipeline can predict *exactly* which
+        chunk each worker will hold this round and assemble the slab before
+        the jitted step runs.  Returns ``(chunk_ids (P,), active (P,),
+        new_head)`` in global worker order (``state.cur`` is host-gathered,
+        so this works unchanged for the SPMD engines).
+        """
+        cur = np.asarray(state.cur).astype(np.int64)
+        head = int(state.head)
+        n = self.n_chunks
+        idle = cur == IDLE
+        ranks = np.cumsum(idle) - idle
+        want = head + ranks
+        got = idle & (want < n)
+        cur_next = np.where(got, want, np.where(idle, EXHAUSTED, cur))
+        j = self.schedule_np[np.clip(cur_next, 0, n - 1)]
+        active = cur_next >= 0
+        new_head = head + int(np.sum(idle & (want < n)))
+        return j, active, new_head
+
     def _closed_prefix_mask(self, closed: jnp.ndarray) -> jnp.ndarray:
         """Reordering barrier (§3): chunk-level estimation may only use the
         *closed prefix* of the schedule — the chunks up to the first not-yet
@@ -360,18 +395,25 @@ class EngineProgram:
             jnp.arange(n) < prefix_len)
 
     # ------------------------------------------------------------ round ----
-    def round_body(self, state: EngineState, packed: jnp.ndarray,
+    def round_body(self, state: EngineState, data: jnp.ndarray,
                    speeds: jnp.ndarray, b_static: int,
                    coll: _Collectives, slots: Optional[SlotTable] = None,
                    ) -> tuple[EngineState, RoundReport]:
         """One engine round.  ``state.cur``/``speeds`` are *local* worker
         slices (the full arrays in single-device mode); everything else is
-        replicated.  ``packed`` is the raw chunk bytes (N, M_max, rec).
+        replicated.  ``data`` is the raw byte source: the whole packed store
+        ``(N, M_max, rec)`` under ``residency="packed"``, or this round's
+        per-worker slab ``(W_local, rows_max, rec)`` under
+        ``residency="stream"`` (worker w's chunk rows at ``data[w]``,
+        assembled by the host from :meth:`plan_claims` — the in-jit CLAIM
+        below recomputes the same assignment, so slab row w always holds the
+        chunk worker w claims).
 
         With ``slots`` (slot-table mode) the query plane is data-driven:
         evaluation, ε targets, plan policies, and HAVING verdicts all come
         from the table, and per-query arrays are sized ``max_slots``."""
         cfg = self.config
+        streaming = cfg.residency == "stream"
         n = self.n_chunks
         slot_mode = slots is not None
         q = self.q_dim
@@ -424,14 +466,30 @@ class EngineProgram:
                                       self._plan_hi)
                 isc = self._plan_is_count
                 gate_v = jnp.ones((q,), jnp.float32)
-            stats4, cols = kernel_ops.slot_extract(
-                packed, j, idx, b_eff, coeffs, p_lo, p_hi, isc, gate_v,
-                return_cols=cap > 0, backend=self._ops_backend)
+            if streaming:
+                # slab-streaming kernel: row tiles of the worker's slab, so
+                # chunks larger than VMEM stream tile-by-tile
+                stats4 = kernel_ops.slot_extract_stream(
+                    data, idx, b_eff, coeffs, p_lo, p_hi, isc, gate_v,
+                    row_tile=cfg.slab_row_tile, backend=self._ops_backend)
+                cols = None
+                if cap > 0:
+                    # the stream kernel never materializes the decoded window;
+                    # the synopsis cache needs it, so gather+decode here
+                    raw = jax.vmap(lambda sw, ii: sw[ii])(data, idx)
+                    cols = jax.vmap(self.codec.decode_ref)(raw)
+            else:
+                stats4, cols = kernel_ops.slot_extract(
+                    data, j, idx, b_eff, coeffs, p_lo, p_hi, isc, gate_v,
+                    return_cols=cap > 0, backend=self._ops_backend)
             sum_x = stats4[..., 1].astype(dtype).T               # (Q|S, W)
             sum_xx = stats4[..., 2].astype(dtype).T
             sum_p = stats4[..., 3].astype(dtype).T
         else:
-            raw = jax.vmap(lambda jj, ii: packed[jj][ii])(j, idx)  # (W, B, rec)
+            if streaming:
+                raw = jax.vmap(lambda sw, ii: sw[ii])(data, idx)   # (W, B, rec)
+            else:
+                raw = jax.vmap(lambda jj, ii: data[jj][ii])(j, idx)  # (W, B, rec)
             cols = jax.vmap(self.codec.decode_ref)(raw)          # (W, B, C)
             if slot_mode:
                 x, pr = slot_evaluate(slots, cols)               # (S, W, B)
@@ -681,15 +739,60 @@ def budget_ladder(config: EngineConfig, m_max: int, b: float) -> int:
     return int(2 ** int(np.ceil(np.log2(max(b, 1.0)))))
 
 
-class OLAEngine:
+class _ResidencyMixin:
+    """Host-side raw-data feed shared by every engine.
+
+    ``round_data(state)`` is what drivers pass as the round step's ``data``
+    argument: the resident packed view under ``residency="packed"``, or a
+    freshly assembled bounded slab under ``residency="stream"`` (claim
+    prediction → prefetcher assemble → read-ahead hint for the next schedule
+    positions, overlapping disk READ with this round's device compute).
+    """
+
+    pipeline = None
+
+    def _init_residency(self, store, config: EngineConfig, slab_put=None,
+                        packed_put=None) -> np.ndarray:
+        """Set up ``self.packed``/``self.pipeline`` per the configured
+        residency; returns the chunk-size vector.  ``slab_put``/``packed_put``
+        let the SPMD engines place buffers with mesh shardings."""
+        if config.residency == "stream":
+            from repro.data.pipeline import SlabPrefetcher
+
+            self.packed = None
+            self.pipeline = SlabPrefetcher(
+                store, num_workers=config.num_workers,
+                row_multiple=config.slab_row_tile,
+                lookahead=config.prefetch_lookahead, device_put=slab_put)
+            return store.chunk_sizes
+        packed, sizes = store.packed_device_view()
+        self.packed = (jnp.asarray(packed) if packed_put is None
+                       else packed_put(packed))
+        return sizes
+
+    def round_data(self, state: EngineState):
+        if self.pipeline is None:
+            return self.packed
+        j, active, new_head = self.program.plan_claims(state)
+        slab = self.pipeline.assemble(j, active)
+        nxt = self.program.schedule_np[new_head:new_head
+                                       + self.pipeline.lookahead]
+        self.pipeline.prefetch(nxt)
+        return slab
+
+    def close(self) -> None:
+        if self.pipeline is not None:
+            self.pipeline.close()
+
+
+class OLAEngine(_ResidencyMixin):
     """Host-facing single-process engine: owns device buffers + jitted rounds."""
 
     def __init__(self, store, queries: Sequence[Query], config: EngineConfig,
                  schedule: Optional[np.ndarray] = None):
         self.store = store
         self.config = config
-        packed, sizes = store.packed_device_view()
-        self.packed = jnp.asarray(packed)
+        sizes = self._init_residency(store, config)
         self.program = EngineProgram(
             codec=store.codec, queries=queries, config=config,
             n_chunks=store.num_chunks, m_max=store.max_chunk_tuples,
@@ -728,7 +831,8 @@ class OLAEngine:
         t0 = time.perf_counter()
         for _ in range(max_rounds):
             b = self.budget_ladder(float(state.budget))
-            state, rep = self.round_fn(b)(state, self.packed, self.speeds)
+            state, rep = self.round_fn(b)(state, self.round_data(state),
+                                          self.speeds)
             if collect_history:
                 history.append(jax.tree.map(np.asarray, rep))
             if bool(rep.all_stopped) or bool(rep.exhausted):
@@ -738,7 +842,7 @@ class OLAEngine:
         return state, history
 
 
-class SlotOLAEngine:
+class SlotOLAEngine(_ResidencyMixin):
     """Host-facing engine whose query plane is a dynamic slot table.
 
     Mirrors :class:`OLAEngine` but the jitted round takes a
@@ -756,8 +860,7 @@ class SlotOLAEngine:
                  confidence: float = 0.95):
         self.store = store
         self.config = config
-        packed, sizes = store.packed_device_view()
-        self.packed = jnp.asarray(packed)
+        sizes = self._init_residency(store, config)
         self.program = EngineProgram(
             codec=store.codec, config=config, n_chunks=store.num_chunks,
             m_max=store.max_chunk_tuples, chunk_sizes=sizes,

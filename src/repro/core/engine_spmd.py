@@ -31,6 +31,7 @@ from repro.core.engine import (
     EngineState,
     RoundReport,
     _Collectives,
+    _ResidencyMixin,
     budget_ladder,
 )
 from repro.core.estimators import BiLevelStats
@@ -81,10 +82,12 @@ def slot_table_specs() -> SlotTable:
     return SlotTable(*([P()] * len(SlotTable._fields)))
 
 
-class _SPMDEngineBase:
+class _SPMDEngineBase(_ResidencyMixin):
     """Shared mesh plumbing for the SPMD engines: worker split over the
-    ``data`` axis, replicated chunk buffer, sharded per-worker speeds, state
-    sharding, the per-budget compile cache, and the t_eval ladder."""
+    ``data`` axis, replicated chunk buffer (packed residency) or a
+    worker-sharded per-round slab (stream residency), sharded per-worker
+    speeds, state sharding, the per-budget compile cache, and the t_eval
+    ladder."""
 
     def __init__(self, store, config: EngineConfig, mesh: Mesh):
         self.store = store
@@ -95,11 +98,18 @@ class _SPMDEngineBase:
             f"data axis size {self.n_dev}")
         self.wpd = config.num_workers // self.n_dev
         self.config = config
-        packed, self.chunk_sizes = store.packed_device_view()
+        # slab rows are per-worker, so under stream residency the slab shards
+        # over the mesh's worker axis — each device receives only its
+        # workers' chunks; the packed view stays replicated
+        self.chunk_sizes = self._init_residency(
+            store, config,
+            slab_put=lambda a: jax.device_put(
+                a, NamedSharding(mesh, P("data"))),
+            packed_put=lambda a: jax.device_put(
+                a, NamedSharding(mesh, P())))
         self.m_max = int(store.max_chunk_tuples)
         speeds = config.worker_speed or (1.0,) * config.num_workers
         assert len(speeds) == config.num_workers
-        self.packed = jax.device_put(packed, NamedSharding(mesh, P()))
         self.speeds = jax.device_put(np.asarray(speeds, np.float32),
                                      NamedSharding(mesh, P("data")))
         self._round_fns: dict[int, callable] = {}
@@ -112,10 +122,13 @@ class _SPMDEngineBase:
 
     def _compile_round(self, step, extra_in_specs: tuple):
         """shard_map + jit one round step; ``step`` takes
-        ``(state, *extras, packed, speeds)``."""
+        ``(state, *extras, data, speeds)``.  The raw-data argument is
+        replicated in packed residency and worker-sharded in stream
+        residency (slab rows follow their workers)."""
         specs = engine_state_specs()
+        data_spec = P("data") if self.config.residency == "stream" else P()
         sm = shard_map(step, mesh=self.mesh,
-                       in_specs=(specs, *extra_in_specs, P(), P("data")),
+                       in_specs=(specs, *extra_in_specs, data_spec, P("data")),
                        out_specs=(specs, report_specs()),
                        check_vma=False)
         return jax.jit(sm, donate_argnums=(0,))
@@ -160,7 +173,8 @@ class SPMDEngine(_SPMDEngineBase):
         t0 = time.perf_counter()
         for _ in range(max_rounds):
             b = self.budget_ladder(float(state.budget))
-            state, rep = self.round_fn(b)(state, self.packed, self.speeds)
+            state, rep = self.round_fn(b)(state, self.round_data(state),
+                                          self.speeds)
             if collect_history:
                 history.append(jax.tree.map(np.asarray, rep))
             if bool(rep.all_stopped) or bool(rep.exhausted):

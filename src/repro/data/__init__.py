@@ -7,6 +7,7 @@ EXTRACT touches them; extraction cost is the whole point of the paper.
 
 from repro.data.formats import AsciiFixedFormat, BinaryBigEndianFormat, FORMATS
 from repro.data.chunkstore import ChunkStore, ChunkMeta
+from repro.data.pipeline import SlabPrefetcher
 from repro.data.generator import (
     make_ptf_like,
     make_synthetic_zipf,
@@ -19,6 +20,7 @@ __all__ = [
     "FORMATS",
     "ChunkStore",
     "ChunkMeta",
+    "SlabPrefetcher",
     "make_ptf_like",
     "make_synthetic_zipf",
     "make_wiki_like",

@@ -13,10 +13,15 @@ Two residency modes:
   files and read back on demand, giving the benchmarks a real READ stage with
   measurable I/O time (and letting tests exercise restart-from-metadata).
 
-The device-facing view is :meth:`packed_device_view`: a zero-copy-ish padded
-``(N, max_record_count, record_bytes)`` uint8 tensor for the jitted engine.
-For stores too large for that, the engine pulls per-chunk slabs on demand
-through the pipeline's prefetcher.
+Two device-facing residency modes (selected by ``EngineConfig.residency``):
+
+* ``"packed"`` — :meth:`packed_device_view`: a padded
+  ``(N, max_record_count, record_bytes)`` uint8 tensor for the jitted
+  engine.  O(dataset) device memory; right for stores that fit.
+* ``"stream"`` — the engine pulls bounded per-round ``(W, rows_max, rec)``
+  slabs through :class:`repro.data.pipeline.SlabPrefetcher`: chunks are read
+  (and, when disk-backed, evicted) on the fly by a background reader thread,
+  so host and device residency are O(slab), not O(dataset).
 """
 
 from __future__ import annotations
@@ -142,6 +147,9 @@ class ChunkStore:
         for j in range(n):
             raw = self.chunk_bytes(j)
             out[j, : raw.shape[0]] = raw
+            # a disk-backed store must not end up resident twice (raw chunks
+            # cached by an earlier pass + this packed copy)
+            self.evict(j)
         return out, self.chunk_sizes
 
     def decode_all(self) -> np.ndarray:

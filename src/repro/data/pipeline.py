@@ -1,0 +1,207 @@
+"""Streaming slab pipeline: bounded-memory chunk delivery store → engine.
+
+The paper's READ stage streams random chunks off disk while EXTRACT/EVALUATE
+keep the CPU busy (§4; PF-OLA's overlapped parallel aggregation makes the
+same bet).  :class:`SlabPrefetcher` is that stage for the jitted engines:
+instead of materializing the whole store as one padded ``(N, M_max, rec)``
+device tensor (``ChunkStore.packed_device_view`` — the
+``EngineConfig.residency="packed"`` path, fine for small stores), each round
+receives a bounded ``(W, rows_max, rec)`` uint8 *slab* holding exactly the
+chunks the round's workers will extract from.
+
+Round protocol (``residency="stream"``):
+
+1. the host predicts the round's CLAIM outcome with
+   :meth:`~repro.core.engine.EngineProgram.plan_claims` — the claim rule is a
+   pure function of ``(cur, head, schedule)``, so the prediction is exact and
+   the jitted round's own CLAIM lands on the same chunks;
+2. :meth:`SlabPrefetcher.assemble` builds the slab from its host chunk cache
+   (disk-backed chunks are read on the fly and *evicted from the store*, so
+   host residency is O(slab), never O(dataset)) and ``device_put``\\ s it;
+3. the engine hints the next schedule positions via :meth:`prefetch`; a
+   background reader thread pulls those chunks from disk while the device is
+   busy with the current round — the READ/compute overlap of the paper's
+   pipeline.
+
+Memory bounds: device residency is the in-flight slab plus (transiently) the
+previous round's — ``2 × slab_bytes`` of raw data instead of the packed
+view's ``N × M_max × rec``; host residency is the LRU chunk cache
+(``max_cached_chunks``, default ``2·W + lookahead`` chunks).
+"""
+
+from __future__ import annotations
+
+import math
+import queue
+import threading
+import weakref
+from collections import OrderedDict
+from typing import Callable, Iterable, Optional
+
+import numpy as np
+
+
+def device_resident_bytes(dtype=None) -> int:
+    """Total bytes of live JAX device arrays (optionally one dtype only).
+
+    ``dtype=np.uint8`` isolates the raw-data buffers (packed views / slabs)
+    from the f32 state pytrees — the number the streaming-residency tests and
+    benchmarks report.
+    """
+    import jax
+
+    total = 0
+    want = None if dtype is None else np.dtype(dtype)
+    for a in jax.live_arrays():
+        if want is not None and a.dtype != want:
+            continue
+        total += int(np.prod(a.shape)) * a.dtype.itemsize
+    return total
+
+
+def peak_host_rss_bytes() -> int:
+    """Peak resident-set size of this process (Linux/macOS)."""
+    import resource
+    import sys
+
+    ru = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    # ru_maxrss is KiB on Linux, bytes on macOS
+    return int(ru) if sys.platform == "darwin" else int(ru) * 1024
+
+
+class SlabPrefetcher:
+    """Assembles bounded per-round slabs from a :class:`ChunkStore`.
+
+    One instance serves one engine: ``num_workers`` fixes the slab's leading
+    dim, ``row_multiple`` pads ``rows_max`` up to the streaming kernel's row
+    tile so block shapes stay stable.  ``device_put`` lets the SPMD engines
+    place the slab sharded over the mesh's worker axis.
+    """
+
+    def __init__(self, store, num_workers: int, row_multiple: int = 1,
+                 lookahead: int = 8, max_cached_chunks: Optional[int] = None,
+                 device_put: Optional[Callable] = None):
+        self.store = store
+        self.num_workers = int(num_workers)
+        rb = int(store.codec.record_bytes)
+        rows = int(store.max_chunk_tuples)
+        rm = max(int(row_multiple), 1)
+        self.rows_max = int(math.ceil(rows / rm) * rm)
+        self.slab_shape = (self.num_workers, self.rows_max, rb)
+        self.slab_bytes = int(np.prod(self.slab_shape))
+        self.lookahead = int(lookahead)
+        self.capacity = int(max_cached_chunks
+                            or (2 * self.num_workers + self.lookahead))
+        if device_put is None:
+            import jax
+
+            device_put = jax.device_put
+        self._device_put = device_put
+        self._cache: "OrderedDict[int, np.ndarray]" = OrderedDict()
+        self._lock = threading.Lock()
+        self._inflight: dict[int, threading.Event] = {}
+        self._hints: "queue.SimpleQueue[Optional[int]]" = queue.SimpleQueue()
+        self._closed = False
+        # counters (monitoring / tests)
+        self.chunk_reads = 0
+        self.cache_hits = 0
+        self.bytes_read = 0
+        self.slabs_built = 0
+        # the reader holds only a weakref: an engine dropped without close()
+        # lets the prefetcher be GC'd, upon which the thread exits on its
+        # next poll instead of pinning the cache for the process lifetime
+        self._reader = threading.Thread(target=_reader_main,
+                                        args=(weakref.ref(self), self._hints),
+                                        daemon=True, name="slab-prefetcher")
+        self._reader.start()
+
+    # ------------------------------------------------------------- reads ----
+    def _read_chunk(self, j: int) -> np.ndarray:
+        """READ one chunk; hits the host cache, else disk (+ store eviction
+        so a disk-backed store never accumulates resident raw chunks)."""
+        while True:
+            with self._lock:
+                raw = self._cache.get(j)
+                if raw is not None:
+                    self._cache.move_to_end(j)
+                    self.cache_hits += 1
+                    return raw
+                ev = self._inflight.get(j)
+                if ev is None:
+                    ev = self._inflight[j] = threading.Event()
+                    mine = True
+                else:
+                    mine = False
+            if not mine:
+                ev.wait()
+                continue  # re-check the cache (entry may have been trimmed)
+            try:
+                raw = self.store.chunk_bytes(j)
+                self.store.evict(j)  # host residency stays O(slab)
+                with self._lock:
+                    self.chunk_reads += 1
+                    self.bytes_read += raw.nbytes
+                    self._cache[j] = raw
+                    self._cache.move_to_end(j)
+                    while len(self._cache) > self.capacity:
+                        self._cache.popitem(last=False)
+                return raw
+            finally:
+                with self._lock:
+                    self._inflight.pop(j, None)
+                ev.set()
+
+    # ------------------------------------------------------------ public ----
+    def prefetch(self, chunk_ids: Iterable[int]) -> None:
+        """Hint upcoming chunks: the reader thread pulls them off disk while
+        the device computes the current round (READ/compute overlap)."""
+        if self._closed:
+            return
+        for j in chunk_ids:
+            self._hints.put(int(j))
+
+    def assemble(self, chunk_ids: np.ndarray, active: np.ndarray):
+        """Build the round's ``(W, rows_max, rec)`` uint8 slab on device.
+
+        ``chunk_ids[w]`` is worker w's chunk (from ``plan_claims``); inactive
+        workers get zero rows (the round masks them by ``b_eff == 0``).  A
+        fresh host buffer per call keeps the previous slab's async
+        ``device_put`` untouched — the double-buffer slack in the memory
+        bound.
+        """
+        slab = np.zeros(self.slab_shape, np.uint8)
+        for w in range(self.num_workers):
+            if bool(active[w]):
+                raw = self._read_chunk(int(chunk_ids[w]))
+                slab[w, : raw.shape[0]] = raw
+        self.slabs_built += 1
+        return self._device_put(slab)
+
+    def close(self) -> None:
+        self._closed = True
+        self._hints.put(None)
+
+
+def _reader_main(ref: "weakref.ref[SlabPrefetcher]",
+                 hints: "queue.SimpleQueue") -> None:
+    """Background READ loop.  Module-level on purpose: the thread must not
+    keep the prefetcher alive, so it polls a weakref and exits once the
+    owner is closed or collected."""
+    while True:
+        try:
+            j = hints.get(timeout=1.0)
+        except queue.Empty:
+            if ref() is None:
+                return
+            continue
+        pf = ref()
+        if pf is None or j is None or pf._closed:
+            return
+        try:
+            with pf._lock:
+                hit = j in pf._cache
+            if not hit:
+                pf._read_chunk(int(j))
+        except Exception:  # pragma: no cover - reader must never die
+            pass
+        del pf  # drop the strong ref before blocking on the next hint

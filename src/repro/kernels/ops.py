@@ -21,7 +21,10 @@ from repro.kernels import ref as _ref
 from repro.kernels.chunk_agg import chunk_agg_pallas
 from repro.kernels.extract_parse import extract_parse_pallas
 from repro.kernels.round_stats import round_stats_pallas
-from repro.kernels.slot_extract import slot_extract_pallas
+from repro.kernels.slot_extract import (
+    slot_extract_pallas,
+    slot_extract_stream_pallas,
+)
 
 
 def _on_tpu() -> bool:
@@ -90,6 +93,30 @@ def slot_extract(packed: jnp.ndarray, jw: jnp.ndarray, idx: jnp.ndarray,
     return _ref.slot_extract_ref(packed, jw, idx, b_eff, coeffs, lo, hi,
                                  is_count, gate, num_cols=num_cols,
                                  return_cols=return_cols)
+
+
+def slot_extract_stream(slab: jnp.ndarray, idx: jnp.ndarray,
+                        b_eff: jnp.ndarray, coeffs, lo, hi, is_count, gate,
+                        row_tile: int = 256, backend: str = "auto"):
+    """Slab-streaming fused round extraction (``residency="stream"``).
+
+    slab (W, R, rec) uint8 — worker w's chunk rows at slab[w] (assembled by
+    ``data/pipeline.SlabPrefetcher``), idx (W, B) window rows, b_eff (W,) ->
+    stats (W, S, 4).  Unlike :func:`slot_extract` the kernel grids over row
+    *tiles* of the slab, so chunks larger than VMEM stream tile-by-tile.
+    """
+    num_cols = int(coeffs.shape[1])
+    use_pallas, interpret = _resolve(backend)
+    idx, b_eff = jnp.asarray(idx, jnp.int32), jnp.asarray(b_eff, jnp.int32)
+    coeffs, lo, hi, is_count, gate = (
+        jnp.asarray(a, jnp.float32) for a in (coeffs, lo, hi, is_count, gate))
+    if use_pallas:
+        return slot_extract_stream_pallas(slab, idx, b_eff, coeffs, lo, hi,
+                                          is_count, gate, num_cols=num_cols,
+                                          row_tile=row_tile,
+                                          interpret=interpret)
+    return _ref.slot_extract_stream_ref(slab, idx, b_eff, coeffs, lo, hi,
+                                        is_count, gate, num_cols=num_cols)
 
 
 def round_stats(slab: jnp.ndarray, b_eff: jnp.ndarray, coeffs, lo, hi,

@@ -88,6 +88,24 @@ def slot_extract_ref(packed: jnp.ndarray, jw: jnp.ndarray, idx: jnp.ndarray,
     return jnp.transpose(out, (1, 0, 2)), (cols if return_cols else None)
 
 
+def slot_extract_stream_ref(slab: jnp.ndarray, idx: jnp.ndarray,
+                            b_eff: jnp.ndarray, coeffs, lo, hi, is_count,
+                            gate, num_cols: int) -> jnp.ndarray:
+    """Slab-streaming round extraction oracle (see kernels/slot_extract.py).
+
+    Identical contract to :func:`slot_extract_ref` except the raw source is
+    the round's per-worker slab ``(W, R, rec)`` — worker w's rows live at
+    ``slab[w]`` — instead of the whole packed store, so there is no chunk-id
+    indirection.  Returns stats ``(W, S, 4)`` only (the streaming path
+    decodes the synopsis slab separately when it needs it).
+    """
+    w = idx.shape[0]
+    stats, _ = slot_extract_ref(slab, jnp.arange(w, dtype=jnp.int32), idx,
+                                b_eff, coeffs, lo, hi, is_count, gate,
+                                num_cols=num_cols, return_cols=False)
+    return stats
+
+
 def round_stats_ref(slab: jnp.ndarray, num_cols: int, coeffs, lo, hi,
                     b_eff: jnp.ndarray) -> jnp.ndarray:
     """Bi-level round slab: fused parse+eval+budget-masked stats.

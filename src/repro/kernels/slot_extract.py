@@ -17,7 +17,8 @@ Geometry (grid ``(W,)`` — one step per worker):
   ``(1, M_max, rec)`` — the worker's whole chunk — for the VMEM window.
   This is the paper's in-memory chunk: M_max·rec bytes must fit VMEM
   (~16 MiB/core), which holds for the tens-of-MB/chunk guidance once a chunk
-  is split across cores; stores beyond that need a slab-streaming variant.
+  is split across cores; beyond that, :func:`slot_extract_stream_pallas`
+  below streams the round's slab through VMEM in row tiles.
 * ``idx (W, B)`` int32 permutation-window rows and ``b_eff (W,)`` budgets are
   scalar-prefetch too (SMEM): row indices drive the in-kernel gather loop —
   B dynamic sublane slices chunk→scratch, the canonical Pallas gather.
@@ -131,3 +132,120 @@ def slot_extract_pallas(packed: jnp.ndarray, jw: jnp.ndarray,
       jnp.asarray(hi, jnp.float32), jnp.asarray(is_count, jnp.float32),
       jnp.asarray(gate, jnp.float32))
     return tuple(out) if return_cols else (out[0], None)
+
+
+# ---------------------------------------------------------------------------
+# Slab-streaming variant (ROADMAP PR-2 follow-on): chunks larger than VMEM.
+#
+# The kernel above brings a worker's *whole* chunk into one VMEM window via
+# scalar-prefetch indexing — fine while M_max·rec fits VMEM, impossible
+# beyond.  The streaming variant takes the round's bounded (W, R, rec) slab
+# (worker w's chunk at slab[w], assembled by data/pipeline.SlabPrefetcher)
+# and grids over (W, R/T) *row tiles*: each step parses one (T, rec) tile,
+# evaluates the plan on all T rows, and folds in only the rows the worker's
+# permutation window selected — a per-tile membership weight built from the
+# prefetched idx row — accumulating the same per-(worker, slot) (m, Σx, Σx²,
+# Σp) contract into a VMEM-resident (1, S, 4) output block.  VMEM per step
+# is O(T·rec + S·T), independent of chunk size.
+# ---------------------------------------------------------------------------
+
+# window positions are compared against a tile in sub-blocks of this many
+# indices, bounding the (IDX_TILE, T) membership temp in VMEM
+IDX_TILE = 512
+
+
+def _slot_extract_stream_kernel(beff_ref, slab_ref, idx_ref, coeffs_ref,
+                                lo_ref, hi_ref, isc_ref, gate_ref, stats_ref,
+                                *, num_cols: int, budget: int, row_tile: int):
+    w = pl.program_id(0)
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        stats_ref[...] = jnp.zeros_like(stats_ref)
+
+    raw = slab_ref[0].astype(jnp.int32)                       # (T, rec)
+    vals = _parse_block(raw, num_cols)                        # (T, C)
+    x, p = _eval_plan_block(vals, coeffs_ref[...],
+                            lo_ref[...], hi_ref[...])         # (S, T)
+    x = jnp.where(isc_ref[...][:, None] > 0.0, p, x)
+
+    # membership weight: how many valid window positions land on each tile
+    # row (0/1 in practice — window rows are distinct — but multiplicity is
+    # handled exactly either way)
+    base = t * row_tile
+    beff = beff_ref[w]
+    row_ids = jax.lax.broadcasted_iota(jnp.int32, (1, row_tile), 1) + base
+
+    bt = min(budget, IDX_TILE)
+
+    def fold(i, acc):
+        # idx_ref is (1, B//bt, bt): sub-block i on the sublane dim
+        sl = pl.load(idx_ref, (pl.ds(0, 1), pl.ds(i, 1), slice(None)))
+        k = jax.lax.broadcasted_iota(jnp.int32, (1, bt), 1) + i * bt
+        valid = (k < beff).astype(jnp.float32)                # (1, bt)
+        mem = (sl.reshape(bt, 1) == row_ids).astype(jnp.float32)
+        mem = mem * valid.reshape(bt, 1)                      # (bt, T)
+        return acc + jnp.sum(mem, axis=0, keepdims=True)      # (1, T)
+
+    weight = jax.lax.fori_loop(0, budget // bt, fold,
+                               jnp.zeros((1, row_tile), jnp.float32))[0]
+
+    gate = gate_ref[...]
+    xw = x * (weight[None, :] * gate[:, None])                # (S, T)
+    pw = p * (weight[None, :] * gate[:, None])
+    stats_ref[0] += jnp.stack([
+        jnp.broadcast_to(jnp.sum(weight), (x.shape[0],)),
+        jnp.sum(xw, -1), jnp.sum(x * xw, -1), jnp.sum(pw, -1)], axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("num_cols", "row_tile",
+                                             "interpret"))
+def slot_extract_stream_pallas(slab: jnp.ndarray, idx: jnp.ndarray,
+                               b_eff: jnp.ndarray, coeffs, lo, hi, is_count,
+                               gate, num_cols: int, row_tile: int = 256,
+                               interpret: bool = False) -> jnp.ndarray:
+    """Slab-streaming fused round extraction.
+
+    slab (W, R, rec) uint8 (worker w's chunk rows at slab[w], zero-padded),
+    idx (W, B) window rows, b_eff (W,) budgets, coeffs/lo/hi (S, C) f32,
+    is_count/gate (S,) f32 -> stats (W, S, 4) f32 ``(m, Σx, Σx², Σp)``.
+
+    Rows ``>= b_eff[w]`` of the window and slab rows outside the window
+    contribute nothing; padded slab rows are never selected because window
+    indices are drawn below the chunk's true tuple count.
+    """
+    w, r, rec = slab.shape
+    assert rec == num_cols * FIELD_BYTES, (rec, num_cols)
+    b = idx.shape[1]
+    s = coeffs.shape[0]
+    bt = min(b, IDX_TILE)
+    idx3 = jnp.asarray(idx, jnp.int32).reshape(w, b // bt, bt)
+    r_pad = (r + row_tile - 1) // row_tile * row_tile
+    if r_pad != r:
+        slab = jnp.pad(slab, ((0, 0), (0, r_pad - r), (0, 0)))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,   # b_eff
+        grid=(w, r_pad // row_tile),
+        in_specs=[
+            pl.BlockSpec((1, row_tile, rec),
+                         lambda i, t, *refs: (i, t, 0)),
+            pl.BlockSpec((1, b // bt, bt), lambda i, t, *refs: (i, 0, 0)),
+            pl.BlockSpec((s, num_cols), lambda i, t, *refs: (0, 0)),
+            pl.BlockSpec((s, num_cols), lambda i, t, *refs: (0, 0)),
+            pl.BlockSpec((s, num_cols), lambda i, t, *refs: (0, 0)),
+            pl.BlockSpec((s,), lambda i, t, *refs: (0,)),
+            pl.BlockSpec((s,), lambda i, t, *refs: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, s, 4), lambda i, t, *refs: (i, 0, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_slot_extract_stream_kernel, num_cols=num_cols,
+                          budget=b, row_tile=row_tile),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((w, s, 4), jnp.float32),
+        interpret=interpret,
+    )(jnp.asarray(b_eff, jnp.int32), slab, idx3,
+      jnp.asarray(coeffs, jnp.float32), jnp.asarray(lo, jnp.float32),
+      jnp.asarray(hi, jnp.float32), jnp.asarray(is_count, jnp.float32),
+      jnp.asarray(gate, jnp.float32))

@@ -74,27 +74,59 @@ class MeasuredRates:
     cpu_tuples_per_sec: float
     workers: int = 1
     source: str = "measured"
+    # extraction cost (codec.extract_cost_per_tuple()) of the *calibration*
+    # store: tuples/s is codec-relative, so serving a different codec
+    # rescales by the cost ratio.  0 = unknown -> no rescaling.
+    cost_per_tuple: float = 0.0
 
 
-def load_measured_rates(path: str = "BENCH_slot_kernel.json",
+def default_rates_path() -> str:
+    """Default location of the ``bench_slot_kernel`` calibration file.
+
+    Anchored to the repo root (where ``benchmarks/bench_slot_kernel.py``
+    writes it), *not* the process CWD — a server started from any other
+    directory used to silently fall back to modeled rates.  The
+    ``OLA_RATES_PATH`` environment variable overrides it for deployments
+    that keep the calibration elsewhere.
+    """
+    env = os.environ.get("OLA_RATES_PATH")
+    if env:
+        return env
+    repo_root = os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__)))))
+    if os.path.isdir(os.path.join(repo_root, "benchmarks")):
+        return os.path.join(repo_root, "BENCH_slot_kernel.json")
+    # non-editable install: the walk-up lands in site-packages, which the
+    # benchmark never writes — fall back to CWD and let deployments pin
+    # the location with OLA_RATES_PATH
+    return "BENCH_slot_kernel.json"
+
+
+def load_measured_rates(path: Optional[str] = None,
                         ) -> Optional[MeasuredRates]:
     """Load the calibration block of a ``bench_slot_kernel`` result file.
 
-    Returns ``None`` (→ the caller falls back to the modeled defaults) when
-    the file is missing or has no usable calibration — a server deployed
-    without ever running the benchmark keeps working on the modeled rates.
+    ``path=None`` resolves via :func:`default_rates_path` (repo root, or
+    ``$OLA_RATES_PATH``).  Returns ``None`` (→ the caller falls back to the
+    modeled defaults) when the file is missing or has no usable
+    calibration — a server deployed without ever running the benchmark
+    keeps working on the modeled rates.
     """
     import math
 
+    if path is None:
+        path = default_rates_path()
     try:
         with open(path) as f:
             data = json.load(f)
         cal = data["calibration"]
+        cost = float(cal.get("cost_per_tuple", 0.0))
         rates = MeasuredRates(
             io_bytes_per_sec=float(cal["io_bytes_per_sec"]),
             cpu_tuples_per_sec=float(cal["cpu_tuples_per_sec"]),
             workers=int(cal.get("workers", data.get("workers", 1))),
-            source=f"{path}:{cal.get('backend', '?')}")
+            source=f"{path}:{cal.get('backend', '?')}",
+            cost_per_tuple=cost if math.isfinite(cost) and cost > 0 else 0.0)
         # json.load accepts the NaN literal, and NaN compares False to
         # everything — require finite positives or fall back to modeled
         if not all(math.isfinite(v) and v > 0 for v in
@@ -134,6 +166,12 @@ def select_plan(store, config: EngineConfig, query: Query,
         # worker count; extraction scales with workers, reads do not
         cpu_rate = (rates.cpu_tuples_per_sec
                     * config.num_workers / rates.workers)
+        # tuples/s is codec-relative (ASCII parse vs near-free binary): when
+        # the calibration recorded its extraction cost, rescale for the
+        # serving store's codec instead of misclassifying it
+        if rates.cost_per_tuple > 0:
+            cpu_rate *= (rates.cost_per_tuple
+                         / max(store.codec.extract_cost_per_tuple(), 1e-12))
         t_cpu = float(store.num_tuples) / cpu_rate
     else:
         t_io = total_bytes / config.io_bytes_per_sec
@@ -263,6 +301,17 @@ class OLAWorkloadServer:
         self.idle_offset = 0.0
         self.truncated = False
         self._next_qid = 0
+
+    def close(self) -> None:
+        """Release engine resources (the stream-residency prefetcher's
+        reader thread and host chunk cache); idempotent, packed no-op."""
+        self.engine.close()
+
+    def __enter__(self) -> "OLAWorkloadServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     # ------------------------------------------------------------- clock ----
     @property
@@ -470,8 +519,14 @@ class OLAWorkloadServer:
         if not self._any_active():
             return False
         b = self.engine.budget_ladder(float(self.state.budget))
+        # round_data: the packed device view, or (stream residency) a slab
+        # assembled from the predicted claims — which also covers top-up
+        # passes, since _begin_topup_pass rewrites cur/head *before* the
+        # prediction runs, so re-opened chunks are re-requested from the
+        # prefetcher exactly when a worker is about to claim them
         self.state, rep = self.engine.round_fn(b)(
-            self.state, self.table, self.engine.packed, self.engine.speeds)
+            self.state, self.table, self.engine.round_data(self.state),
+            self.engine.speeds)
         self.rounds += 1
         self._retire_finished(rep)
         if self._any_active() and bool(rep.exhausted):
@@ -496,13 +551,15 @@ class OLAWorkloadServer:
 
     # --------------------------------------------------------------- run ----
     def run(self, max_rounds: int = 200_000, wall_timeout_s: float = 600.0,
-            ) -> list[WorkloadResult]:
+            on_round=None) -> list[WorkloadResult]:
         """Drive until the queue drains and every resident query retires.
 
         If ``max_rounds`` or ``wall_timeout_s`` cuts the loop short,
         ``self.truncated`` is set and the returned list is missing the
         unfinished queries — callers indexing results by name/qid should
-        check it rather than assume completeness.
+        check it rather than assume completeness.  ``on_round(server)`` is
+        called after every engine round (monitoring hooks: the benchmarks
+        sample peak device residency through it).
         """
         self.truncated = False
         t0 = time.perf_counter()
@@ -513,7 +570,10 @@ class OLAWorkloadServer:
             if time.perf_counter() - t0 > wall_timeout_s:
                 self.truncated = True
                 break
-            if not self.step():
+            stepped = self.step()
+            if stepped and on_round is not None:
+                on_round(self)
+            if not stepped:
                 if not self.queue:
                     break
                 # idle: jump the modeled clock to the next arrival

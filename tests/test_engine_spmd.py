@@ -92,7 +92,8 @@ def drive(engine):
             table = slot_table_set(table, 2,
                                    encode_slot(q2, 8, plan='single_pass'))
         b = engine.budget_ladder(float(state.budget))
-        state, rep = engine.round_fn(b)(state, table, engine.packed,
+        state, rep = engine.round_fn(b)(state, table,
+                                        engine.round_data(state),
                                         engine.speeds)
         ests.append(np.asarray(rep.estimate))
         curs.append(np.asarray(state.cur))
@@ -101,6 +102,11 @@ def drive(engine):
 
 e1 = drive(SlotOLAEngine(store, 4, cfg))
 e2 = drive(SlotSPMDEngine(store, 4, cfg, mesh))
+# streaming residency: the slab shards over the mesh worker axis; hand-out
+# and stats must stay bit-exact vs the single-device packed drive
+import dataclasses
+cfg_stream = dataclasses.replace(cfg, residency='stream')
+e3 = drive(SlotSPMDEngine(store, 4, cfg_stream, mesh))
 
 # workload server over the SPMD engine == server over the single-device one
 def serve(mesh=None):
@@ -116,6 +122,9 @@ print(json.dumps({
     "handout_same": bool((e1[1] == e2[1]).all()),
     "m_same": bool((e1[2] == e2[2]).all()),
     "scan_m_same": bool((e1[3] == e2[3]).all()),
+    "stream_est_diff": float(np.abs(e1[0] - e3[0]).max()),
+    "stream_handout_same": bool((e1[1] == e3[1]).all()),
+    "stream_m_same": bool((e1[2] == e3[2]).all()),
     "server_single": serve(None),
     "server_spmd": serve(mesh),
 }))
@@ -137,4 +146,7 @@ def test_slot_spmd_parity_and_server():
     assert res["m_same"], res
     assert res["scan_m_same"], res
     assert res["est_diff"] == 0.0, res
+    assert res["stream_handout_same"], res
+    assert res["stream_m_same"], res
+    assert res["stream_est_diff"] == 0.0, res
     assert res["server_spmd"] == res["server_single"], res

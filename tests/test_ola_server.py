@@ -1,6 +1,8 @@
 """Workload server: slot engine parity, mid-scan admission, early leave,
 synopsis-seeded slots."""
 
+import dataclasses
+
 import numpy as np
 import pytest
 
@@ -287,6 +289,63 @@ def test_select_plan_measured_rates_override(setup, tmp_path):
     srv = OLAWorkloadServer(store, EngineConfig(num_workers=2),
                             rates_path=str(tmp_path / "nope.json"))
     assert srv.rates is None  # modeled defaults still in force
+
+
+def test_measured_rates_rescale_across_codecs(setup):
+    """The calibrated tuple rate is codec-relative (ASCII parsing vs
+    near-free binary decode): with the calibration's cost_per_tuple
+    recorded, select_plan rescales it for the serving store's codec instead
+    of treating a binary store as ASCII-slow."""
+    vals, store = setup                                  # ascii store
+    bstore = store_dataset(vals, 32, "binary")
+    q = Query(agg="sum", expr=Linear(COEF), epsilon=0.05)
+    cfg = EngineConfig(num_workers=4)
+    tb = float(store.chunk_sizes.sum()) * store.codec.record_bytes
+    # tuned so the ASCII store sits in the balanced band (resource_aware)
+    rates = MeasuredRates(io_bytes_per_sec=tb,            # t_io = 1 s
+                          cpu_tuples_per_sec=store.num_tuples,  # t_cpu = 1 s
+                          workers=4,
+                          cost_per_tuple=store.codec.extract_cost_per_tuple())
+    assert select_plan(store, cfg, q, rates=rates) == "resource_aware"
+    # binary decode is far cheaper per tuple -> the same calibration must
+    # classify the binary store as IO-bound (holistic), not CPU-bound
+    assert (bstore.codec.extract_cost_per_tuple()
+            < store.codec.extract_cost_per_tuple() / 4)
+    tbb = float(bstore.chunk_sizes.sum()) * bstore.codec.record_bytes
+    rates_b = dataclasses.replace(rates, io_bytes_per_sec=tbb)
+    assert select_plan(bstore, cfg, q, rates=rates_b) == "holistic"
+    # without the recorded cost the loader/selector keep the raw rate
+    raw = dataclasses.replace(rates_b, cost_per_tuple=0.0)
+    assert select_plan(bstore, cfg, q, rates=raw) == "resource_aware"
+
+
+def test_default_rates_path_ignores_cwd(tmp_path, monkeypatch):
+    """The default calibration path is anchored to the repo root (or the
+    OLA_RATES_PATH env knob), not the process CWD — a server started from
+    another directory must still find (or cleanly miss) the bench file."""
+    import os
+
+    from repro.serve.ola_server import default_rates_path
+
+    monkeypatch.delenv("OLA_RATES_PATH", raising=False)
+    monkeypatch.chdir(tmp_path)                     # CWD must be irrelevant
+    repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    assert default_rates_path() == os.path.join(repo_root,
+                                                "BENCH_slot_kernel.json")
+
+    # hit: env knob points at a usable calibration; loader default finds it
+    path = tmp_path / "elsewhere" / "cal.json"
+    path.parent.mkdir()
+    path.write_text('{"calibration": {"backend": "ref", "workers": 4, '
+                    '"cpu_tuples_per_sec": 2e9, "io_bytes_per_sec": 5e8}}')
+    monkeypatch.setenv("OLA_RATES_PATH", str(path))
+    rates = load_measured_rates()
+    assert rates is not None
+    assert rates.io_bytes_per_sec == 5e8 and rates.workers == 4
+
+    # miss: knob points nowhere -> None -> modeled fallback stays in force
+    monkeypatch.setenv("OLA_RATES_PATH", str(tmp_path / "nope.json"))
+    assert load_measured_rates() is None
 
 
 def test_post_exhaustion_without_synopsis_fails_loud(setup):
