@@ -32,6 +32,8 @@ from repro.core.controller import EstimationController
 from repro.core.engine import EngineConfig
 from repro.core.queries import Linear, Query, Range, TRUE
 from repro.data.generator import make_synthetic_zipf, store_dataset
+from repro.sched import QuerySLO, SchedulerConfig, WorkloadScheduler
+from repro.sched.admission import scan_tuples_per_s
 from repro.serve.ola_server import OLAWorkloadServer, poisson_workload
 
 
@@ -50,12 +52,15 @@ def build_queries(num_cols: int, count: int, seed: int) -> list[Query]:
     return out
 
 
-def run_server(store, cfg, arrivals, max_slots):
+def run_server(store, cfg, arrivals, max_slots, scheduler=None):
+    from benchmarks.common import latency_stats
     from repro.data.pipeline import device_resident_bytes
 
-    srv = OLAWorkloadServer(store, cfg, max_slots=max_slots)
-    for q, at in arrivals:
-        srv.submit(q, arrival_t=at)
+    srv = OLAWorkloadServer(store, cfg, max_slots=max_slots,
+                            scheduler=scheduler)
+    for item in arrivals:
+        q, at, slo = item if len(item) == 3 else (*item, None)
+        srv.submit(q, arrival_t=at, slo=slo)
     peak_raw = [0]
 
     def _sample(_srv):
@@ -72,6 +77,7 @@ def run_server(store, cfg, arrivals, max_slots):
         "rounds": srv.rounds,
         "topup_passes": srv.topup_passes,
         "answered_from_synopsis": sum(r.from_synopsis for r in results),
+        **latency_stats(results),
         # peak raw-data device footprint observed between rounds (uint8
         # only).  Packed: the resident view, every round.  Stream: usually 0
         # — the slab lives only while its round runs — so the in-flight
@@ -85,6 +91,91 @@ def run_server(store, cfg, arrivals, max_slots):
     else:
         out["device_raw_in_flight_bound"] = max(peak_raw[0], 1)
     srv.close()
+    return out
+
+
+def attach_slos(queries, t_full: float, seed: int) -> list:
+    """Random SLO mix for a query list: deadlines drawn relative to the
+    full-scan time (some comfortably loose, some tight enough that only a
+    scheduler meets them), priorities over all three classes."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for q in queries:
+        pri = str(rng.choice(["batch", "normal", "interactive"],
+                             p=[0.3, 0.5, 0.2]))
+        dl = float(rng.uniform(0.15, 2.5)) * t_full
+        out.append(QuerySLO(deadline_s=dl, priority=pri))
+    return out
+
+
+def run_closed_loop(store, cfg, queries, slos, max_slots, concurrency,
+                    scheduler=None):
+    """Closed-loop load: a fixed population of ``concurrency`` clients, each
+    submitting its next query the instant the previous one completes (the
+    classic interactive-exploration model — think-time zero).  Arrival times
+    therefore *depend on service*, which is what makes closed-loop the
+    honest complement to the open-loop Poisson lane."""
+    from benchmarks.common import latency_stats
+
+    srv = OLAWorkloadServer(store, cfg, max_slots=max_slots,
+                            scheduler=scheduler)
+    total = len(queries)
+    submitted = 0
+
+    def feed():
+        nonlocal submitted
+        while (submitted < total
+               and submitted - len(srv.results) < concurrency):
+            srv.submit(queries[submitted], arrival_t=srv.t_model,
+                       slo=slos[submitted])
+            submitted += 1
+
+    feed()
+    guard = 0
+    while len(srv.results) < total:
+        stepped = srv.step()
+        feed()
+        guard += 1
+        if guard > 200_000 or (not stepped and not srv.queue
+                               and not srv._any_active()
+                               and submitted == total):
+            break
+    results = sorted(srv.results, key=lambda r: r.qid)
+    out = {
+        "tuples": srv.tuples_scanned,
+        "makespan": srv.t_model,
+        "rounds": srv.rounds,
+        "completed": len(results),
+        "shed": srv.shed_count,
+        **latency_stats(results),
+    }
+    srv.close()
+    return out
+
+
+def run_sched_lanes(store, cfg, queries, rate: float, max_slots: int,
+                    concurrency: int, seed: int) -> dict:
+    """The scheduler benchmark proper: the same SLO-tagged workload served
+    with and without the scheduler, under open-loop (Poisson) and
+    closed-loop load.  Headline: SLO-hit rate and tail latency."""
+    t_full = float(store.num_tuples) / scan_tuples_per_s(store, cfg)
+    slos = attach_slos(queries, t_full, seed=seed + 1)
+    sched_cfg = SchedulerConfig(slot_capacity=max(2.0, max_slots / 2))
+
+    arrivals = poisson_workload(queries, rate_per_model_s=rate, seed=seed)
+    open_items = [(q, at, slo) for (q, at), slo in zip(arrivals, slos)]
+    out = {"t_full_scan_s": t_full, "num_queries": len(queries),
+           "open_loop": {}, "closed_loop": {}}
+    out["open_loop"]["unscheduled"] = run_server(
+        store, cfg, open_items, max_slots)
+    out["open_loop"]["scheduled"] = run_server(
+        store, cfg, open_items, max_slots,
+        scheduler=WorkloadScheduler(sched_cfg))
+    out["closed_loop"]["unscheduled"] = run_closed_loop(
+        store, cfg, queries, slos, max_slots, concurrency)
+    out["closed_loop"]["scheduled"] = run_closed_loop(
+        store, cfg, queries, slos, max_slots, concurrency,
+        scheduler=WorkloadScheduler(sched_cfg))
     return out
 
 
@@ -110,7 +201,8 @@ def run_sequential(store, cfg, arrivals, synopsis_budget):
     }
 
 
-def run(fast: bool = False, smoke: bool = False) -> str:
+def run(fast: bool = False, smoke: bool = False, sched: bool = True,
+        sched_only: bool = False) -> str:
     if smoke:
         t, chunks, nq, slots = 2048, 16, 6, 4
     elif fast:
@@ -122,6 +214,9 @@ def run(fast: bool = False, smoke: bool = False) -> str:
     queries = build_queries(8, nq, seed=1)
     # arrival rate scaled so several queries overlap one scan's modeled time
     arrivals = poisson_workload(queries, rate_per_model_s=2000.0, seed=2)
+
+    if sched_only:
+        return _run_sched_only(store, cfg, queries, slots)
 
     # streaming residency first (clean device-byte measurement), then packed
     server_stream = run_server(
@@ -136,6 +231,12 @@ def run(fast: bool = False, smoke: bool = False) -> str:
 
     from benchmarks.common import memory_report
 
+    sched_out = None
+    if sched:
+        sched_out = run_sched_lanes(store, cfg, queries, rate=2000.0,
+                                    max_slots=slots,
+                                    concurrency=max(2, slots // 2), seed=11)
+
     out = {
         "num_queries": nq,
         "table_tuples": t,
@@ -145,6 +246,7 @@ def run(fast: bool = False, smoke: bool = False) -> str:
         "server_stream": server_stream,
         "sequential": seq,
         "sequential_synopsis": seq_syn,
+        "sched": sched_out,
         "tuples_saved_vs_sequential": seq["tuples"] - server["tuples"],
         "tuples_ratio_vs_sequential": round(
             server["tuples"] / max(seq["tuples"], 1), 4),
@@ -175,6 +277,8 @@ def run(fast: bool = False, smoke: bool = False) -> str:
           f"<= {server_stream['device_raw_in_flight_bound']} raw device "
           f"bytes in flight (2 slabs) vs packed "
           f"{server['device_raw_bytes']} resident")
+    if sched_out is not None:
+        _print_sched(sched_out)
     return json.dumps({
         "tuples_ratio_vs_sequential": out["tuples_ratio_vs_sequential"],
         "server_tuples": server["tuples"],
@@ -184,13 +288,62 @@ def run(fast: bool = False, smoke: bool = False) -> str:
     })
 
 
+def _print_sched(sched_out: dict) -> None:
+    for mode in ("open_loop", "closed_loop"):
+        for kind in ("unscheduled", "scheduled"):
+            r = sched_out[mode][kind]
+            hit = r.get("slo_hit_rate")
+            print(f"  sched/{mode:<11s} {kind:<11s}: "
+                  f"p50 {r['p50_latency_s']:.5f}s  p95 {r['p95_latency_s']:.5f}s  "
+                  f"p99 {r['p99_latency_s']:.5f}s  "
+                  f"slo-hit {hit if hit is None else round(hit, 3)}  "
+                  f"shed {r['outcomes']['shed']}")
+
+
+def _run_sched_only(store, cfg, queries, slots: int) -> str:
+    """CI scheduler smoke lane: run only the closed-loop/open-loop SLO
+    harness and merge the ``sched`` section into an existing
+    BENCH_workload.json (or write a fresh file when none exists)."""
+    from benchmarks.common import bench_output_paths
+
+    sched_out = run_sched_lanes(store, cfg, queries, rate=2000.0,
+                                max_slots=slots,
+                                concurrency=max(2, slots // 2), seed=11)
+    for path in bench_output_paths("workload"):
+        base = {}
+        try:
+            with open(path) as f:
+                base = json.load(f)
+        except (OSError, ValueError):
+            pass
+        base["sched"] = sched_out
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(base, f, indent=1)
+    print(f"[bench_workload] scheduler lanes over {len(queries)} queries")
+    _print_sched(sched_out)
+    cl = sched_out["closed_loop"]
+    return json.dumps({
+        "closed_loop_slo_hit_scheduled": cl["scheduled"]["slo_hit_rate"],
+        "closed_loop_slo_hit_unscheduled": cl["unscheduled"]["slo_hit_rate"],
+        "closed_loop_p99_scheduled": cl["scheduled"]["p99_latency_s"],
+    })
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny config for the CI bench-smoke step")
+    ap.add_argument("--no-sched", action="store_true",
+                    help="skip the scheduler (SLO) lanes")
+    ap.add_argument("--sched-only", action="store_true",
+                    help="run only the scheduler lanes and merge the "
+                         "'sched' section into BENCH_workload.json "
+                         "(CI scheduler smoke lane)")
     args = ap.parse_args()
-    run(fast=args.fast, smoke=args.smoke)
+    run(fast=args.fast, smoke=args.smoke, sched=not args.no_sched,
+        sched_only=args.sched_only)
 
 
 if __name__ == "__main__":

@@ -40,6 +40,31 @@ def memory_report() -> dict:
     }
 
 
+def latency_stats(results) -> dict:
+    """Latency percentiles + SLO-hit rate for BENCH_*.json outputs.
+
+    ``results`` are :class:`~repro.serve.ola_server.WorkloadResult`\\ s.
+    ``slo_hit_rate`` averages over the queries that carried an SLO
+    (``slo_met is not None``); it is ``None`` when none did.  Outcome counts
+    split scan-served answers from queued/shed ones.
+    """
+    lat = np.asarray([r.latency for r in results], float)
+    out = {
+        "p50_latency_s": float(np.percentile(lat, 50)) if len(lat) else None,
+        "p95_latency_s": float(np.percentile(lat, 95)) if len(lat) else None,
+        "p99_latency_s": float(np.percentile(lat, 99)) if len(lat) else None,
+        "mean_latency_s": float(lat.mean()) if len(lat) else None,
+        "mean_queue_wait_s": float(np.mean([r.queue_wait for r in results]))
+        if results else None,
+        "outcomes": {
+            k: sum(r.sched_outcome == k for r in results)
+            for k in ("admitted", "queued", "shed")},
+    }
+    hits = [r.slo_met for r in results if r.slo_met is not None]
+    out["slo_hit_rate"] = float(np.mean(hits)) if hits else None
+    return out
+
+
 def datasets(fast: bool):
     t = 8192 if fast else 16384
     chunks = 32 if fast else 64

@@ -129,6 +129,10 @@ class EngineConfig:
     residency: str = "packed"
     slab_row_tile: int = 256     # streaming kernel's row-tile (VMEM bound)
     prefetch_lookahead: int = 8  # schedule chunks the reader thread runs ahead
+    # adapt the lookahead at runtime from the measured READ/CPU rate ratio
+    # (a slow store raises it toward the prefetcher's ceiling so reads stay
+    # hidden under compute; purely a perf knob — estimates are unaffected)
+    prefetch_adaptive: bool = False
 
     def __post_init__(self):
         assert self.strategy in STRATEGIES, self.strategy
@@ -162,6 +166,16 @@ class EngineState(NamedTuple):
     raw_touched: jnp.ndarray     # (N,) bool — chunk has caused a raw READ
     cache: jnp.ndarray           # (N, cap, C) f32 — extracted-tuple cache for
                                  # synopsis construction (cap may be 0)
+    schedule: jnp.ndarray        # (N,) int32 — claim order over chunk ids.
+                                 # Initialized from the program's committed
+                                 # random order; the workload scheduler may
+                                 # permute the *unclaimed tail* (positions
+                                 # >= head) between rounds — variance-guided
+                                 # claiming.  Chunks never yet started stay
+                                 # in their original relative order, so the
+                                 # first-touch set remains a prefix of the
+                                 # committed random order (the inspection-
+                                 # paradox guarantee is ordering-invariant).
 
 
 class RoundReport(NamedTuple):
@@ -338,6 +352,7 @@ class EngineProgram:
             raw_touched=jnp.zeros((self.n_chunks,), bool),
             cache=jnp.zeros((self.n_chunks, cfg.cache_cap, self.num_cols),
                             jnp.float32),
+            schedule=jnp.asarray(self.schedule_np),
         )
         if synopsis_seed is not None:
             stats = state.stats._replace(
@@ -364,34 +379,39 @@ class EngineProgram:
                     ) -> tuple[np.ndarray, np.ndarray, int]:
         """Host-side replica of the round's CLAIM step (streaming residency).
 
-        The claim rule is a pure function of ``(cur, head, schedule)`` — no
-        chunk content — so the slab pipeline can predict *exactly* which
+        The claim rule is a pure function of ``(cur, head, state.schedule)``
+        — no chunk content — so the slab pipeline can predict *exactly* which
         chunk each worker will hold this round and assemble the slab before
-        the jitted step runs.  Returns ``(chunk_ids (P,), active (P,),
-        new_head)`` in global worker order (``state.cur`` is host-gathered,
-        so this works unchanged for the SPMD engines).
+        the jitted step runs.  The schedule is read from *state* (not the
+        program) so a scheduler-permuted claim order (see
+        :class:`repro.sched.WorkloadScheduler`) is followed identically by
+        the prediction and the in-jit CLAIM.  Returns ``(chunk_ids (P,),
+        active (P,), new_head)`` in global worker order (``state.cur`` is
+        host-gathered, so this works unchanged for the SPMD engines).
         """
         cur = np.asarray(state.cur).astype(np.int64)
         head = int(state.head)
         n = self.n_chunks
+        schedule = np.asarray(state.schedule)
         idle = cur == IDLE
         ranks = np.cumsum(idle) - idle
         want = head + ranks
         got = idle & (want < n)
         cur_next = np.where(got, want, np.where(idle, EXHAUSTED, cur))
-        j = self.schedule_np[np.clip(cur_next, 0, n - 1)]
+        j = schedule[np.clip(cur_next, 0, n - 1)]
         active = cur_next >= 0
         new_head = head + int(np.sum(idle & (want < n)))
         return j, active, new_head
 
-    def _closed_prefix_mask(self, closed: jnp.ndarray) -> jnp.ndarray:
+    def _closed_prefix_mask(self, closed: jnp.ndarray,
+                            schedule: jnp.ndarray) -> jnp.ndarray:
         """Reordering barrier (§3): chunk-level estimation may only use the
         *closed prefix* of the schedule — the chunks up to the first not-yet
         -closed schedule position.  Returns the (N,) chunk mask."""
         n = self.n_chunks
-        done_sched = closed[self.schedule]
+        done_sched = closed[schedule]
         prefix_len = jnp.where(jnp.all(done_sched), n, jnp.argmax(~done_sched))
-        return jnp.zeros((n,), bool).at[self.schedule].set(
+        return jnp.zeros((n,), bool).at[schedule].set(
             jnp.arange(n) < prefix_len)
 
     # ------------------------------------------------------------ round ----
@@ -433,7 +453,7 @@ class EngineProgram:
         head = state.head + jnp.sum(idle_all & (state.head + ranks_all < n))
 
         active = cur >= 0
-        j = self.schedule[jnp.clip(cur, 0, n - 1)]               # (W,) chunk ids
+        j = state.schedule[jnp.clip(cur, 0, n - 1)]              # (W,) chunk ids
         mj = sizes[j]
         off = state.offset[j]                                    # permutation cursor
         m_before = state.scan_m[j]                               # scan tuples so far
@@ -446,6 +466,18 @@ class EngineProgram:
         b_eff = jnp.where(active, b_eff, 0)
         k = jnp.arange(b_static, dtype=jnp.int32)
         valid = k[None, :] < b_eff[:, None]                      # (W, B)
+        if slot_mode:
+            # fairness weights (scheduler, repro.sched.fairness): slot s may
+            # *count* only the first ceil(weight_s · b_eff) tuples of each
+            # worker window this round.  The scan still extracts the full
+            # b_eff (cursors/READ accounting are scan-level); a weighted slot
+            # samples a shorter prefix of the same permutation window, which
+            # is still a uniform without-replacement subsample.  weight = 1
+            # reproduces the unweighted round bit-for-bit.
+            b_slot = jnp.minimum(
+                jnp.ceil(slots.weight[:, None]
+                         * b_eff[None, :].astype(jnp.float32)).astype(jnp.int32),
+                b_eff[None, :])                                  # (S, W)
 
         def window(seed_j, off_j, mj_j):
             return permutation_window_dyn(seed_j, off_j, b_static, mj_j, self.m_max)
@@ -461,16 +493,19 @@ class EngineProgram:
                 coeffs, p_lo, p_hi = slots.coeffs, slots.lo, slots.hi
                 isc = (slots.agg == AGG_COUNT).astype(jnp.float32)
                 gate_v = slots.active.astype(jnp.float32)
+                wts = slots.weight
             else:
                 coeffs, p_lo, p_hi = (self._plan_coeffs, self._plan_lo,
                                       self._plan_hi)
                 isc = self._plan_is_count
                 gate_v = jnp.ones((q,), jnp.float32)
+                wts = jnp.ones((q,), jnp.float32)
             if streaming:
                 # slab-streaming kernel: row tiles of the worker's slab, so
                 # chunks larger than VMEM stream tile-by-tile
                 stats4 = kernel_ops.slot_extract_stream(
                     data, idx, b_eff, coeffs, p_lo, p_hi, isc, gate_v,
+                    weights=wts,
                     row_tile=cfg.slab_row_tile, backend=self._ops_backend)
                 cols = None
                 if cap > 0:
@@ -481,6 +516,7 @@ class EngineProgram:
             else:
                 stats4, cols = kernel_ops.slot_extract(
                     data, j, idx, b_eff, coeffs, p_lo, p_hi, isc, gate_v,
+                    weights=wts,
                     return_cols=cap > 0, backend=self._ops_backend)
             sum_x = stats4[..., 1].astype(dtype).T               # (Q|S, W)
             sum_xx = stats4[..., 2].astype(dtype).T
@@ -494,10 +530,12 @@ class EngineProgram:
             if slot_mode:
                 x, pr = slot_evaluate(slots, cols)               # (S, W, B)
                 gate = slots.active.astype(dtype)[:, None, None]
+                # per-slot window prefix (fairness): k < b_slot[s, w]
+                vf = (k[None, None, :] < b_slot[:, :, None]).astype(dtype)
             else:
                 x, pr = jax.vmap(self.evaluate, in_axes=0, out_axes=1)(cols)  # (Q, W, B)
                 gate = jnp.ones((), dtype)
-            vf = valid.astype(dtype)[None]
+                vf = valid.astype(dtype)[None]
             x = x.astype(dtype) * vf * gate
             pr = pr.astype(dtype) * vf * gate
             sum_x = jnp.sum(x, -1)                               # (Q|S, W)
@@ -512,10 +550,15 @@ class EngineProgram:
             dyq=jnp.zeros((q, n), dtype).at[:, j].add(sum_xx * af),
             dps=jnp.zeros((q, n), dtype).at[:, j].add(sum_p * af),
         )
+        if slot_mode:
+            # per-slot sample-size deltas honor the fairness budgets (== dm
+            # broadcast when every weight is 1)
+            deltas["dmq"] = jnp.zeros((q, n), jnp.int32).at[:, j].add(
+                b_slot * af[None, :])
         deltas = coll.merge(deltas)
         if slot_mode:
             # a slot only counts tuples extracted while it is active
-            dm_q = slots.active.astype(jnp.int32)[:, None] * deltas["dm"][None]
+            dm_q = slots.active.astype(jnp.int32)[:, None] * deltas["dmq"]
         else:
             dm_q = deltas["dm"]
         stats = state.stats._replace(
@@ -646,11 +689,12 @@ class EngineProgram:
             base_mask = stats.m > 0                              # (S, N)
             est_mask = jnp.where(
                 (slots.plan == PLAN_CHUNK_LEVEL)[:, None],
-                base_mask & self._closed_prefix_mask(closed)[None], base_mask)
+                base_mask & self._closed_prefix_mask(
+                    closed, state.schedule)[None], base_mask)
         else:
             strategy = cfg.strategy
             if strategy == "chunk_level":
-                est_mask = self._closed_prefix_mask(closed)
+                est_mask = self._closed_prefix_mask(closed, state.schedule)
             elif strategy == "chunk_level_unordered":
                 est_mask = closed                  # inspection-paradox-vulnerable
             else:
@@ -723,7 +767,8 @@ class EngineProgram:
             first_est=jnp.asarray(True), stopped=stopped,
             round=state.round + 1, t_io=state.t_io + round_io,
             t_cpu=state.t_cpu + round_cpu, cpu_bound=cpu_bound,
-            cached_m=state.cached_m, raw_touched=raw_touched, cache=cache)
+            cached_m=state.cached_m, raw_touched=raw_touched, cache=cache,
+            schedule=state.schedule)
         report = RoundReport(
             estimate=estimate, lo=lo, hi=hi, err=err, decided=decided,
             n_chunks=n_chunks_rep, m_tuples=m_tuples_rep,
@@ -763,7 +808,8 @@ class _ResidencyMixin:
             self.pipeline = SlabPrefetcher(
                 store, num_workers=config.num_workers,
                 row_multiple=config.slab_row_tile,
-                lookahead=config.prefetch_lookahead, device_put=slab_put)
+                lookahead=config.prefetch_lookahead, device_put=slab_put,
+                adaptive=config.prefetch_adaptive)
             return store.chunk_sizes
         packed, sizes = store.packed_device_view()
         self.packed = (jnp.asarray(packed) if packed_put is None
@@ -775,8 +821,10 @@ class _ResidencyMixin:
             return self.packed
         j, active, new_head = self.program.plan_claims(state)
         slab = self.pipeline.assemble(j, active)
-        nxt = self.program.schedule_np[new_head:new_head
-                                       + self.pipeline.lookahead]
+        # read-ahead follows the *state* schedule, so a scheduler-permuted
+        # claim order (repro.sched) is what the reader thread warms up
+        nxt = np.asarray(state.schedule)[new_head:new_head
+                                         + self.pipeline.lookahead]
         self.pipeline.prefetch(nxt)
         return slab
 

@@ -69,7 +69,8 @@ def engine_state_specs() -> EngineState:
         stats=stats_spec, scan_m=rep, offset=rep, closed=rep, acc_met=rep,
         head=rep, cur=P("data"), budget=rep, decay=rep, calib_sum=rep,
         calib_cnt=rep, first_est=rep, stopped=rep, round=rep, t_io=rep,
-        t_cpu=rep, cpu_bound=rep, cached_m=rep, raw_touched=rep, cache=rep)
+        t_cpu=rep, cpu_bound=rep, cached_m=rep, raw_touched=rep, cache=rep,
+        schedule=rep)
 
 
 def report_specs() -> RoundReport:

@@ -292,6 +292,10 @@ class SlotTable(NamedTuple):
     having_op: jnp.ndarray   # (S,) int32  _HAVING_CODES or HAVING_NONE
     having_thr: jnp.ndarray  # (S,) f32
     active: jnp.ndarray      # (S,) bool
+    weight: jnp.ndarray      # (S,) f32 fairness share in (0, 1]: the slot
+                             # counts only the first ceil(weight·b_eff)
+                             # tuples of each worker window per round
+                             # (repro.sched.fairness; 1 = unweighted round)
 
     @property
     def max_slots(self) -> int:
@@ -312,6 +316,7 @@ def empty_slot_table(max_slots: int, num_cols: int) -> SlotTable:
         having_op=jnp.full((s,), HAVING_NONE, jnp.int32),
         having_thr=jnp.zeros((s,), jnp.float32),
         active=jnp.zeros((s,), bool),
+        weight=jnp.ones((s,), jnp.float32),
     )
 
 
@@ -332,7 +337,7 @@ def encode_slot(query: Query, num_cols: int, plan: str = "resource_aware",
         eps=np.float32(query.epsilon),
         z=np.float32(ndtri((1.0 + query.confidence) / 2.0)),
         having_op=np.int32(hop), having_thr=np.float32(thr),
-        active=True,
+        active=True, weight=np.float32(1.0),
     )
 
 
@@ -349,6 +354,7 @@ def slot_table_set(table: SlotTable, s: int, row: dict) -> SlotTable:
         having_op=table.having_op.at[s].set(jnp.int32(row["having_op"])),
         having_thr=table.having_thr.at[s].set(jnp.float32(row["having_thr"])),
         active=table.active.at[s].set(bool(row["active"])),
+        weight=table.weight.at[s].set(jnp.float32(row.get("weight", 1.0))),
     )
 
 

@@ -34,6 +34,7 @@ from __future__ import annotations
 import math
 import queue
 import threading
+import time
 import weakref
 from collections import OrderedDict
 from typing import Callable, Iterable, Optional
@@ -80,7 +81,9 @@ class SlabPrefetcher:
 
     def __init__(self, store, num_workers: int, row_multiple: int = 1,
                  lookahead: int = 8, max_cached_chunks: Optional[int] = None,
-                 device_put: Optional[Callable] = None):
+                 device_put: Optional[Callable] = None,
+                 adaptive: bool = False,
+                 max_lookahead: Optional[int] = None):
         self.store = store
         self.num_workers = int(num_workers)
         rb = int(store.codec.record_bytes)
@@ -90,8 +93,26 @@ class SlabPrefetcher:
         self.slab_shape = (self.num_workers, self.rows_max, rb)
         self.slab_bytes = int(np.prod(self.slab_shape))
         self.lookahead = int(lookahead)
+        # adaptive lookahead (measured READ/CPU ratio): ``lookahead`` floats
+        # between the configured base and ``max_lookahead`` based on how
+        # many rounds one chunk READ spans — a slow disk raises it so the
+        # reader thread stays ahead of the scan, a fast one keeps the host
+        # cache small.  The cache capacity is provisioned for the ceiling.
+        self.adaptive = bool(adaptive)
+        self.base_lookahead = self.lookahead
+        self.max_lookahead = int(max_lookahead
+                                 or max(4 * self.lookahead,
+                                        2 * self.num_workers))
+        cap_lookahead = self.max_lookahead if self.adaptive else self.lookahead
         self.capacity = int(max_cached_chunks
-                            or (2 * self.num_workers + self.lookahead))
+                            or (2 * self.num_workers + cap_lookahead))
+        # READ/CPU rate probes (wall clock): cumulative seconds spent in
+        # chunk reads, and an EMA of the inter-assemble gap (≈ one round's
+        # compute+step time) and of the chunks consumed per round
+        self.read_seconds = 0.0
+        self._round_s: Optional[float] = None
+        self._claims_per_round = 1.0
+        self._last_assemble_t: Optional[float] = None
         if device_put is None:
             import jax
 
@@ -136,11 +157,14 @@ class SlabPrefetcher:
                 ev.wait()
                 continue  # re-check the cache (entry may have been trimmed)
             try:
+                t0 = time.perf_counter()
                 raw = self.store.chunk_bytes(j)
                 self.store.evict(j)  # host residency stays O(slab)
+                dt = time.perf_counter() - t0
                 with self._lock:
                     self.chunk_reads += 1
                     self.bytes_read += raw.nbytes
+                    self.read_seconds += dt
                     self._cache[j] = raw
                     self._cache.move_to_end(j)
                     while len(self._cache) > self.capacity:
@@ -169,13 +193,48 @@ class SlabPrefetcher:
         ``device_put`` untouched — the double-buffer slack in the memory
         bound.
         """
+        if self.adaptive:
+            self._observe_round(int(np.sum(np.asarray(active, bool))))
         slab = np.zeros(self.slab_shape, np.uint8)
         for w in range(self.num_workers):
             if bool(active[w]):
                 raw = self._read_chunk(int(chunk_ids[w]))
                 slab[w, : raw.shape[0]] = raw
         self.slabs_built += 1
+        if self.adaptive:
+            # stamp *after* the synchronous reads: the next round's gap then
+            # measures compute/step time only, not READ time
+            self._last_assemble_t = time.perf_counter()
         return self._device_put(slab)
+
+    def _observe_round(self, n_claims: int) -> None:
+        """Adaptive lookahead from the measured READ/CPU rate ratio.
+
+        One chunk READ takes ``read_seconds / chunk_reads`` wall seconds;
+        one round (the gap between ``assemble`` calls ≈ device compute +
+        host step) takes ``_round_s``.  The reader must run
+        ``ceil(t_read / t_round)`` rounds ahead — times the chunks the scan
+        consumes per round — for READ to stay hidden under compute.  A slow
+        store therefore *raises* the lookahead (up to ``max_lookahead``,
+        which the cache is provisioned for); a fast one relaxes it back to
+        the configured base.
+        """
+        now = time.perf_counter()
+        if self._last_assemble_t is not None:
+            # gap since the previous assemble *finished* (see the end-of-
+            # assemble stamp): device compute + host step, READ excluded
+            dt = now - self._last_assemble_t
+            self._round_s = (dt if self._round_s is None
+                             else 0.7 * self._round_s + 0.3 * dt)
+            self._claims_per_round = (0.7 * self._claims_per_round
+                                      + 0.3 * max(n_claims, 0))
+        if self._round_s is None or self.chunk_reads == 0:
+            return
+        t_read = self.read_seconds / self.chunk_reads
+        rounds_spanned = t_read / max(self._round_s, 1e-9)
+        need = math.ceil(rounds_spanned * max(self._claims_per_round, 1.0))
+        self.lookahead = int(np.clip(need, self.base_lookahead,
+                                     self.max_lookahead))
 
     def close(self) -> None:
         self._closed = True

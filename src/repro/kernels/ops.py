@@ -72,7 +72,8 @@ def chunk_agg(raw: jnp.ndarray, sizes: jnp.ndarray, coeffs, lo, hi,
 
 def slot_extract(packed: jnp.ndarray, jw: jnp.ndarray, idx: jnp.ndarray,
                  b_eff: jnp.ndarray, coeffs, lo, hi, is_count, gate,
-                 return_cols: bool = False, backend: str = "auto"):
+                 return_cols: bool = False, backend: str = "auto",
+                 weights=None):
     """Fused round extraction: gather + parse + slot eval + partial stats.
 
     packed (N, M, rec) uint8, jw (W,) chunk ids, idx (W, B) window rows ->
@@ -85,19 +86,24 @@ def slot_extract(packed: jnp.ndarray, jw: jnp.ndarray, idx: jnp.ndarray,
                       jnp.asarray(b_eff, jnp.int32))
     coeffs, lo, hi, is_count, gate = (
         jnp.asarray(a, jnp.float32) for a in (coeffs, lo, hi, is_count, gate))
+    if weights is None:
+        weights = jnp.ones((coeffs.shape[0],), jnp.float32)
+    weights = jnp.asarray(weights, jnp.float32)
     if use_pallas:
         return slot_extract_pallas(packed, jw, idx, b_eff, coeffs, lo, hi,
-                                   is_count, gate, num_cols=num_cols,
+                                   is_count, gate, weights,
+                                   num_cols=num_cols,
                                    return_cols=return_cols,
                                    interpret=interpret)
     return _ref.slot_extract_ref(packed, jw, idx, b_eff, coeffs, lo, hi,
                                  is_count, gate, num_cols=num_cols,
-                                 return_cols=return_cols)
+                                 return_cols=return_cols, weights=weights)
 
 
 def slot_extract_stream(slab: jnp.ndarray, idx: jnp.ndarray,
                         b_eff: jnp.ndarray, coeffs, lo, hi, is_count, gate,
-                        row_tile: int = 256, backend: str = "auto"):
+                        row_tile: int = 256, backend: str = "auto",
+                        weights=None):
     """Slab-streaming fused round extraction (``residency="stream"``).
 
     slab (W, R, rec) uint8 — worker w's chunk rows at slab[w] (assembled by
@@ -110,13 +116,18 @@ def slot_extract_stream(slab: jnp.ndarray, idx: jnp.ndarray,
     idx, b_eff = jnp.asarray(idx, jnp.int32), jnp.asarray(b_eff, jnp.int32)
     coeffs, lo, hi, is_count, gate = (
         jnp.asarray(a, jnp.float32) for a in (coeffs, lo, hi, is_count, gate))
+    if weights is None:
+        weights = jnp.ones((coeffs.shape[0],), jnp.float32)
+    weights = jnp.asarray(weights, jnp.float32)
     if use_pallas:
         return slot_extract_stream_pallas(slab, idx, b_eff, coeffs, lo, hi,
-                                          is_count, gate, num_cols=num_cols,
+                                          is_count, gate, weights,
+                                          num_cols=num_cols,
                                           row_tile=row_tile,
                                           interpret=interpret)
     return _ref.slot_extract_stream_ref(slab, idx, b_eff, coeffs, lo, hi,
-                                        is_count, gate, num_cols=num_cols)
+                                        is_count, gate, num_cols=num_cols,
+                                        weights=weights)
 
 
 def round_stats(slab: jnp.ndarray, b_eff: jnp.ndarray, coeffs, lo, hi,

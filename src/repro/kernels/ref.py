@@ -65,12 +65,15 @@ def chunk_agg_ref(raw: jnp.ndarray, num_cols: int, coeffs, lo, hi,
 
 def slot_extract_ref(packed: jnp.ndarray, jw: jnp.ndarray, idx: jnp.ndarray,
                      b_eff: jnp.ndarray, coeffs, lo, hi, is_count, gate,
-                     num_cols: int, return_cols: bool = False):
+                     num_cols: int, return_cols: bool = False, weights=None):
     """Fused round extraction oracle (see kernels/slot_extract.py).
 
     packed (N, M, rec) uint8, jw (W,) chunk ids, idx (W, B) permutation-window
     rows, b_eff (W,), coeffs/lo/hi (S, C), is_count/gate (S,) ->
     (stats (W, S, 4) = (m, Σx, Σx², Σp), cols (W, B, C) | None).
+    ``weights`` (S,) are the scheduler's per-slot fairness shares: slot s
+    counts only the first ``ceil(weight_s·b_eff)`` window rows (``None`` or
+    all-ones = the unweighted round, bit-identical to the historic path).
     """
     w, b = idx.shape
     raw = packed[jw[:, None], idx]                # (W, B, rec) gathered rows
@@ -78,11 +81,17 @@ def slot_extract_ref(packed: jnp.ndarray, jw: jnp.ndarray, idx: jnp.ndarray,
         w, b, num_cols)
     x, p = eval_plan_ref(cols, coeffs, lo, hi)    # (S, W, B)
     x = jnp.where(jnp.asarray(is_count)[:, None, None] > 0.0, p, x)
-    ok = (jnp.arange(b)[None, :] < b_eff[:, None]).astype(cols.dtype)  # (W, B)
-    mask = ok[None] * jnp.asarray(gate, cols.dtype)[:, None, None]
+    if weights is None:
+        weights = jnp.ones((x.shape[0],), jnp.float32)
+    bs = jnp.minimum(jnp.ceil(jnp.asarray(weights, jnp.float32)[:, None]
+                              * b_eff[None, :].astype(jnp.float32)
+                              ).astype(b_eff.dtype), b_eff[None, :])  # (S, W)
+    ok_s = (jnp.arange(b)[None, None, :]
+            < bs[:, :, None]).astype(cols.dtype)  # (S, W, B)
+    mask = ok_s * jnp.asarray(gate, cols.dtype)[:, None, None]
     x = x * mask
     p = p * mask
-    cnt = jnp.broadcast_to(jnp.sum(ok, -1)[None], x.shape[:2])  # (S, W)
+    cnt = jnp.sum(ok_s, -1)                       # (S, W)
     out = jnp.stack([cnt, jnp.sum(x, -1), jnp.sum(x * x, -1), jnp.sum(p, -1)],
                     axis=-1)                      # (S, W, 4)
     return jnp.transpose(out, (1, 0, 2)), (cols if return_cols else None)
@@ -90,7 +99,7 @@ def slot_extract_ref(packed: jnp.ndarray, jw: jnp.ndarray, idx: jnp.ndarray,
 
 def slot_extract_stream_ref(slab: jnp.ndarray, idx: jnp.ndarray,
                             b_eff: jnp.ndarray, coeffs, lo, hi, is_count,
-                            gate, num_cols: int) -> jnp.ndarray:
+                            gate, num_cols: int, weights=None) -> jnp.ndarray:
     """Slab-streaming round extraction oracle (see kernels/slot_extract.py).
 
     Identical contract to :func:`slot_extract_ref` except the raw source is
@@ -102,7 +111,8 @@ def slot_extract_stream_ref(slab: jnp.ndarray, idx: jnp.ndarray,
     w = idx.shape[0]
     stats, _ = slot_extract_ref(slab, jnp.arange(w, dtype=jnp.int32), idx,
                                 b_eff, coeffs, lo, hi, is_count, gate,
-                                num_cols=num_cols, return_cols=False)
+                                num_cols=num_cols, return_cols=False,
+                                weights=weights)
     return stats
 
 

@@ -48,7 +48,7 @@ from repro.kernels.extract_parse import _parse_block
 
 
 def _slot_extract_kernel(jw_ref, beff_ref, idx_ref, packed_ref, coeffs_ref,
-                         lo_ref, hi_ref, isc_ref, gate_ref, *refs,
+                         lo_ref, hi_ref, isc_ref, gate_ref, wts_ref, *refs,
                          num_cols: int, budget: int, return_cols: bool):
     if return_cols:
         stats_ref, cols_ref, scratch = refs
@@ -73,12 +73,19 @@ def _slot_extract_kernel(jw_ref, beff_ref, idx_ref, packed_ref, coeffs_ref,
                             lo_ref[...], hi_ref[...])        # (S, B)
     # COUNT slots carry zero coefficients; their x is the indicator itself
     x = jnp.where(isc_ref[...][:, None] > 0.0, p, x)
-    ok = (jax.lax.iota(jnp.int32, budget) < beff_ref[w]).astype(jnp.float32)
-    mask = ok[None, :] * gate_ref[...][:, None]              # (S, B)
+    # per-slot budget: fairness weight w_s caps slot s at the first
+    # ceil(w_s·b_eff) window rows (w_s = 1 → the full b_eff, bit-identical
+    # to the unweighted round)
+    beff = beff_ref[w]
+    bs = jnp.minimum(jnp.ceil(wts_ref[...] * beff.astype(jnp.float32)
+                              ).astype(jnp.int32), beff)     # (S,)
+    ok_s = (jax.lax.iota(jnp.int32, budget)[None, :]
+            < bs[:, None]).astype(jnp.float32)               # (S, B)
+    mask = ok_s * gate_ref[...][:, None]                     # (S, B)
     x = x * mask
     p = p * mask
     stats_ref[0] = jnp.stack([
-        jnp.broadcast_to(jnp.sum(ok), (x.shape[0],)),
+        jnp.sum(ok_s, -1),
         jnp.sum(x, -1), jnp.sum(x * x, -1), jnp.sum(p, -1)], axis=-1)
 
 
@@ -86,13 +93,16 @@ def _slot_extract_kernel(jw_ref, beff_ref, idx_ref, packed_ref, coeffs_ref,
                                              "interpret"))
 def slot_extract_pallas(packed: jnp.ndarray, jw: jnp.ndarray,
                         idx: jnp.ndarray, b_eff: jnp.ndarray,
-                        coeffs, lo, hi, is_count, gate, num_cols: int,
+                        coeffs, lo, hi, is_count, gate, weights,
+                        num_cols: int,
                         return_cols: bool = False, interpret: bool = False):
     """Fused round extraction.
 
     packed (N, M_max, rec) uint8, jw (W,) chunk ids, idx (W, B) window rows,
-    b_eff (W,) budgets, coeffs/lo/hi (S, C) f32, is_count/gate (S,) f32
-    -> stats (W, S, 4) f32 ``(m, Σx, Σx², Σp)`` [, cols (W, B, C) f32].
+    b_eff (W,) budgets, coeffs/lo/hi (S, C) f32, is_count/gate/weights (S,)
+    f32 -> stats (W, S, 4) f32 ``(m, Σx, Σx², Σp)`` [, cols (W, B, C) f32].
+    ``weights`` are the scheduler's per-slot fairness shares (1 = full
+    budget, see ``repro.sched.fairness``).
     """
     n, m_max, rec = packed.shape
     assert rec == num_cols * FIELD_BYTES, (rec, num_cols)
@@ -116,6 +126,7 @@ def slot_extract_pallas(packed: jnp.ndarray, jw: jnp.ndarray,
             pl.BlockSpec((s, num_cols), lambda i, *refs: (0, 0)),
             pl.BlockSpec((s,), lambda i, *refs: (0,)),
             pl.BlockSpec((s,), lambda i, *refs: (0,)),
+            pl.BlockSpec((s,), lambda i, *refs: (0,)),
         ],
         out_specs=out_specs,
         scratch_shapes=[pltpu.VMEM((b, rec), jnp.int32)],
@@ -130,7 +141,7 @@ def slot_extract_pallas(packed: jnp.ndarray, jw: jnp.ndarray,
       jnp.asarray(idx, jnp.int32), packed,
       jnp.asarray(coeffs, jnp.float32), jnp.asarray(lo, jnp.float32),
       jnp.asarray(hi, jnp.float32), jnp.asarray(is_count, jnp.float32),
-      jnp.asarray(gate, jnp.float32))
+      jnp.asarray(gate, jnp.float32), jnp.asarray(weights, jnp.float32))
     return tuple(out) if return_cols else (out[0], None)
 
 
@@ -155,7 +166,8 @@ IDX_TILE = 512
 
 
 def _slot_extract_stream_kernel(beff_ref, slab_ref, idx_ref, coeffs_ref,
-                                lo_ref, hi_ref, isc_ref, gate_ref, stats_ref,
+                                lo_ref, hi_ref, isc_ref, gate_ref, wts_ref,
+                                stats_ref,
                                 *, num_cols: int, budget: int, row_tile: int):
     w = pl.program_id(0)
     t = pl.program_id(1)
@@ -170,32 +182,38 @@ def _slot_extract_stream_kernel(beff_ref, slab_ref, idx_ref, coeffs_ref,
                             lo_ref[...], hi_ref[...])         # (S, T)
     x = jnp.where(isc_ref[...][:, None] > 0.0, p, x)
 
-    # membership weight: how many valid window positions land on each tile
-    # row (0/1 in practice — window rows are distinct — but multiplicity is
-    # handled exactly either way)
+    # per-slot membership weight: how many of *slot s's* valid window
+    # positions (the first ceil(weight_s·b_eff), fairness-capped) land on
+    # each tile row.  Position validity (S, bt) × membership (bt, T) is a
+    # small matmul per idx sub-block; every operand is 0/1 so the f32
+    # accumulation is exact (weights of 1 reproduce the unweighted round
+    # bit-for-bit).
     base = t * row_tile
     beff = beff_ref[w]
+    bs = jnp.minimum(jnp.ceil(wts_ref[...] * beff.astype(jnp.float32)
+                              ).astype(jnp.int32), beff)      # (S,)
     row_ids = jax.lax.broadcasted_iota(jnp.int32, (1, row_tile), 1) + base
 
     bt = min(budget, IDX_TILE)
+    n_slots = bs.shape[0]
 
     def fold(i, acc):
         # idx_ref is (1, B//bt, bt): sub-block i on the sublane dim
         sl = pl.load(idx_ref, (pl.ds(0, 1), pl.ds(i, 1), slice(None)))
         k = jax.lax.broadcasted_iota(jnp.int32, (1, bt), 1) + i * bt
-        valid = (k < beff).astype(jnp.float32)                # (1, bt)
-        mem = (sl.reshape(bt, 1) == row_ids).astype(jnp.float32)
-        mem = mem * valid.reshape(bt, 1)                      # (bt, T)
-        return acc + jnp.sum(mem, axis=0, keepdims=True)      # (1, T)
+        valid_s = (k < bs[:, None]).astype(jnp.float32)       # (S, bt)
+        mem = (sl.reshape(bt, 1) == row_ids).astype(jnp.float32)  # (bt, T)
+        return acc + jnp.dot(valid_s, mem,
+                             preferred_element_type=jnp.float32)  # (S, T)
 
     weight = jax.lax.fori_loop(0, budget // bt, fold,
-                               jnp.zeros((1, row_tile), jnp.float32))[0]
+                               jnp.zeros((n_slots, row_tile), jnp.float32))
 
     gate = gate_ref[...]
-    xw = x * (weight[None, :] * gate[:, None])                # (S, T)
-    pw = p * (weight[None, :] * gate[:, None])
+    xw = x * (weight * gate[:, None])                         # (S, T)
+    pw = p * (weight * gate[:, None])
     stats_ref[0] += jnp.stack([
-        jnp.broadcast_to(jnp.sum(weight), (x.shape[0],)),
+        jnp.sum(weight, -1),
         jnp.sum(xw, -1), jnp.sum(x * xw, -1), jnp.sum(pw, -1)], axis=-1)
 
 
@@ -203,13 +221,15 @@ def _slot_extract_stream_kernel(beff_ref, slab_ref, idx_ref, coeffs_ref,
                                              "interpret"))
 def slot_extract_stream_pallas(slab: jnp.ndarray, idx: jnp.ndarray,
                                b_eff: jnp.ndarray, coeffs, lo, hi, is_count,
-                               gate, num_cols: int, row_tile: int = 256,
+                               gate, weights, num_cols: int,
+                               row_tile: int = 256,
                                interpret: bool = False) -> jnp.ndarray:
     """Slab-streaming fused round extraction.
 
     slab (W, R, rec) uint8 (worker w's chunk rows at slab[w], zero-padded),
     idx (W, B) window rows, b_eff (W,) budgets, coeffs/lo/hi (S, C) f32,
-    is_count/gate (S,) f32 -> stats (W, S, 4) f32 ``(m, Σx, Σx², Σp)``.
+    is_count/gate/weights (S,) f32 -> stats (W, S, 4) f32
+    ``(m, Σx, Σx², Σp)``; ``weights`` are the per-slot fairness shares.
 
     Rows ``>= b_eff[w]`` of the window and slab rows outside the window
     contribute nothing; padded slab rows are never selected because window
@@ -236,6 +256,7 @@ def slot_extract_stream_pallas(slab: jnp.ndarray, idx: jnp.ndarray,
             pl.BlockSpec((s, num_cols), lambda i, t, *refs: (0, 0)),
             pl.BlockSpec((s,), lambda i, t, *refs: (0,)),
             pl.BlockSpec((s,), lambda i, t, *refs: (0,)),
+            pl.BlockSpec((s,), lambda i, t, *refs: (0,)),
         ],
         out_specs=pl.BlockSpec((1, s, 4), lambda i, t, *refs: (i, 0, 0)),
     )
@@ -248,4 +269,4 @@ def slot_extract_stream_pallas(slab: jnp.ndarray, idx: jnp.ndarray,
     )(jnp.asarray(b_eff, jnp.int32), slab, idx3,
       jnp.asarray(coeffs, jnp.float32), jnp.asarray(lo, jnp.float32),
       jnp.asarray(hi, jnp.float32), jnp.asarray(is_count, jnp.float32),
-      jnp.asarray(gate, jnp.float32))
+      jnp.asarray(gate, jnp.float32), jnp.asarray(weights, jnp.float32))

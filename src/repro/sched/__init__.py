@@ -1,0 +1,35 @@
+"""SLO-aware workload scheduling (admission, fairness, claim ordering).
+
+This package sits between incoming queries and the engine (see
+``repro.serve.ola_server``): :class:`QuerySLO` describes what a query needs,
+:class:`AdmissionController` triages admit/queue/shed against the Eq. (4)
+cost model, :class:`FairnessPolicy` divides each round's evaluation budget
+across resident slots by weighted max-min, and
+:func:`variance_claim_order` reorders the scan's unclaimed chunk tail so
+high-uncertainty work is claimed first.  :class:`WorkloadScheduler` bundles
+the policies; a :data:`NEUTRAL` configuration reproduces the unscheduled
+server bit-for-bit.
+"""
+
+from repro.sched.admission import (
+    ADMIT,
+    QUEUE,
+    SHED,
+    AdmissionController,
+    AdmissionDecision,
+    ServerLoad,
+    scan_tuples_per_s,
+)
+from repro.sched.claims import slot_chunk_variances, variance_claim_order
+from repro.sched.fairness import FairnessPolicy, max_min_weights
+from repro.sched.scheduler import NEUTRAL, SchedulerConfig, WorkloadScheduler
+from repro.sched.slo import NO_SLO, PRIORITY_WEIGHTS, QuerySLO
+
+__all__ = [
+    "ADMIT", "QUEUE", "SHED",
+    "AdmissionController", "AdmissionDecision", "ServerLoad",
+    "scan_tuples_per_s", "slot_chunk_variances", "variance_claim_order",
+    "FairnessPolicy", "max_min_weights",
+    "NEUTRAL", "SchedulerConfig", "WorkloadScheduler",
+    "NO_SLO", "PRIORITY_WEIGHTS", "QuerySLO",
+]

@@ -1,0 +1,149 @@
+"""SLO-feasibility admission control for the workload server.
+
+PF-OLA frames parallel online aggregation as resource arbitration: a new
+query should only hold a scan slot if the resources it will consume can
+plausibly deliver its target.  The :class:`AdmissionController` makes that
+call per submitted query, from the same Eq. (4) cost terms ``select_plan``
+uses (measured IO/CPU rates when a calibration exists, modeled constants
+otherwise):
+
+* **admit** — a slot is free and the predicted finish lands inside the
+  deadline;
+* **queue** — no slot right now (or higher-priority work is ahead) but the
+  deadline is still reachable once one frees;
+* **shed** — the deadline is provably hopeless even under the optimistic
+  prediction; the server answers immediately from the synopsis (flagged
+  best-effort) instead of wasting scan rounds on it.
+
+The service-time prediction is deliberately coarse — a CLT extrapolation
+``err ∝ 1/√m`` from the synopsis seed when one exists, a full-pass bound
+when not — because its job is triage, not simulation.  Queries without a
+deadline are never shed: the controller degrades to today's admit-or-queue
+behavior, which is what the scheduler parity gate pins down.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+ADMIT, QUEUE, SHED = "admitted", "queued", "shed"
+
+
+def eq4_cost_terms(store, config, rates=None) -> tuple:
+    """The two Eq. (4) cost terms for one full pass over ``store`` —
+    ``(T_io, T_cpu)`` modeled seconds — on measured rates when available
+    (worker-count and codec-cost rescaled), modeled constants otherwise.
+    Single source of truth shared by ``select_plan`` (plan choice) and the
+    admission controller (feasibility): both must price the scan on the
+    same model, or a query could be admitted under one cost regime and
+    planned under another."""
+    total_bytes = float(store.chunk_sizes.sum()) * store.codec.record_bytes
+    total_tuples = float(store.num_tuples)
+    if rates is not None:
+        t_io = total_bytes / rates.io_bytes_per_sec
+        # the measured tuple rate is aggregate over the calibration run's
+        # worker count; extraction scales with workers, reads do not
+        cpu_rate = rates.cpu_tuples_per_sec * config.num_workers / rates.workers
+        # tuples/s is codec-relative (ASCII parse vs near-free binary): when
+        # the calibration recorded its extraction cost, rescale for the
+        # serving store's codec instead of misclassifying it
+        if rates.cost_per_tuple > 0:
+            cpu_rate *= (rates.cost_per_tuple
+                         / max(store.codec.extract_cost_per_tuple(), 1e-12))
+        t_cpu = total_tuples / cpu_rate
+    else:
+        t_io = total_bytes / config.io_bytes_per_sec
+        t_cpu = (total_tuples * store.codec.extract_cost_per_tuple()
+                 / config.cpu_tuple_ops_per_sec / config.num_workers)
+    return t_io, t_cpu
+
+
+def scan_tuples_per_s(store, config, rates=None) -> float:
+    """Aggregate scan throughput (tuples/modeled-second) for a full pass —
+    the Eq. (4) overlapped-pipeline rate ``total / max(T_io, T_cpu)``.  A
+    slot riding the shared scan accumulates sample at (up to) this rate;
+    under fairness contention its share scales by its weight."""
+    t_io, t_cpu = eq4_cost_terms(store, config, rates)
+    return float(store.num_tuples) / max(t_io, t_cpu, 1e-12)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServerLoad:
+    """Snapshot of the server at one admission attempt."""
+
+    now: float                      # modeled server clock
+    free_slots: int
+    queue_ahead: int                # higher-priority/earlier queries waiting
+    scan_rate: float                # tuples/modeled-second (see above)
+    total_tuples: int
+    mean_service_s: Optional[float] = None   # completed-query history
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionDecision:
+    action: str                     # ADMIT | QUEUE | SHED
+    predicted_service_s: float
+    predicted_finish_t: float       # modeled-clock completion estimate
+    reason: str
+
+
+class AdmissionController:
+    """Feasibility triage (see module docstring).
+
+    ``pessimism`` scales the service prediction (>1 sheds earlier, <1
+    later); ``shed_enabled=False`` turns every would-be shed into a queue —
+    useful when callers prefer late answers over best-effort ones.
+    """
+
+    def __init__(self, shed_enabled: bool = True, pessimism: float = 1.0):
+        self.shed_enabled = bool(shed_enabled)
+        self.pessimism = float(pessimism)
+
+    @staticmethod
+    def required_tuples(seed_m: int, seed_err: float, epsilon: float,
+                        total_tuples: int) -> float:
+        """Additional sample the query still needs, by CLT extrapolation:
+        the error ratio shrinks ~1/√m, so hitting ε from (m₀, err₀) takes
+        ``m₀·(err₀/ε)²`` total tuples.  With no seed (or a degenerate one)
+        the bound is a full pass — the honest worst case."""
+        if (seed_m > 0 and math.isfinite(seed_err) and seed_err > 0
+                and epsilon > 0):
+            if seed_err <= epsilon:
+                return 0.0
+            m_target = seed_m * (seed_err / epsilon) ** 2
+            return float(min(total_tuples, m_target) - seed_m)
+        return float(total_tuples)
+
+    def decide(self, *, arrival_t: float, slo, epsilon: float,
+               load: ServerLoad, seed_m: int = 0,
+               seed_err: float = math.inf) -> AdmissionDecision:
+        """One admission call.  ``seed_m``/``seed_err`` describe the best
+        synopsis-seeded answer currently available for the query (0/inf when
+        the synopsis cannot serve it)."""
+        free = load.free_slots > 0 and load.queue_ahead == 0
+        need = self.required_tuples(seed_m, seed_err, epsilon,
+                                    load.total_tuples)
+        service = self.pessimism * need / max(load.scan_rate, 1e-12)
+        if free:
+            wait = 0.0
+        else:
+            # queue model: everyone ahead (plus the current occupant batch)
+            # holds a slot for about one observed mean service time; without
+            # history, assume they look like this query
+            per = load.mean_service_s if load.mean_service_s else service
+            wait = (load.queue_ahead + 1) * per
+        finish = max(load.now, arrival_t) + wait + service
+
+        if not slo.has_deadline:
+            action = ADMIT if free else QUEUE
+            return AdmissionDecision(action, service, finish, "no deadline")
+        deadline_t = arrival_t + slo.deadline_s
+        if finish > deadline_t and self.shed_enabled:
+            return AdmissionDecision(
+                SHED, service, finish,
+                f"predicted finish {finish:.3g}s past deadline "
+                f"{deadline_t:.3g}s")
+        action = ADMIT if free else QUEUE
+        return AdmissionDecision(action, service, finish, "deadline feasible")

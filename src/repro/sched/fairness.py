@@ -1,0 +1,80 @@
+"""Weighted max-min fairness over per-slot round budgets.
+
+Each engine round extracts up to ``b_eff`` tuples per worker, and every
+active slot may *count* (evaluate into its statistics) up to the full window
+— one "budget unit" per slot.  When the deployment caps the per-round
+evaluation work (``slot_capacity`` units — the CPU/VPU can only afford so
+many slot·tuple evaluations per round), the round budget must be divided.
+
+:func:`max_min_weights` is the classic weighted water-filling: every active
+slot demands 1.0 unit; shares grow proportionally to the slots' priority
+weights until a slot's demand is satisfied (share capped at 1.0), and the
+freed capacity is redistributed over the rest.  Properties (unit-tested):
+
+* no contention (``capacity >= active``) → every share is exactly 1.0, so
+  the engine round is bit-identical to the unscheduled server;
+* equal weights under contention → equal shares ``capacity / active``;
+* a slot never gets more than 1.0 or (under contention) less than its
+  weight-proportional floor.
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+
+def max_min_weights(priority: np.ndarray, active: np.ndarray,
+                    capacity: float) -> np.ndarray:
+    """Per-slot fairness shares in ``(0, 1]``.
+
+    ``priority (S,)`` positive weights, ``active (S,)`` bool, ``capacity``
+    total units across active slots (``inf`` = uncontended).  Inactive slots
+    get share 1.0 (they are gated out of the round by ``SlotTable.active``
+    anyway; 1.0 keeps the table write a no-op when nothing is resident).
+    """
+    priority = np.asarray(priority, np.float64)
+    active = np.asarray(active, bool)
+    s = priority.shape[0]
+    out = np.ones(s, np.float64)
+    idx = np.flatnonzero(active)
+    n_act = len(idx)
+    if n_act == 0 or capacity >= n_act:
+        return out
+    if not np.all(priority[idx] > 0):
+        raise ValueError("priority weights must be positive")
+    cap = max(float(capacity), 1e-9)
+    w = priority[idx].copy()
+    share = np.zeros(n_act, np.float64)
+    remaining = np.ones(n_act, bool)
+    # water-fill: raise the level λ until Σ min(1, λ·w_i) == capacity.
+    # Each pass either saturates at least one slot (≤ S passes) or solves
+    # the linear remainder exactly.
+    while cap > 1e-12 and remaining.any():
+        w_rem = w[remaining]
+        lam = cap / w_rem.sum()
+        grant = lam * w_rem
+        if np.all(grant <= 1.0 + 1e-12):
+            share[remaining] += np.minimum(grant, 1.0)
+            break
+        # saturate the slots that would overflow, recurse on the rest
+        sat = np.zeros(n_act, bool)
+        sat[np.flatnonzero(remaining)[grant > 1.0]] = True
+        share[sat] = 1.0
+        cap -= float(sat.sum())
+        remaining &= ~sat
+    out[idx] = np.clip(share, 1e-6, 1.0)  # every active slot makes progress
+    return out
+
+
+class FairnessPolicy:
+    """Bundles the capacity knob with the water-filling rule."""
+
+    def __init__(self, slot_capacity: float = math.inf):
+        if not slot_capacity > 0:
+            raise ValueError(f"slot_capacity must be positive: {slot_capacity}")
+        self.slot_capacity = float(slot_capacity)
+
+    def weights(self, priority: np.ndarray, active: np.ndarray) -> np.ndarray:
+        return max_min_weights(priority, active, self.slot_capacity)

@@ -1,0 +1,110 @@
+"""The workload scheduler: SLO admission + fairness + claim ordering.
+
+:class:`WorkloadScheduler` is the policy bundle the
+:class:`~repro.serve.ola_server.OLAWorkloadServer` consults; it owns no
+engine state.  Division of labor per decision point:
+
+* **intake** (``queue_key``): ready queries are considered in priority
+  order (weight desc, then arrival, then qid) instead of pure FIFO;
+* **admission** (``admission.decide``): admit / queue / shed against the
+  query's :class:`~repro.sched.slo.QuerySLO`, using the Eq. (4) cost model;
+* **per round** (``round_weights``): weighted max-min fairness shares over
+  the resident slots, written into the slot table's ``weight`` column —
+  under ``slot_capacity`` contention, high-priority slots keep more of each
+  round's evaluation budget;
+* **per round** (``claim_order``): variance-guided permutation of the
+  schedule's unclaimed tail (see ``repro.sched.claims``).
+
+The **neutral** configuration — infinite capacity, ``claim_policy=
+"schedule"``, FIFO queue, no SLOs — reproduces the unscheduled server
+round-for-round, bit-exactly; ``tests/test_sched.py`` gates that.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import numpy as np
+
+from repro.sched.admission import AdmissionController
+from repro.sched.claims import variance_claim_order
+from repro.sched.fairness import FairnessPolicy
+from repro.sched.slo import NO_SLO, PRIORITY_WEIGHTS, QuerySLO
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    # per-round slot-budget units across resident slots (inf = uncontended;
+    # e.g. 2.0 = the deployment can afford two full slot evaluations per
+    # round and the fairness policy divides them)
+    slot_capacity: float = math.inf
+    claim_policy: str = "variance"      # "schedule" (committed order) | "variance"
+    queue_policy: str = "priority"      # "fifo" | "priority"
+    shed_enabled: bool = True
+    # returns the best available estimate at the deadline instead of letting
+    # an admitted query overstay its slot
+    deadline_enforcement: bool = True
+    admission_pessimism: float = 1.0
+
+    def __post_init__(self):
+        assert self.claim_policy in ("schedule", "variance"), self.claim_policy
+        assert self.queue_policy in ("fifo", "priority"), self.queue_policy
+
+
+#: Neutral configuration for parity testing: scheduling machinery engaged,
+#: every policy pinned to the unscheduled server's behavior.
+NEUTRAL = SchedulerConfig(slot_capacity=math.inf, claim_policy="schedule",
+                          queue_policy="fifo", shed_enabled=False,
+                          deadline_enforcement=False)
+
+
+class WorkloadScheduler:
+    def __init__(self, config: SchedulerConfig = SchedulerConfig()):
+        self.config = config
+        self.fairness = FairnessPolicy(config.slot_capacity)
+        self.admission = AdmissionController(
+            shed_enabled=config.shed_enabled,
+            pessimism=config.admission_pessimism)
+
+    # ------------------------------------------------------------- intake ----
+    def queue_key(self, wq) -> tuple:
+        """Sort key for the ready queue (ascending)."""
+        if self.config.queue_policy == "fifo":
+            return (wq.arrival_t, wq.qid)
+        slo = wq.slo or NO_SLO
+        return (-PRIORITY_WEIGHTS[slo.priority], wq.arrival_t, wq.qid)
+
+    # ---------------------------------------------------------- per round ----
+    def round_weights(self, slot_slos: list, active: np.ndarray) -> np.ndarray:
+        """Fairness shares (S,) f32 for the slot table's weight column.
+        ``slot_slos[s]`` is the resident query's SLO (or None)."""
+        prio = np.asarray([
+            PRIORITY_WEIGHTS[(slo or NO_SLO).priority] for slo in slot_slos],
+            np.float64)
+        return self.fairness.weights(prio, active).astype(np.float32)
+
+    def claim_order(self, state, chunk_sizes: np.ndarray,
+                    active: Optional[np.ndarray] = None,
+                    ) -> Optional[np.ndarray]:
+        if self.config.claim_policy != "variance":
+            return None
+        return variance_claim_order(state, chunk_sizes, active)
+
+    # ---------------------------------------------------------------- SLO ----
+    @staticmethod
+    def effective_epsilon(query, slo: Optional[QuerySLO],
+                          seed_estimate: Optional[float]) -> float:
+        """Translate an absolute half-width target into the engine's relative
+        ε stop condition using the synopsis magnitude estimate; without one the
+        query's own ε stands (the absolute target is then checked only at
+        completion, via :meth:`QuerySLO.met`)."""
+        eps = float(query.epsilon)
+        if slo is None or not math.isfinite(slo.target_halfwidth):
+            return eps
+        if seed_estimate is None or not math.isfinite(seed_estimate) \
+                or abs(seed_estimate) < 1e-12:
+            return eps
+        # err ratio = (hi-lo)/(2|est|) = halfwidth/|est|
+        return float(min(eps, slo.target_halfwidth / abs(seed_estimate)))

@@ -54,6 +54,14 @@ from repro.core.queries import (
 )
 from repro.core.synopsis import BiLevelSynopsis
 from repro.core import estimators as est
+from repro.sched.admission import (
+    SHED,
+    ServerLoad,
+    eq4_cost_terms,
+    scan_tuples_per_s,
+)
+from repro.sched.scheduler import SchedulerConfig, WorkloadScheduler
+from repro.sched.slo import NO_SLO, QuerySLO
 
 
 @dataclasses.dataclass(frozen=True)
@@ -157,26 +165,11 @@ def select_plan(store, config: EngineConfig, query: Query,
     With ``rates`` (bench-measured, see :func:`load_measured_rates`) the two
     terms use the machine's *actual* read bandwidth and round-step extraction
     throughput instead of the modeled constants — the measured analogue of
-    the paper's testbed calibration.
+    the paper's testbed calibration.  The terms come from
+    :func:`repro.sched.admission.eq4_cost_terms` — the same pricing the
+    admission controller judges SLO feasibility with.
     """
-    total_bytes = float(store.chunk_sizes.sum()) * store.codec.record_bytes
-    if rates is not None:
-        t_io = total_bytes / rates.io_bytes_per_sec
-        # the measured tuple rate is aggregate over the calibration run's
-        # worker count; extraction scales with workers, reads do not
-        cpu_rate = (rates.cpu_tuples_per_sec
-                    * config.num_workers / rates.workers)
-        # tuples/s is codec-relative (ASCII parse vs near-free binary): when
-        # the calibration recorded its extraction cost, rescale for the
-        # serving store's codec instead of misclassifying it
-        if rates.cost_per_tuple > 0:
-            cpu_rate *= (rates.cost_per_tuple
-                         / max(store.codec.extract_cost_per_tuple(), 1e-12))
-        t_cpu = float(store.num_tuples) / cpu_rate
-    else:
-        t_io = total_bytes / config.io_bytes_per_sec
-        t_cpu = (float(store.num_tuples) * store.codec.extract_cost_per_tuple()
-                 / config.cpu_tuple_ops_per_sec / config.num_workers)
+    t_io, t_cpu = eq4_cost_terms(store, config, rates)
     if query.epsilon <= 0.0:
         return "chunk_level"
     ratio = t_cpu / max(t_io, 1e-12)
@@ -196,6 +189,8 @@ class WorkloadQuery:
     arrival_t: float = 0.0          # modeled seconds on the server clock
     plan: Optional[str] = None      # None -> cost-model selector
     row: Optional[dict] = None      # slot row encoded (and validated) at submit
+    slo: Optional[QuerySLO] = None  # service-level objective (scheduler)
+    queued: bool = False            # waited >= one admission pass for a slot
 
 
 @dataclasses.dataclass
@@ -217,10 +212,21 @@ class WorkloadResult:
     from_synopsis: bool = False     # answered at admission, zero scan rounds
     unserved: bool = False          # scan exhausted before the slot saw any
                                     # tuple (no synopsis seed): estimate is NaN
+    # scheduler outcome: "admitted" (straight into a slot), "queued" (waited
+    # for one), or "shed" (never held a slot — answered best-effort from the
+    # synopsis, or unserved).  Lets benchmarks separate scan-served answers
+    # from degraded ones.
+    sched_outcome: str = "admitted"
+    queue_wait: float = 0.0         # t_admit - t_submit (slot wait, modeled s)
+    slo_met: Optional[bool] = None  # None when the query carried no SLO
 
     @property
     def latency(self) -> float:
         return self.t_done - self.t_submit
+
+    @property
+    def halfwidth(self) -> float:
+        return (self.hi - self.lo) / 2.0
 
 
 class OLAWorkloadServer:
@@ -239,7 +245,8 @@ class OLAWorkloadServer:
                  schedule: Optional[np.ndarray] = None,
                  mesh=None, engine=None,
                  measured_rates: Optional[MeasuredRates] = None,
-                 rates_path: Optional[str] = None):
+                 rates_path: Optional[str] = None,
+                 scheduler=None):
         """``engine`` may be a pre-built :class:`SlotOLAEngine` or
         :class:`~repro.core.engine_spmd.SlotSPMDEngine` (the server only uses
         the shared round-step protocol); with ``mesh`` and no ``engine`` a
@@ -247,6 +254,15 @@ class OLAWorkloadServer:
         ``rates_path`` benchmark file, see :func:`load_measured_rates`) feeds
         the Eq. (4) plan selector bench-measured IO/CPU rates; the modeled
         :class:`EngineConfig` constants stay the fallback.
+
+        ``scheduler`` — a :class:`~repro.sched.WorkloadScheduler` (or a
+        :class:`~repro.sched.SchedulerConfig`, wrapped automatically) —
+        turns on SLO-aware serving: priority-ordered admission, feasibility
+        shedding, weighted max-min fairness over the round budget, deadline
+        enforcement, and variance-guided claim ordering.  ``None`` (default)
+        keeps the historic admit-or-FIFO-queue behavior; the *neutral*
+        scheduler configuration (``repro.sched.NEUTRAL``) reproduces it
+        bit-exactly (gated in tests/test_sched.py).
         """
         if engine is not None:
             if engine.store is not store:
@@ -301,6 +317,15 @@ class OLAWorkloadServer:
         self.idle_offset = 0.0
         self.truncated = False
         self._next_qid = 0
+        if isinstance(scheduler, SchedulerConfig):
+            scheduler = WorkloadScheduler(scheduler)
+        self.scheduler: Optional[WorkloadScheduler] = scheduler
+        self.shed_count = 0
+        self._service_times: list[float] = []   # scan service per retirement
+        self._preview_cache: dict[int, tuple] = {}  # per intake pass, by qid
+        self._cur_weights = np.ones(max_slots, np.float32)
+        self._scan_rate = scan_tuples_per_s(store, self.config,
+                                            rates=self.rates)
 
     def close(self) -> None:
         """Release engine resources (the stream-residency prefetcher's
@@ -327,9 +352,13 @@ class OLAWorkloadServer:
 
     # ------------------------------------------------------------ intake ----
     def submit(self, query: Query, arrival_t: Optional[float] = None,
-               plan: Optional[str] = None) -> int:
+               plan: Optional[str] = None,
+               slo: Optional[QuerySLO] = None) -> int:
         """Enqueue a query; returns its qid.  ``arrival_t`` defaults to the
-        current modeled time (an online submission).
+        current modeled time (an online submission).  ``slo`` attaches a
+        service-level objective (deadline / CI half-width target / priority
+        class) — it only takes effect when the server was built with a
+        ``scheduler``.
 
         Raises at submit time (not mid-scan at admission) when the query is
         outside the slot-encodable linear+range form, the plan is unknown,
@@ -351,7 +380,7 @@ class OLAWorkloadServer:
         self._next_qid += 1
         at = self.t_model if arrival_t is None else float(arrival_t)
         self.queue.append(WorkloadQuery(qid=qid, query=query, arrival_t=at,
-                                        plan=plan, row=row))
+                                        plan=plan, row=row, slo=slo))
         self.queue.sort(key=lambda wq: (wq.arrival_t, wq.qid))
         return qid
 
@@ -368,16 +397,137 @@ class OLAWorkloadServer:
             return
         variances = self.synopsis.within_variances(self.state)
         self.synopsis.update_from_engine(
-            self.state, np.asarray(self.engine.program.schedule), variances)
+            self.state, np.asarray(self.state.schedule), variances)
 
     def _admit_ready(self) -> None:
+        if self.scheduler is not None:
+            self._admit_ready_scheduled()
+            return
         now = self.t_model
         while self.queue and self.queue[0].arrival_t <= now:
             free = self._free_slots()   # recompute: seed-answered slots refree
             if not free:
+                for wq in self.queue:   # ready queries kept waiting: record it
+                    if wq.arrival_t <= now:
+                        wq.queued = True
                 break
             wq = self.queue.pop(0)
             self._admit(free[0], wq)
+
+    @staticmethod
+    def _wants_preview(wq: WorkloadQuery) -> bool:
+        slo = wq.slo or NO_SLO
+        return slo.has_deadline or np.isfinite(slo.target_halfwidth)
+
+    def _admit_ready_scheduled(self) -> None:
+        """Scheduler intake: ready queries are considered in queue-policy
+        order; each is admitted, left queued, or shed per the admission
+        controller's SLO-feasibility call."""
+        sched = self.scheduler
+        now = self.t_model
+        ready = [wq for wq in self.queue if wq.arrival_t <= now]
+        ready.sort(key=sched.queue_key)
+        # one synopsis refresh per intake pass; per-query previews are cached
+        # for the pass (reused by feasibility, shedding, and _admit's
+        # effective-ε translation) instead of re-absorbing the extraction
+        # cache for every waiting deadline query on every round
+        self._preview_cache = {}
+        if self.synopsis is not None and any(map(self._wants_preview, ready)):
+            self._refresh_synopsis()
+        ahead = 0                       # still-queued queries ahead of this one
+        for wq in ready:
+            free = self._free_slots()   # recompute: seed-answered slots refree
+            decision = self._decide_admission(wq, len(free), ahead)
+            if decision.action == SHED:
+                self.queue.remove(wq)
+                self._shed(wq)
+            elif free:
+                self.queue.remove(wq)
+                self._admit(free[0], wq)
+            else:
+                wq.queued = True
+                ahead += 1
+
+    def _cached_preview(self, wq: WorkloadQuery) -> tuple:
+        out = self._preview_cache.get(wq.qid)
+        if out is None:
+            out = self._seed_answer(wq.query)
+            self._preview_cache[wq.qid] = out
+        return out
+
+    def _decide_admission(self, wq: WorkloadQuery, n_free: int, ahead: int):
+        slo = wq.slo or NO_SLO
+        seed_m, seed_err, seed_est = 0, float("inf"), None
+        if self._wants_preview(wq):     # feasibility needs the seed preview
+            seed_m, seed_est, _, _, seed_err = self._cached_preview(wq)
+        st = self._service_times
+        load = ServerLoad(
+            now=self.t_model, free_slots=n_free, queue_ahead=ahead,
+            scan_rate=self._scan_rate,
+            total_tuples=int(self.store.num_tuples),
+            mean_service_s=(sum(st) / len(st)) if st else None)
+        # feasibility must be judged against the ε the slot will actually
+        # run at — a finite target_halfwidth tightens it (same translation
+        # _admit applies to the slot row)
+        eps_eff = self.scheduler.effective_epsilon(wq.query, wq.slo, seed_est)
+        return self.scheduler.admission.decide(
+            arrival_t=wq.arrival_t, slo=slo, epsilon=eps_eff,
+            load=load, seed_m=seed_m, seed_err=seed_err)
+
+    def _seed_answer(self, query: Query) -> tuple:
+        """Best synopsis-only answer available right now: ``(m, estimate,
+        lo, hi, err)`` — ``(0, nan, nan, nan, inf)`` when the synopsis
+        cannot serve the query.  Assumes the caller refreshed the synopsis
+        (the scheduled intake pass does, once).  Single construction shared
+        by admission feasibility, the effective-ε translation, and
+        shedding."""
+        if self.synopsis is None:
+            return 0, float("nan"), float("nan"), float("nan"), float("inf")
+        seed = self.synopsis.seed_slot(query)
+        if seed is None or int(seed["m"].sum()) == 0:
+            return 0, float("nan"), float("nan"), float("nan"), float("inf")
+        stats_row = self.state.stats._replace(
+            m=jnp.asarray(seed["m"], jnp.int32),
+            ysum=jnp.asarray(seed["ysum"])[None],
+            ysq=jnp.asarray(seed["ysq"])[None],
+            psum=jnp.asarray(seed["psum"])[None])
+        est_v, lo, hi, err = _answer_from_stats([query], stats_row)
+        return (int(seed["m"].sum()), float(np.asarray(est_v)[0]),
+                float(np.asarray(lo)[0]), float(np.asarray(hi)[0]),
+                float(np.asarray(err)[0]))
+
+    def _shed(self, wq: WorkloadQuery) -> None:
+        """Answer a shed query immediately from the synopsis (flagged
+        best-effort) — or flag it unserved when no seed exists.  A shed
+        query never holds a slot and never costs a scan round."""
+        now = self.t_model
+        q = wq.query
+        m_seen, estimate, lo, hi, err = self._cached_preview(wq)
+        if m_seen == 0:
+            decision = -1
+            unserved, from_syn = True, False
+        else:
+            decision = -1
+            if q.having is not None:
+                decision = int(est.having_decision(lo, hi, q.having.op,
+                                                   q.having.threshold))
+            unserved, from_syn = False, True
+        latency = now - wq.arrival_t
+        slo_met = None
+        if wq.slo is not None:
+            # a shed answer arrives instantly, so the deadline alone would
+            # always "hit" — honesty requires the best-effort estimate to
+            # also meet the query's accuracy ask (ε or a HAVING verdict)
+            accurate = (not unserved) and (err <= q.epsilon or decision != -1)
+            slo_met = accurate and wq.slo.met(latency, (hi - lo) / 2.0)
+        self.results.append(WorkloadResult(
+            qid=wq.qid, name=q.name, estimate=estimate, lo=lo, hi=hi,
+            err=err, decision=decision, plan="shed",
+            t_submit=wq.arrival_t, t_admit=now, t_done=now,
+            seeded_tuples=m_seen, tuples_seen=m_seen, rounds_resident=0,
+            from_synopsis=from_syn, unserved=unserved, sched_outcome="shed",
+            queue_wait=now - wq.arrival_t, slo_met=slo_met))
+        self.shed_count += 1
 
     def _admit(self, s: int, wq: WorkloadQuery) -> None:
         plan = wq.plan or select_plan(self.store, self.config, wq.query,
@@ -386,6 +536,15 @@ class OLAWorkloadServer:
         row["plan"] = np.int32(PLAN_CODES[plan])
         self._refresh_synopsis()
         seed = self.synopsis.seed_slot(wq.query) if self.synopsis else None
+        if (self.scheduler is not None and wq.slo is not None
+                and np.isfinite(wq.slo.target_halfwidth)):
+            # absolute CI half-width target -> effective relative ε for the
+            # slot row, anchored on the synopsis magnitude estimate (the
+            # pass-cached preview — the same one admission feasibility used)
+            _, seed_est, *_ = self._cached_preview(wq)
+            eps_eff = self.scheduler.effective_epsilon(wq.query, wq.slo,
+                                                       seed_est)
+            row["eps"] = np.float32(eps_eff)
 
         n = self.store.num_chunks
         dtype = self.state.stats.ysum.dtype
@@ -410,6 +569,12 @@ class OLAWorkloadServer:
         self.state = self.state._replace(
             stats=stats, stopped=self.state.stopped.at[s].set(False))
         self.table = slot_table_set(self.table, s, row)
+        # slot_table_set reset the row's fairness weight to 1.0 — keep the
+        # written-weights cache in sync, or _apply_scheduling could skip the
+        # next write (computed vector unchanged) and leave the new occupant
+        # running at full budget instead of its max-min share
+        self._cur_weights = self._cur_weights.copy()
+        self._cur_weights[s] = np.float32(row.get("weight", 1.0))
         self.slot_wq[s] = wq
         self.slot_admit_t[s] = self.t_model
         self.slot_admit_round[s] = self.rounds
@@ -440,14 +605,21 @@ class OLAWorkloadServer:
                 q.having.threshold))
         if e > q.epsilon and decision == -1:
             return False
+        lo_f, hi_f = float(np.asarray(lo)[0]), float(np.asarray(hi)[0])
+        slo_met = None
+        if wq.slo is not None:
+            slo_met = wq.slo.met(self.t_model - wq.arrival_t,
+                                 (hi_f - lo_f) / 2.0)
         self.results.append(WorkloadResult(
             qid=wq.qid, name=q.name, estimate=float(np.asarray(est_v)[0]),
-            lo=float(np.asarray(lo)[0]), hi=float(np.asarray(hi)[0]), err=e,
+            lo=lo_f, hi=hi_f, err=e,
             decision=decision, plan=self.slot_plan[s],
             t_submit=wq.arrival_t, t_admit=self.slot_admit_t[s],
             t_done=self.t_model, seeded_tuples=int(self.slot_seeded[s]),
             tuples_seen=int(np.asarray(self.state.stats.m[s]).sum()),
-            rounds_resident=0, from_synopsis=True))
+            rounds_resident=0, from_synopsis=True,
+            sched_outcome="queued" if wq.queued else "admitted",
+            queue_wait=self.slot_admit_t[s] - wq.arrival_t, slo_met=slo_met))
         self._release(s)
         return True
 
@@ -475,7 +647,7 @@ class OLAWorkloadServer:
             return False
         reopened = np.asarray(self.state.closed) & not_exhausted
         closed = np.asarray(self.state.closed) & ~not_exhausted
-        schedule = np.asarray(self.engine.program.schedule)
+        schedule = np.asarray(self.state.schedule)
         done_sched = closed[schedule]
         new_head = (len(schedule) if done_sched.all()
                     else int(np.argmax(~done_sched)))
@@ -491,26 +663,78 @@ class OLAWorkloadServer:
     # -------------------------------------------------------------- step ----
     def _retire_finished(self, rep, unserved: frozenset = frozenset()) -> None:
         stopped = np.asarray(self.state.stopped)
+        m_rows = np.asarray(self.state.stats.m)
         for s in range(self.max_slots):
             wq = self.slot_wq[s]
             if wq is None or not stopped[s]:
                 continue
-            bad = s in unserved
+            # a slot that never received a single tuple (no scan round, no
+            # synopsis seed — e.g. deadline-enforced before its first round
+            # after the scan became a census) has no answer: flag it
+            # unserved rather than reporting a fabricated zero
+            bad = s in unserved or int(m_rows[s].sum()) == 0
+            lo_f, hi_f = float(rep.lo[s]), float(rep.hi[s])
+            slo_met = None
+            if wq.slo is not None:
+                slo_met = wq.slo.met(self.t_model - wq.arrival_t,
+                                     float("nan") if bad
+                                     else (hi_f - lo_f) / 2.0)
             self.results.append(WorkloadResult(
                 qid=wq.qid, name=wq.query.name,
                 estimate=float("nan") if bad else float(rep.estimate[s]),
-                lo=float(rep.lo[s]),
-                hi=float(rep.hi[s]), err=float(rep.err[s]),
+                lo=lo_f,
+                hi=hi_f, err=float(rep.err[s]),
                 decision=int(rep.decided[s]), plan=self.slot_plan[s],
                 t_submit=wq.arrival_t, t_admit=self.slot_admit_t[s],
                 t_done=self.t_model, seeded_tuples=int(self.slot_seeded[s]),
                 tuples_seen=int(np.asarray(self.state.stats.m[s]).sum()),
                 rounds_resident=int(self.rounds - self.slot_admit_round[s]),
-                unserved=bad))
+                unserved=bad,
+                sched_outcome="queued" if wq.queued else "admitted",
+                queue_wait=float(self.slot_admit_t[s] - wq.arrival_t),
+                slo_met=slo_met))
+            self._service_times.append(self.t_model - self.slot_admit_t[s])
             self._release(s)
 
     def _any_active(self) -> bool:
         return any(wq is not None for wq in self.slot_wq)
+
+    def _apply_scheduling(self) -> None:
+        """Pre-round scheduler hooks: write this round's fairness weights
+        into the slot table and (claim_policy="variance") permute the
+        schedule's unclaimed tail.  Both are host-side writes the jitted
+        round takes as data — and both run *before* ``round_data``, so the
+        streaming claim prediction/prefetch follow the same order."""
+        sched = self.scheduler
+        active = np.asarray([wq is not None for wq in self.slot_wq])
+        w = sched.round_weights(
+            [wq.slo if wq is not None else None for wq in self.slot_wq],
+            active)
+        if not np.array_equal(w, self._cur_weights):
+            self.table = self.table._replace(
+                weight=jnp.asarray(w, jnp.float32))
+            self._cur_weights = w
+        order = sched.claim_order(self.state, self.store.chunk_sizes,
+                                  active=active)
+        if order is not None:
+            self.state = self.state._replace(
+                schedule=jnp.asarray(order, jnp.int32))
+
+    def _enforce_deadlines(self) -> None:
+        """Stop slots whose SLO deadline has passed: the query retires this
+        round with the best estimate available — the OLA contract is that
+        time bounds trade against accuracy, not against an answer."""
+        now = self.t_model
+        stopped = np.asarray(self.state.stopped)
+        late = [s for s in range(self.max_slots)
+                if self.slot_wq[s] is not None and not stopped[s]
+                and self.slot_wq[s].slo is not None
+                and self.slot_wq[s].slo.has_deadline
+                and now >= self.slot_wq[s].arrival_t
+                + self.slot_wq[s].slo.deadline_s]
+        if late:
+            self.state = self.state._replace(
+                stopped=self.state.stopped.at[jnp.asarray(late)].set(True))
 
     def step(self) -> bool:
         """Admit ready arrivals, run one engine round, retire finished
@@ -518,6 +742,8 @@ class OLAWorkloadServer:
         self._admit_ready()
         if not self._any_active():
             return False
+        if self.scheduler is not None:
+            self._apply_scheduling()
         b = self.engine.budget_ladder(float(self.state.budget))
         # round_data: the packed device view, or (stream residency) a slab
         # assembled from the predicted claims — which also covers top-up
@@ -528,6 +754,9 @@ class OLAWorkloadServer:
             self.state, self.table, self.engine.round_data(self.state),
             self.engine.speeds)
         self.rounds += 1
+        if (self.scheduler is not None
+                and self.scheduler.config.deadline_enforcement):
+            self._enforce_deadlines()
         self._retire_finished(rep)
         if self._any_active() and bool(rep.exhausted):
             if not self._begin_topup_pass():
@@ -585,11 +814,21 @@ class OLAWorkloadServer:
 
 
 def poisson_workload(queries: Sequence[Query], rate_per_model_s: float,
-                     seed: int = 0) -> list[tuple[Query, float]]:
+                     seed: int = 0,
+                     rng: Optional[np.random.Generator] = None,
+                     ) -> list[tuple[Query, float]]:
     """Poisson arrival process over a fixed query list (benchmark helper):
     returns ``(query, arrival_t)`` pairs with exponential inter-arrivals at
-    ``rate_per_model_s`` arrivals per modeled second."""
-    rng = np.random.default_rng(seed)
+    ``rate_per_model_s`` arrivals per modeled second.
+
+    Deterministic run-to-run: the same ``seed`` always yields the same
+    arrival times (scheduler benchmarks compare policies on identical
+    traffic).  Pass an explicit ``rng`` instead to draw from a
+    caller-owned :class:`numpy.random.Generator` stream (e.g. one shared
+    across several workload sections); ``seed`` is then ignored.
+    """
+    if rng is None:
+        rng = np.random.default_rng(seed)
     t = 0.0
     out = []
     for q in queries:

@@ -324,3 +324,78 @@ def test_stream_residency_stays_bounded():
     assert res["peak_u8"] <= budget, res
     assert res["peak_u8"] < res["packed_bytes"], res
     assert res["host_cache_chunks"] <= res["capacity"], res
+
+
+# ---------------------------------------------------------------------------
+# Adaptive prefetch lookahead (measured READ/CPU rate ratio)
+# ---------------------------------------------------------------------------
+
+class _PacedStore:
+    """Store proxy whose raw reads take a fixed wall time (slow-disk sim)."""
+
+    def __init__(self, store, read_delay_s: float):
+        self._store = store
+        self._delay = read_delay_s
+
+    def __getattr__(self, name):
+        return getattr(self._store, name)
+
+    def chunk_bytes(self, j):
+        import time
+
+        if self._delay > 0:
+            time.sleep(self._delay)
+        return self._store.chunk_bytes(j)
+
+
+def _drive_prefetcher(pf, store, rounds=6, workers=2):
+    order = np.arange(store.num_chunks)
+    for r in range(rounds):
+        ids = order[(r * workers) % store.num_chunks:][:workers]
+        if len(ids) < workers:
+            ids = order[:workers]
+        pf.assemble(ids, np.ones(workers, bool))
+
+
+def test_adaptive_lookahead_raises_on_slow_reader():
+    """A store whose READ is slow relative to the round cadence must drive
+    the adaptive lookahead above its base (the reader needs more runway),
+    while a fast store leaves it at the base.  ROADMAP PR-3 follow-on."""
+    store = _store(t=2048, chunks=12)
+    slow = SlabPrefetcher(_PacedStore(store, read_delay_s=0.05),
+                          num_workers=2, lookahead=2, adaptive=True,
+                          device_put=lambda a: a)
+    assert slow.base_lookahead == 2 and slow.max_lookahead >= 4
+    _drive_prefetcher(slow, store)
+    assert slow.lookahead > 2, (slow.lookahead, slow.read_seconds)
+    assert slow.lookahead <= slow.max_lookahead
+    # the cache is provisioned for the ceiling, so a raised lookahead never
+    # causes prefetch thrash
+    assert slow.capacity >= 2 * slow.num_workers + slow.max_lookahead
+    slow.close()
+
+    fast = SlabPrefetcher(_PacedStore(store, read_delay_s=0.0),
+                          num_workers=2, lookahead=2, adaptive=True,
+                          device_put=lambda a: a)
+    import time
+
+    order = np.arange(store.num_chunks)
+    for r in range(6):
+        ids = order[(r * 2) % store.num_chunks:][:2]
+        if len(ids) < 2:
+            ids = order[:2]
+        fast.assemble(ids, np.ones(2, bool))
+        time.sleep(0.01)        # compute dominates: reads stay hidden
+    assert fast.lookahead == 2, fast.lookahead
+    fast.close()
+
+
+def test_non_adaptive_lookahead_untouched():
+    """adaptive=False (the default) must never move the lookahead — the
+    parity configuration for existing streaming deployments."""
+    store = _store(t=2048, chunks=12)
+    pf = SlabPrefetcher(_PacedStore(store, read_delay_s=0.02), num_workers=2,
+                        lookahead=3, device_put=lambda a: a)
+    _drive_prefetcher(pf, store, rounds=4)
+    assert pf.lookahead == 3
+    pf.close()

@@ -125,3 +125,60 @@ def test_synopsis_window_consistency(setup):
         idx = np.asarray(feistel_permute(seed, jnp.asarray(pos), m))
         truth = np.asarray(codec.decode_ref(jnp.asarray(store.chunk_bytes(j))))[idx]
         np.testing.assert_allclose(ch.values, truth, rtol=1e-5)
+
+
+def test_shrink_under_pressure_mid_flight(setup):
+    """Budget pressure arriving *mid-scan* — between ``seed_slot`` (a slot
+    was just seeded from the synopsis) and the next ``update_from_engine`` —
+    must leave every surviving window a contiguous slice of its chunk's
+    keyed permutation, so the seeded slot's future extraction stays a
+    disjoint continuation (ISSUE 4 satellite)."""
+    from repro.serve.ola_server import OLAWorkloadServer
+
+    vals, store = setup
+    cfg = EngineConfig(num_workers=2, seed=21, strategy="single_pass",
+                       budget_init=32)
+    srv = OLAWorkloadServer(store, cfg, max_slots=2,
+                            synopsis_budget_tuples=1024)
+    srv.submit(Query(agg="sum", expr=Linear(COEF), epsilon=0.02,
+                     name="warm"), arrival_t=0.0)
+    for _ in range(4):                      # scan mid-flight, cache growing
+        srv.step()
+    syn = srv.synopsis
+    srv._refresh_synopsis()
+    assert syn.total_tuples > 0
+    follow = Query(agg="sum", expr=Linear(COEF), pred=Range(0, 0.0, 8e7),
+                   epsilon=0.08, name="late")
+    seed = syn.seed_slot(follow)
+    assert seed is not None and seed["m"].sum() > 0
+
+    # budget pressure arrives now, before the next absorb: the window set
+    # must shrink to the new budget with keep-the-tail semantics
+    syn.budget = max(16, syn.total_tuples // 4)
+    for _ in range(2):                      # scan continues mid-flight
+        srv.step()
+    srv._refresh_synopsis()                 # update_from_engine under pressure
+    assert syn.total_tuples <= syn.budget
+
+    checked = 0
+    codec = store.codec
+    for j, ch in syn.chunks.items():
+        if ch.count == 0:
+            continue
+        m = int(store.chunk_sizes[j])
+        sd = chunk_seed(cfg.seed, j)
+        pos = (ch.start + np.arange(ch.count)) % m
+        idx = np.asarray(feistel_permute(sd, jnp.asarray(pos), m))
+        truth = np.asarray(codec.decode_ref(
+            jnp.asarray(store.chunk_bytes(j))))[idx]
+        np.testing.assert_allclose(ch.values, truth, rtol=1e-5)
+        checked += 1
+    assert checked > 0
+
+    # the shrunk synopsis still seeds and serves the follow-up correctly
+    srv.submit(follow)
+    res = {r.name: r for r in srv.run()}
+    sel = (vals[:, 0] >= 0) & (vals[:, 0] < 8e7)
+    truth_f = float((vals @ np.asarray(COEF)) @ sel)
+    assert abs(res["late"].estimate - truth_f) / abs(truth_f) < 3 * 0.08
+    srv.close()
