@@ -22,7 +22,12 @@ records ``speedup_pallas_vs_ref: null`` with ``interpret_exempt: true``.
 The ``calibration`` block (measured aggregate extraction tuples/s of the
 production backend plus measured raw-read bytes/s) is what
 ``repro.serve.ola_server.load_measured_rates`` feeds into the Eq. (4) plan
-selector in place of the modeled constants.
+selector in place of the modeled constants.  It also records the linear fit
+of the S sweep — ``round_us(S) = round_base_us + round_slot_us · S`` — from
+which the workload scheduler derives its *measured* per-round slot capacity
+(``repro.sched.fairness.measured_slot_capacity``): the base term is the
+scan-side cost of one round, the slope the marginal cost of one
+fully-counted slot evaluation.
 
 Results land in ``BENCH_slot_kernel.json`` (and
 ``results/bench_slot_kernel.json``).
@@ -110,6 +115,25 @@ def _time_round_step(store, backend: str, s: int, b: int, iters: int):
     }
 
 
+def _round_cost_fit(entries, backend: str, b: int) -> tuple:
+    """Least-squares fit ``round_us(S) = base + slot_us·S`` over the S sweep
+    of one ``(backend, B)`` lane — the scheduler's measured-capacity input.
+    Returns ``(base_us, slot_us)``, or ``(0.0, 0.0)`` when the sweep has
+    fewer than two S points or the fit is degenerate (non-positive base or
+    slope: timing noise measured extra slots as free)."""
+    pts = sorted({(e["S"], e["us_per_round"]) for e in entries
+                  if e["backend"] == backend and e["B"] == b})
+    if len(pts) < 2:
+        return 0.0, 0.0
+    s = np.asarray([p[0] for p in pts], float)
+    us = np.asarray([p[1] for p in pts], float)
+    slot_us, base_us = np.polyfit(s, us, 1)
+    if not (np.isfinite(base_us) and np.isfinite(slot_us)
+            and base_us > 0.0 and slot_us > 0.0):
+        return 0.0, 0.0
+    return float(base_us), float(slot_us)
+
+
 def _measure_read_bw(store, iters: int = 5) -> float:
     """Raw READ bandwidth proxy: a full reduction over the packed device
     buffer (the chunks are memory-resident — the NoDB cache — so READ is
@@ -173,6 +197,7 @@ def run(fast: bool = False, smoke: bool = False) -> str:
     # calibration uses the production backend for this platform: the compiled
     # kernel on TPU, the XLA ref path elsewhere (interpret is a debug mode)
     cal_entry = pallas_bar if on_tpu and pallas_bar else ref_bar
+    base_us, slot_us = _round_cost_fit(entries, cal_entry["backend"], b_bar)
     out = {
         "platform": jax.default_backend(),
         "workers": WORKERS,
@@ -195,6 +220,10 @@ def run(fast: bool = False, smoke: bool = False) -> str:
             # extraction cost of the calibration codec: lets select_plan
             # rescale the tuple rate when serving a different codec
             "cost_per_tuple": float(store.codec.extract_cost_per_tuple()),
+            # S-sweep round-cost fit: round_us(S) = base + slot_us·S.  Feeds
+            # the scheduler's measured slot capacity; 0.0 = fit unavailable
+            "round_base_us": round(base_us, 1),
+            "round_slot_us": round(slot_us, 2),
         },
     }
     from benchmarks.common import bench_output_paths

@@ -53,7 +53,7 @@ def build_queries(num_cols: int, count: int, seed: int) -> list[Query]:
 
 
 def run_server(store, cfg, arrivals, max_slots, scheduler=None):
-    from benchmarks.common import latency_stats
+    from benchmarks.common import latency_stats, latency_stats_by_class
     from repro.data.pipeline import device_resident_bytes
 
     srv = OLAWorkloadServer(store, cfg, max_slots=max_slots,
@@ -76,8 +76,10 @@ def run_server(store, cfg, arrivals, max_slots, scheduler=None):
         "makespan": srv.t_model,
         "rounds": srv.rounds,
         "topup_passes": srv.topup_passes,
+        "preempted": srv.preempt_count,
         "answered_from_synopsis": sum(r.from_synopsis for r in results),
         **latency_stats(results),
+        "per_class": latency_stats_by_class(results),
         # peak raw-data device footprint observed between rounds (uint8
         # only).  Packed: the resident view, every round.  Stream: usually 0
         # — the slab lives only while its round runs — so the in-flight
@@ -141,13 +143,17 @@ def run_closed_loop(store, cfg, queries, slos, max_slots, concurrency,
                                and submitted == total):
             break
     results = sorted(srv.results, key=lambda r: r.qid)
+    from benchmarks.common import latency_stats_by_class
+
     out = {
         "tuples": srv.tuples_scanned,
         "makespan": srv.t_model,
         "rounds": srv.rounds,
         "completed": len(results),
         "shed": srv.shed_count,
+        "preempted": srv.preempt_count,
         **latency_stats(results),
+        "per_class": latency_stats_by_class(results),
     }
     srv.close()
     return out
@@ -160,7 +166,8 @@ def run_sched_lanes(store, cfg, queries, rate: float, max_slots: int,
     closed-loop load.  Headline: SLO-hit rate and tail latency."""
     t_full = float(store.num_tuples) / scan_tuples_per_s(store, cfg)
     slos = attach_slos(queries, t_full, seed=seed + 1)
-    sched_cfg = SchedulerConfig(slot_capacity=max(2.0, max_slots / 2))
+    sched_cfg = SchedulerConfig(slot_capacity=max(2.0, max_slots / 2),
+                                preempt=True)
 
     arrivals = poisson_workload(queries, rate_per_model_s=rate, seed=seed)
     open_items = [(q, at, slo) for (q, at), slo in zip(arrivals, slos)]
@@ -176,6 +183,42 @@ def run_sched_lanes(store, cfg, queries, rate: float, max_slots: int,
     out["closed_loop"]["scheduled"] = run_closed_loop(
         store, cfg, queries, slos, max_slots, concurrency,
         scheduler=WorkloadScheduler(sched_cfg))
+    return out
+
+
+def run_load_sweep(store, cfg, queries, max_slots: int, seed: int,
+                   multipliers=(0.5, 2.0, 8.0)) -> list:
+    """Per-class p99-vs-offered-load curves (the full lane's trend
+    artifact): the same SLO-tagged workload replayed at several open-loop
+    arrival rates — ``multiplier`` arrivals per full-scan time — scheduled
+    vs unscheduled, with per-priority-class latency/SLO stats from
+    ``latency_stats_by_class``.  Each point reuses one Poisson draw so the
+    curves differ only in time compression, not in workload composition."""
+    t_full = float(store.num_tuples) / scan_tuples_per_s(store, cfg)
+    slos = attach_slos(queries, t_full, seed=seed + 1)
+    out = []
+    for mult in multipliers:
+        rate = mult / t_full
+        arrivals = poisson_workload(queries, rate_per_model_s=rate,
+                                    seed=seed + 2)
+        items = [(q, at, slo) for (q, at), slo in zip(arrivals, slos)]
+        sched_cfg = SchedulerConfig(slot_capacity=max(2.0, max_slots / 2),
+                                    preempt=True)
+        point = {
+            "offered_load_per_scan": mult,
+            "rate_per_model_s": rate,
+            "unscheduled": run_server(store, cfg, items, max_slots),
+            "scheduled": run_server(store, cfg, items, max_slots,
+                                    scheduler=WorkloadScheduler(sched_cfg)),
+        }
+        out.append(point)
+        for kind in ("unscheduled", "scheduled"):
+            pc = point[kind]["per_class"]
+            per = "  ".join(
+                f"{cls}: p99 {st['p99_latency_s']:.5f}s hit "
+                f"{st['slo_hit_rate'] if st['slo_hit_rate'] is None else round(st['slo_hit_rate'], 3)}"
+                for cls, st in pc.items())
+            print(f"[bench_workload] load x{mult:<4g} {kind:<11s} {per}")
     return out
 
 
@@ -216,7 +259,7 @@ def run(fast: bool = False, smoke: bool = False, sched: bool = True,
     arrivals = poisson_workload(queries, rate_per_model_s=2000.0, seed=2)
 
     if sched_only:
-        return _run_sched_only(store, cfg, queries, slots)
+        return _run_sched_only(store, cfg, queries, slots, smoke=smoke)
 
     # streaming residency first (clean device-byte measurement), then packed
     server_stream = run_server(
@@ -236,6 +279,11 @@ def run(fast: bool = False, smoke: bool = False, sched: bool = True,
         sched_out = run_sched_lanes(store, cfg, queries, rate=2000.0,
                                     max_slots=slots,
                                     concurrency=max(2, slots // 2), seed=11)
+        if not smoke:
+            # per-class p99-vs-offered-load curves: full/fast lanes only —
+            # the weekly run's bench-full artifact tracks them over time
+            sched_out["load_sweep"] = run_load_sweep(
+                store, cfg, queries, max_slots=slots, seed=11)
 
     out = {
         "num_queries": nq,
@@ -300,7 +348,7 @@ def _print_sched(sched_out: dict) -> None:
                   f"shed {r['outcomes']['shed']}")
 
 
-def _run_sched_only(store, cfg, queries, slots: int) -> str:
+def _run_sched_only(store, cfg, queries, slots: int, smoke: bool = True) -> str:
     """CI scheduler smoke lane: run only the closed-loop/open-loop SLO
     harness and merge the ``sched`` section into an existing
     BENCH_workload.json (or write a fresh file when none exists)."""
@@ -309,6 +357,9 @@ def _run_sched_only(store, cfg, queries, slots: int) -> str:
     sched_out = run_sched_lanes(store, cfg, queries, rate=2000.0,
                                 max_slots=slots,
                                 concurrency=max(2, slots // 2), seed=11)
+    if not smoke:
+        sched_out["load_sweep"] = run_load_sweep(
+            store, cfg, queries, max_slots=slots, seed=11)
     for path in bench_output_paths("workload"):
         base = {}
         try:

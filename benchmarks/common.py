@@ -58,11 +58,25 @@ def latency_stats(results) -> dict:
         if results else None,
         "outcomes": {
             k: sum(r.sched_outcome == k for r in results)
-            for k in ("admitted", "queued", "shed")},
+            for k in ("admitted", "queued", "preempted", "shed")},
     }
     hits = [r.slo_met for r in results if r.slo_met is not None]
     out["slo_hit_rate"] = float(np.mean(hits)) if hits else None
     return out
+
+
+def latency_stats_by_class(results) -> dict:
+    """Per-priority-class latency percentiles + SLO-hit rate.
+
+    Groups :class:`~repro.serve.ola_server.WorkloadResult`\\ s by their
+    ``priority`` field (the SLO class) — the per-class p99-vs-offered-load
+    curves in ``bench_workload``'s full lane are built from this.  Classes
+    with no queries are simply absent.
+    """
+    by: dict = {}
+    for r in results:
+        by.setdefault(r.priority, []).append(r)
+    return {cls: latency_stats(rs) for cls, rs in sorted(by.items())}
 
 
 def datasets(fast: bool):

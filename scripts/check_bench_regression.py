@@ -1,0 +1,233 @@
+"""CI benchmark regression gate.
+
+Compares the freshly produced smoke-lane benchmark artifacts
+(``BENCH_workload.json`` / ``BENCH_slot_kernel.json`` in the working tree)
+against the *committed* baselines (read from git, default ``HEAD:<file>``)
+and fails when a headline metric regresses past its tolerance band:
+
+* ``slo_hit_rate`` fields may not drop more than 2 percentage points
+  (absolute) — the scheduler's core promise;
+* latency percentiles (``p95_latency_s``) may not grow more than 25% —
+  modeled-clock latencies are deterministic per seed, so the band absorbs
+  intentional policy shifts, not noise;
+* peak-RSS fields may not grow more than 15% — real memory, the band
+  absorbs runner-to-runner variance.
+
+Exit code 0 = within bands (skipped checks are reported but do not fail);
+1 = at least one regression.  ``--self-test`` proves the gate can fail: it
+seeds a synthetic regression (baseline ``slo_hit_rate`` bumped +5pp /
+latency shrunk) against the real fresh artifacts and exits 0 only if the
+comparator catches it.
+
+Re-baselining: benchmark results are committed at the repo root, so a PR
+that intentionally shifts a gated metric re-runs the smoke lanes locally
+(``python -m benchmarks.bench_workload --smoke --no-sched``, then
+``--sched-only``, then ``python -m benchmarks.bench_slot_kernel --smoke``)
+and commits the refreshed ``BENCH_*.json`` — the gate then compares CI's
+fresh run against the new baseline.  See README "Re-baselining benchmarks".
+
+Usage::
+
+    python scripts/check_bench_regression.py [--baseline-ref HEAD]
+        [--baseline-dir DIR] [--fresh-dir .] [--self-test]
+"""
+
+from __future__ import annotations
+
+import argparse
+import copy
+import json
+import os
+import subprocess
+import sys
+
+WORKLOAD = "BENCH_workload.json"
+KERNEL = "BENCH_slot_kernel.json"
+
+# (file, dotted path, rule, tolerance).  Rules: "abs_drop" fails when
+# fresh < baseline - tol; "rel_grow" fails when fresh > baseline * (1+tol).
+# Paths missing from the baseline are skipped (older baselines predate some
+# fields); paths present in the baseline but missing from the fresh run
+# fail — a silently dropped metric is itself a regression.
+CHECKS = [
+    (WORKLOAD, "sched.open_loop.scheduled.slo_hit_rate", "abs_drop", 0.02),
+    (WORKLOAD, "sched.closed_loop.scheduled.slo_hit_rate", "abs_drop", 0.02),
+    (WORKLOAD, "sched.closed_loop.unscheduled.slo_hit_rate", "abs_drop", 0.02),
+    (WORKLOAD, "server.p95_latency_s", "rel_grow", 0.25),
+    (WORKLOAD, "server_stream.p95_latency_s", "rel_grow", 0.25),
+    (WORKLOAD, "sched.closed_loop.scheduled.p95_latency_s", "rel_grow", 0.25),
+    (WORKLOAD, "memory.peak_host_rss_bytes", "rel_grow", 0.15),
+    (KERNEL, "memory.peak_host_rss_bytes", "rel_grow", 0.15),
+]
+
+
+def get_path(doc, dotted):
+    cur = doc
+    for part in dotted.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return None
+        cur = cur[part]
+    return cur
+
+
+def load_baseline(name, ref, baseline_dir):
+    """Baseline JSON for ``name``: from a directory when given, else from
+    git (``ref:name`` — the committed artifact, untouched by the fresh
+    benchmark run that overwrote the working tree).  None when absent."""
+    if baseline_dir is not None:
+        path = os.path.join(baseline_dir, name)
+        try:
+            with open(path) as f:
+                return json.load(f)
+        except (OSError, ValueError):
+            return None
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    try:
+        out = subprocess.run(
+            ["git", "show", f"{ref}:{name}"],
+            capture_output=True,
+            text=True,
+            check=True,
+            cwd=repo,
+        )
+        return json.loads(out.stdout)
+    except (subprocess.CalledProcessError, ValueError, OSError):
+        return None
+
+
+def compare(fresh_docs, baseline_docs, checks=CHECKS):
+    """Evaluate every check; returns (failures, lines) where ``lines`` is
+    the human-readable report and ``failures`` the failing subset."""
+    failures, lines = [], []
+    for name, path, rule, tol in checks:
+        base_doc = baseline_docs.get(name)
+        fresh_doc = fresh_docs.get(name)
+        label = f"{name}:{path}"
+        if base_doc is None:
+            lines.append(f"SKIP  {label}: no baseline")
+            continue
+        base = get_path(base_doc, path)
+        if base is None:
+            lines.append(f"SKIP  {label}: field absent in baseline")
+            continue
+        if fresh_doc is None:
+            failures.append(label)
+            lines.append(f"FAIL  {label}: fresh artifact missing")
+            continue
+        fresh = get_path(fresh_doc, path)
+        if fresh is None:
+            failures.append(label)
+            lines.append(f"FAIL  {label}: dropped from the fresh run")
+            continue
+        base, fresh = float(base), float(fresh)
+        if rule == "abs_drop":
+            ok = fresh >= base - tol
+            floor = base - tol
+            detail = f"baseline {base:.4f} fresh {fresh:.4f} (floor {floor:.4f})"
+        elif rule == "rel_grow":
+            if base <= 0:
+                lines.append(f"SKIP  {label}: non-positive baseline {base}")
+                continue
+            ceil = base * (1.0 + tol)
+            ok = fresh <= ceil
+            detail = f"baseline {base:.6g} fresh {fresh:.6g} (ceiling {ceil:.6g})"
+        else:  # pragma: no cover - spec typo guard
+            raise ValueError(f"unknown rule {rule!r}")
+        if ok:
+            lines.append(f"OK    {label}: {detail}")
+        else:
+            failures.append(label)
+            lines.append(f"FAIL  {label}: {detail}")
+    return failures, lines
+
+
+def seeded_regression(fresh_docs):
+    """Synthesize a baseline the fresh artifacts must FAIL against: every
+    gated slo_hit_rate bumped +5pp, every gated latency/RSS shrunk 40%.
+    Used by --self-test to prove the comparator has teeth."""
+    out = {}
+    for name, doc in fresh_docs.items():
+        if doc is None:
+            continue
+        doc = copy.deepcopy(doc)
+        for cname, path, rule, _tol in CHECKS:
+            if cname != name:
+                continue
+            parts = path.split(".")
+            parent = get_path(doc, ".".join(parts[:-1])) if parts[:-1] else doc
+            leaf = parts[-1]
+            if not isinstance(parent, dict) or parent.get(leaf) is None:
+                continue
+            if rule == "abs_drop":
+                parent[leaf] = float(parent[leaf]) + 0.05
+            else:
+                parent[leaf] = float(parent[leaf]) * 0.6
+        out[name] = doc
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description="benchmark regression gate")
+    ap.add_argument(
+        "--baseline-ref",
+        default="HEAD",
+        help="git ref holding the committed baselines",
+    )
+    ap.add_argument(
+        "--baseline-dir",
+        default=None,
+        help="read baselines from a directory instead of git",
+    )
+    ap.add_argument(
+        "--fresh-dir",
+        default=".",
+        help="directory holding the fresh BENCH_*.json files",
+    )
+    ap.add_argument(
+        "--self-test",
+        action="store_true",
+        help="seed a synthetic regression and require the gate to catch it",
+    )
+    args = ap.parse_args(argv)
+
+    names = sorted({c[0] for c in CHECKS})
+    fresh_docs = {}
+    for name in names:
+        try:
+            with open(os.path.join(args.fresh_dir, name)) as f:
+                fresh_docs[name] = json.load(f)
+        except (OSError, ValueError):
+            fresh_docs[name] = None
+
+    if args.self_test:
+        seeded = seeded_regression(fresh_docs)
+        if not seeded:
+            print("self-test: no fresh artifacts to seed from", file=sys.stderr)
+            return 1
+        failures, lines = compare(fresh_docs, seeded)
+        print("\n".join(lines))
+        if failures:
+            print(f"self-test OK: caught {len(failures)} seeded regression(s)")
+            return 0
+        print("self-test FAILED: gate passed a seeded regression", file=sys.stderr)
+        return 1
+
+    baseline_docs = {
+        name: load_baseline(name, args.baseline_ref, args.baseline_dir)
+        for name in names
+    }
+    failures, lines = compare(fresh_docs, baseline_docs)
+    print("\n".join(lines))
+    if failures:
+        print(
+            f"{len(failures)} benchmark regression(s); see README "
+            "'Re-baselining benchmarks' if the shift is intentional",
+            file=sys.stderr,
+        )
+        return 1
+    print("benchmarks within tolerance bands")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -784,6 +784,58 @@ def budget_ladder(config: EngineConfig, m_max: int, b: float) -> int:
     return int(2 ** int(np.ceil(np.log2(max(b, 1.0)))))
 
 
+# ---------------------------------------------------------------------------
+# Slot retire / re-admit helpers (workload serving; preemption support)
+# ---------------------------------------------------------------------------
+
+def slot_stats_snapshot(state: EngineState, s: int) -> dict:
+    """Host-side copy of slot ``s``'s sufficient-statistics row.
+
+    The dict has the same ``{m, ysum, ysq, psum}`` shape contract as
+    :meth:`~repro.core.synopsis.BiLevelSynopsis.seed_slot`, so a preempted
+    query's snapshot slots straight back into the admission seeding path
+    (:func:`slot_stats_write`) when it is re-admitted.  It is a *richer*
+    seed than the synopsis — every tuple the slot already counted, at full
+    per-chunk resolution — and it remains statistically valid because each
+    chunk's tuples were drawn as a prefix of that chunk's committed random
+    permutation, a property re-admission preserves (the scan's cursors
+    never rewind).
+    """
+    stats = state.stats
+    return dict(
+        m=np.asarray(stats.m[s]),
+        ysum=np.asarray(stats.ysum[s]),
+        ysq=np.asarray(stats.ysq[s]),
+        psum=np.asarray(stats.psum[s]),
+    )
+
+
+def slot_stats_write(stats: BiLevelStats, s: int, seed: Optional[dict],
+                     n_chunks: int) -> tuple[BiLevelStats, int]:
+    """Functional write of slot ``s``'s statistics row from a seed dict
+    (synopsis seed or preemption snapshot) — zeros when ``seed`` is None.
+    Returns ``(new_stats, seeded_tuple_count)``.  Host-side, between
+    rounds; the engine round step never mutates rows of retired slots, so
+    the write is race-free by construction."""
+    dtype = stats.ysum.dtype
+    if seed is None:
+        m_row = jnp.zeros((n_chunks,), jnp.int32)
+        zs = jnp.zeros((n_chunks,), dtype)
+        ys_row, yq_row, ps_row = zs, zs, zs
+        seeded = 0
+    else:
+        m_row = jnp.asarray(seed["m"], jnp.int32)
+        ys_row = jnp.asarray(seed["ysum"], dtype)
+        yq_row = jnp.asarray(seed["ysq"], dtype)
+        ps_row = jnp.asarray(seed["psum"], dtype)
+        seeded = int(np.asarray(seed["m"]).sum())
+    return stats._replace(
+        m=stats.m.at[s].set(m_row),
+        ysum=stats.ysum.at[s].set(ys_row),
+        ysq=stats.ysq.at[s].set(yq_row),
+        psum=stats.psum.at[s].set(ps_row)), seeded
+
+
 class _ResidencyMixin:
     """Host-side raw-data feed shared by every engine.
 

@@ -359,9 +359,15 @@ def slot_table_set(table: SlotTable, s: int, row: dict) -> SlotTable:
 
 
 def slot_table_clear(table: SlotTable, s: int) -> SlotTable:
-    """Deactivate a slot (query retired); descriptors are left in place so
-    the final round's report for the slot stays readable."""
-    return table._replace(active=table.active.at[s].set(False))
+    """Deactivate a slot (query retired, deadline-enforced, or preempted);
+    descriptors are left in place so the final round's report for the slot
+    stays readable.  The fairness weight alone is reset to 1.0 — inactive
+    slots must stay neutral (the invariant ``repro.sched.fairness``
+    documents), so a weight from a contended residence never leaks into the
+    row's next occupant between the clear and the scheduler's next
+    round-weight write."""
+    return table._replace(active=table.active.at[s].set(False),
+                          weight=table.weight.at[s].set(jnp.float32(1.0)))
 
 
 def slot_evaluate(table: SlotTable, cols: jnp.ndarray,

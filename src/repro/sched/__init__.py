@@ -1,14 +1,18 @@
-"""SLO-aware workload scheduling (admission, fairness, claim ordering).
+"""SLO-aware workload scheduling (admission, fairness, preemption, claims).
 
 This package sits between incoming queries and the engine (see
 ``repro.serve.ola_server``): :class:`QuerySLO` describes what a query needs,
-:class:`AdmissionController` triages admit/queue/shed against the Eq. (4)
-cost model, :class:`FairnessPolicy` divides each round's evaluation budget
-across resident slots by weighted max-min, and
+:class:`AdmissionController` triages admit/queue/shed — the candidate priced
+by the Eq. (4) cost model, the queue wait by the learned per-class
+service-time quantile (:class:`ServiceTimeModel`) — :class:`FairnessPolicy`
+divides each round's evaluation budget across resident slots by weighted
+max-min (capacity hand-set or derived from the benchmark calibration via
+:func:`measured_slot_capacity`), :func:`select_victim` picks the slot to
+evict when a feasible deadline would otherwise die in the queue, and
 :func:`variance_claim_order` reorders the scan's unclaimed chunk tail so
-high-uncertainty work is claimed first.  :class:`WorkloadScheduler` bundles
-the policies; a :data:`NEUTRAL` configuration reproduces the unscheduled
-server bit-for-bit.
+chunks that most reduce the far-from-target slots' uncertainty are claimed
+first.  :class:`WorkloadScheduler` bundles the policies; a :data:`NEUTRAL`
+configuration reproduces the unscheduled server bit-for-bit.
 """
 
 from repro.sched.admission import (
@@ -21,15 +25,23 @@ from repro.sched.admission import (
     scan_tuples_per_s,
 )
 from repro.sched.claims import slot_chunk_variances, variance_claim_order
-from repro.sched.fairness import FairnessPolicy, max_min_weights
+from repro.sched.fairness import (
+    FairnessPolicy,
+    max_min_weights,
+    measured_slot_capacity,
+)
+from repro.sched.preempt import select_victim
 from repro.sched.scheduler import NEUTRAL, SchedulerConfig, WorkloadScheduler
+from repro.sched.service_model import P2Quantile, ServiceTimeModel
 from repro.sched.slo import NO_SLO, PRIORITY_WEIGHTS, QuerySLO
 
 __all__ = [
     "ADMIT", "QUEUE", "SHED",
     "AdmissionController", "AdmissionDecision", "ServerLoad",
     "scan_tuples_per_s", "slot_chunk_variances", "variance_claim_order",
-    "FairnessPolicy", "max_min_weights",
+    "FairnessPolicy", "max_min_weights", "measured_slot_capacity",
+    "select_victim",
+    "P2Quantile", "ServiceTimeModel",
     "NEUTRAL", "SchedulerConfig", "WorkloadScheduler",
     "NO_SLO", "PRIORITY_WEIGHTS", "QuerySLO",
 ]

@@ -15,11 +15,19 @@ otherwise):
   prediction; the server answers immediately from the synopsis (flagged
   best-effort) instead of wasting scan rounds on it.
 
-The service-time prediction is deliberately coarse — a CLT extrapolation
-``err ∝ 1/√m`` from the synopsis seed when one exists, a full-pass bound
-when not — because its job is triage, not simulation.  Queries without a
-deadline are never shed: the controller degrades to today's admit-or-queue
-behavior, which is what the scheduler parity gate pins down.
+The *candidate's own* service prediction is deliberately coarse — a CLT
+extrapolation ``err ∝ 1/√m`` from the synopsis seed when one exists, a
+full-pass bound when not — because its job is triage, not simulation.  The
+**wait** prediction is where the learning lives: each job ahead of the
+candidate (slot occupants and queued work) is priced at its priority
+class's observed service-time quantile (default p90, via
+:class:`~repro.sched.service_model.ServiceTimeModel`), with the CLT
+full-pass bound as the cold-start prior.  Pricing the queue at a high
+quantile instead of the mean makes the shed call "will the deadline
+survive a plausibly *bad* wait" — the right default when service times are
+heavy-tailed.  Queries without a deadline are never shed: the controller
+degrades to admit-or-queue, which is what the scheduler parity gate pins
+down.
 """
 
 from __future__ import annotations
@@ -71,7 +79,16 @@ def scan_tuples_per_s(store, config, rates=None) -> float:
 
 @dataclasses.dataclass(frozen=True)
 class ServerLoad:
-    """Snapshot of the server at one admission attempt."""
+    """Snapshot of the server at one admission attempt.
+
+    ``slot_drain_s`` / ``queue_ahead_service_s`` are the service-model-
+    priced wait components (predicted seconds until a slot frees, and the
+    summed predicted service of queued work ahead of the candidate); when
+    the caller cannot price them (no scheduler, no model) they stay
+    ``None`` and :meth:`AdmissionController.decide` falls back to a
+    per-job estimate — the observed mean when history exists, the full-pass
+    bound when not.
+    """
 
     now: float                      # modeled server clock
     free_slots: int
@@ -79,6 +96,8 @@ class ServerLoad:
     scan_rate: float                # tuples/modeled-second (see above)
     total_tuples: int
     mean_service_s: Optional[float] = None   # completed-query history
+    slot_drain_s: Optional[float] = None     # model-priced occupant drain
+    queue_ahead_service_s: Optional[float] = None  # model-priced queue work
 
 
 @dataclasses.dataclass(frozen=True)
@@ -95,11 +114,17 @@ class AdmissionController:
     ``pessimism`` scales the service prediction (>1 sheds earlier, <1
     later); ``shed_enabled=False`` turns every would-be shed into a queue —
     useful when callers prefer late answers over best-effort ones.
+    ``service_model`` (a :class:`~repro.sched.service_model
+    .ServiceTimeModel`) prices per-job waits at the candidate class's
+    observed quantile; without one the controller uses the observed mean,
+    and with no history at all the full-pass bound.
     """
 
-    def __init__(self, shed_enabled: bool = True, pessimism: float = 1.0):
+    def __init__(self, shed_enabled: bool = True, pessimism: float = 1.0,
+                 service_model=None):
         self.shed_enabled = bool(shed_enabled)
         self.pessimism = float(pessimism)
+        self.service_model = service_model
 
     @staticmethod
     def required_tuples(seed_m: int, seed_err: float, epsilon: float,
@@ -129,11 +154,24 @@ class AdmissionController:
         if free:
             wait = 0.0
         else:
-            # queue model: everyone ahead (plus the current occupant batch)
-            # holds a slot for about one observed mean service time; without
-            # history, assume they look like this query
-            per = load.mean_service_s if load.mean_service_s else service
-            wait = (load.queue_ahead + 1) * per
+            # Queue model: the candidate waits for a slot to drain, then for
+            # every queued job ahead of it.  Each component is priced by the
+            # service model's per-class quantile when the caller provides it
+            # (ServerLoad.slot_drain_s / queue_ahead_service_s); the
+            # fallback per-job price is the observed mean, and with no
+            # history at all the full-pass bound — NOT the candidate's own
+            # seed-discounted prediction, which would let a well-seeded
+            # query predict a near-zero wait behind a queue of full-pass
+            # work (the PR-4 full-pass-fallback bug).
+            full_pass = load.total_tuples / max(load.scan_rate, 1e-12)
+            per = load.mean_service_s if load.mean_service_s else full_pass
+            if self.service_model is not None:
+                per = self.service_model.predict(slo.priority, per)
+            drain = load.slot_drain_s if load.slot_drain_s is not None else per
+            ahead = (load.queue_ahead_service_s
+                     if load.queue_ahead_service_s is not None
+                     else load.queue_ahead * per)
+            wait = drain + ahead
         finish = max(load.now, arrival_t) + wait + service
 
         if not slo.has_deadline:

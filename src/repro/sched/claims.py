@@ -33,6 +33,7 @@ import numpy as np
 
 
 def slot_chunk_variances(state, active: Optional[np.ndarray] = None,
+                         slot_need: Optional[np.ndarray] = None,
                          ) -> np.ndarray:
     """Aggregate per-chunk within-variance across slots — ``(N,)``.
 
@@ -40,6 +41,18 @@ def slot_chunk_variances(state, active: Optional[np.ndarray] = None,
     the live slots: the claim order should chase uncertainty that some
     *resident* query still cares about.  Chunks a slot has fewer than two
     tuples from contribute zero (no variance estimate yet).
+
+    ``slot_need`` (optional, ``(S,)`` non-negative) weights each slot's
+    variance plane by its remaining **distance to its ε target** before
+    aggregating — ``need_s = max(err_s/ε_s − 1, 0)`` as computed by the
+    server from the last round report.  A slot at 3× its target then pulls
+    claim order twice as hard as one at 2×, and a slot that already met ε
+    (need 0) stops steering entirely; the aggregate becomes the
+    need-weighted **sum** over slots (total outstanding uncertainty — the
+    Neyman-allocation reading) instead of the unweighted max PR 4 used,
+    which let one nearly-converged slot's noisy chunk outrank a chunk every
+    far-from-target slot needs.  Without ``slot_need`` the PR-4 max key is
+    kept (the policy-unit tests pin both forms).
     """
     m = np.asarray(state.stats.m, np.float64)          # (S, N)
     ys = np.asarray(state.stats.ysum, np.float64)
@@ -58,16 +71,26 @@ def slot_chunk_variances(state, active: Optional[np.ndarray] = None,
                 f"active mask length {active.shape[0]} does not match the "
                 f"stats plane's leading dim {v.shape[0]}")
         v = v * active[:, None]
+    if slot_need is not None:
+        need = np.asarray(slot_need, np.float64)
+        if need.shape[0] != v.shape[0]:
+            raise ValueError(
+                f"slot_need length {need.shape[0]} does not match the "
+                f"stats plane's leading dim {v.shape[0]}")
+        return (v * need[:, None]).sum(axis=0)
     return v.max(axis=0)
 
 
 def variance_claim_order(state, chunk_sizes: np.ndarray,
                          active: Optional[np.ndarray] = None,
+                         slot_need: Optional[np.ndarray] = None,
                          ) -> Optional[np.ndarray]:
     """New ``(N,)`` schedule with the unclaimed tail variance-ordered, or
     ``None`` when the order is already optimal / there is nothing to
     reorder.  Positions ``< state.head`` (claimed or done — every worker's
-    held position is below the head) are never moved."""
+    held position is below the head) are never moved.  ``slot_need``
+    switches the per-chunk key to the ε-distance-weighted aggregate (see
+    :func:`slot_chunk_variances`)."""
     schedule = np.asarray(state.schedule)
     n = len(schedule)
     head = int(state.head)
@@ -77,7 +100,7 @@ def variance_claim_order(state, chunk_sizes: np.ndarray,
     scan_m = np.asarray(state.scan_m)
     closed = np.asarray(state.closed)
     sizes = np.asarray(chunk_sizes)
-    v = slot_chunk_variances(state, active)
+    v = slot_chunk_variances(state, active, slot_need)
     dead = closed[tail] | (scan_m[tail] >= sizes[tail])
     started = scan_m[tail] > 0
     band = np.where(dead, 2, np.where(started, 1, 0))

@@ -21,6 +21,7 @@ freed capacity is redistributed over the rest.  Properties (unit-tested):
 from __future__ import annotations
 
 import math
+from typing import Optional
 
 import numpy as np
 
@@ -68,8 +69,48 @@ def max_min_weights(priority: np.ndarray, active: np.ndarray,
     return out
 
 
+def measured_slot_capacity(rates, headroom: float = 0.5) -> Optional[float]:
+    """Per-round slot-budget units derived from the *measured* round-step
+    costs, replacing the hand-set ``slot_capacity`` knob.
+
+    ``benchmarks/bench_slot_kernel.py`` fits its S sweep to the linear model
+    ``round_us(S) = base + slot_us · S`` and records the coefficients in the
+    calibration block (``MeasuredRates.round_base_us`` — the scan-side cost
+    of one round: claim, gather, parse, merge — and ``round_slot_us`` — the
+    marginal cost of one fully-counted slot evaluation).  The capacity the
+    hardware affords is then how much slot evaluation fits inside a
+    ``headroom`` fraction of the scan-side round cost::
+
+        capacity = headroom · base / slot_us
+
+    i.e. at ``headroom=0.5`` the deployment tolerates slot evaluation
+    inflating the round by at most 50% over its scan-side floor.  Floored at
+    1.0 — a lone resident slot always gets the full window (the scan must
+    make progress) — which also keeps the uncontended single-query case
+    bit-identical to the unscheduled server.  Returns ``None`` (caller keeps
+    its static knob) when the calibration predates the fit fields or the
+    fit is degenerate (non-positive slope: adding slots measured as free).
+    """
+    if rates is None:
+        return None
+    base = float(getattr(rates, "round_base_us", 0.0) or 0.0)
+    slot = float(getattr(rates, "round_slot_us", 0.0) or 0.0)
+    if not (math.isfinite(base) and math.isfinite(slot)
+            and base > 0.0 and slot > 0.0):
+        return None
+    if not headroom > 0:
+        raise ValueError(f"headroom must be positive: {headroom}")
+    return max(1.0, headroom * base / slot)
+
+
 class FairnessPolicy:
-    """Bundles the capacity knob with the water-filling rule."""
+    """Bundles the capacity knob with the water-filling rule.
+
+    ``slot_capacity`` may be retargeted after construction (the scheduler's
+    :meth:`~repro.sched.scheduler.WorkloadScheduler.calibrate` swaps in the
+    measured capacity when the server hands it a calibration) — the weights
+    are computed fresh from the current value every round.
+    """
 
     def __init__(self, slot_capacity: float = math.inf):
         if not slot_capacity > 0:

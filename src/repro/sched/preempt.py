@@ -1,0 +1,67 @@
+"""Deadline-feasibility preemption: evict a batch slot for a hot deadline.
+
+Admission (``repro.sched.admission``) triages a deadline query against the
+server's *current* slot occupancy — PR 4 stopped there, which meant a
+feasible interactive deadline could still die waiting behind a batch slot:
+the scheduler knew the deadline was reachable *if only* the query held a
+slot now, and shed it anyway.  That violates the priority contract the
+fairness weights already encode (an interactive query outranks a batch one
+4:1): if the batch slot's budget share is worth taking per round, the slot
+itself is worth taking when the alternative is missing a feasible deadline.
+
+:func:`select_victim` is the policy half: given the candidate's SLO and the
+resident slots' SLOs, pick the slot to evict — or ``None`` when preemption
+cannot help (no strictly-lower-priority resident).  The mechanism half
+lives in the server (``OLAWorkloadServer._evict``): the victim's per-slot
+sufficient-statistics row is snapshotted host-side
+(:func:`repro.core.engine.slot_stats_snapshot`), the slot is released, and
+the victim re-enters the queue flagged ``preempted`` — on re-admission the
+snapshot seeds its slot row (it is a richer seed than the synopsis: every
+tuple the query already counted), so no sample is lost and the query is
+**never silently dropped**.  The caller only preempts when *both* hold:
+
+* waiting is infeasible — the admission decision's predicted finish (queue
+  wait priced by the service model) lands past the deadline;
+* preempting is sufficient — admitted *now*, the candidate's predicted
+  service fits inside the deadline.
+
+Guarded by ``SchedulerConfig.preempt`` (default off; the NEUTRAL parity
+configuration never preempts).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+from repro.sched.slo import NO_SLO, PRIORITY_WEIGHTS
+
+
+def select_victim(candidate_slo, slot_slos: Sequence,
+                  slot_admit_t: Sequence[float],
+                  evictable: Sequence[bool]) -> Optional[int]:
+    """Pick the slot to evict for ``candidate_slo``, or ``None``.
+
+    ``slot_slos[s]`` is the resident query's SLO (``None`` for empty or
+    no-SLO slots — treated as :data:`~repro.sched.slo.NO_SLO`),
+    ``evictable[s]`` gates slots that may be taken at all (occupied and not
+    already stopped).  Only slots of **strictly lower** priority weight than
+    the candidate qualify — equal-priority work is never preempted (that
+    would just trade one miss for another and invite eviction cycles).
+    Among qualifying slots the victim is the lowest-weight one, tie-broken
+    by the *latest* admission time: the newest batch slot has the least
+    sunk scan work, so evicting it wastes the least (its sample is
+    snapshotted and restored on re-admission either way).
+    """
+    cand_w = (candidate_slo or NO_SLO).weight
+    best: Optional[int] = None
+    best_key = None
+    for s, (slo, ok) in enumerate(zip(slot_slos, evictable)):
+        if not ok:
+            continue
+        w = PRIORITY_WEIGHTS[(slo or NO_SLO).priority]
+        if w >= cand_w:
+            continue
+        key = (w, -float(slot_admit_t[s]))
+        if best_key is None or key < best_key:
+            best, best_key = s, key
+    return best

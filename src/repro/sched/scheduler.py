@@ -7,30 +7,40 @@ engine state.  Division of labor per decision point:
 * **intake** (``queue_key``): ready queries are considered in priority
   order (weight desc, then arrival, then qid) instead of pure FIFO;
 * **admission** (``admission.decide``): admit / queue / shed against the
-  query's :class:`~repro.sched.slo.QuerySLO`, using the Eq. (4) cost model;
+  query's :class:`~repro.sched.slo.QuerySLO`, pricing the candidate's
+  service with the Eq. (4) cost model and the queue wait with the learned
+  per-class service-time quantile (``repro.sched.service_model``, fed by
+  :meth:`WorkloadScheduler.observe_service` at every retirement);
+* **admission** (``config.preempt``): when a feasible deadline would die
+  waiting, evict a strictly-lower-priority slot (``repro.sched.preempt``);
 * **per round** (``round_weights``): weighted max-min fairness shares over
   the resident slots, written into the slot table's ``weight`` column —
-  under ``slot_capacity`` contention, high-priority slots keep more of each
-  round's evaluation budget;
+  under ``slot_capacity`` contention (hand-set, or derived from the
+  benchmark calibration via ``slot_capacity="measured"`` +
+  :meth:`WorkloadScheduler.calibrate`), high-priority slots keep more of
+  each round's evaluation budget;
 * **per round** (``claim_order``): variance-guided permutation of the
-  schedule's unclaimed tail (see ``repro.sched.claims``).
+  schedule's unclaimed tail, each slot's variance weighted by its remaining
+  distance to its ε target (see ``repro.sched.claims``).
 
 The **neutral** configuration — infinite capacity, ``claim_policy=
-"schedule"``, FIFO queue, no SLOs — reproduces the unscheduled server
-round-for-round, bit-exactly; ``tests/test_sched.py`` gates that.
+"schedule"``, FIFO queue, no SLOs, no preemption — reproduces the
+unscheduled server round-for-round, bit-exactly; ``tests/test_sched.py``
+gates that.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional
+from typing import Optional, Union
 
 import numpy as np
 
 from repro.sched.admission import AdmissionController
 from repro.sched.claims import variance_claim_order
-from repro.sched.fairness import FairnessPolicy
+from repro.sched.fairness import FairnessPolicy, measured_slot_capacity
+from repro.sched.service_model import ServiceTimeModel
 from repro.sched.slo import NO_SLO, PRIORITY_WEIGHTS, QuerySLO
 
 
@@ -38,8 +48,12 @@ from repro.sched.slo import NO_SLO, PRIORITY_WEIGHTS, QuerySLO
 class SchedulerConfig:
     # per-round slot-budget units across resident slots (inf = uncontended;
     # e.g. 2.0 = the deployment can afford two full slot evaluations per
-    # round and the fairness policy divides them)
-    slot_capacity: float = math.inf
+    # round and the fairness policy divides them).  The string "measured"
+    # derives the capacity from the bench_slot_kernel calibration's
+    # round-cost fit (see repro.sched.fairness.measured_slot_capacity) when
+    # the server calls WorkloadScheduler.calibrate with its loaded rates;
+    # without a usable calibration it degrades to inf (uncontended).
+    slot_capacity: Union[float, str] = math.inf
     claim_policy: str = "variance"      # "schedule" (committed order) | "variance"
     queue_policy: str = "priority"      # "fifo" | "priority"
     shed_enabled: bool = True
@@ -47,26 +61,69 @@ class SchedulerConfig:
     # an admitted query overstay its slot
     deadline_enforcement: bool = True
     admission_pessimism: float = 1.0
+    # evict a strictly-lower-priority slot when a deadline is feasible only
+    # with preemption (repro.sched.preempt); the victim is re-queued with
+    # its statistics snapshot, never dropped
+    preempt: bool = False
+    # queue waits are priced at this quantile of each class's observed
+    # service times (repro.sched.service_model); the CLT cost model remains
+    # the cold-start prior until min_samples completions per class
+    wait_quantile: float = 0.9
+    service_min_samples: int = 8
+    # slot_capacity="measured": fraction of the scan-side round cost the
+    # deployment lets slot evaluation add (capacity = headroom·base/slot_us)
+    measured_headroom: float = 0.5
 
     def __post_init__(self):
         assert self.claim_policy in ("schedule", "variance"), self.claim_policy
         assert self.queue_policy in ("fifo", "priority"), self.queue_policy
+        if isinstance(self.slot_capacity, str):
+            assert self.slot_capacity == "measured", self.slot_capacity
+        assert 0.0 < self.wait_quantile < 1.0, self.wait_quantile
 
 
 #: Neutral configuration for parity testing: scheduling machinery engaged,
 #: every policy pinned to the unscheduled server's behavior.
 NEUTRAL = SchedulerConfig(slot_capacity=math.inf, claim_policy="schedule",
                           queue_policy="fifo", shed_enabled=False,
-                          deadline_enforcement=False)
+                          deadline_enforcement=False, preempt=False)
 
 
 class WorkloadScheduler:
     def __init__(self, config: SchedulerConfig = SchedulerConfig()):
         self.config = config
-        self.fairness = FairnessPolicy(config.slot_capacity)
+        cap = (math.inf if config.slot_capacity == "measured"
+               else config.slot_capacity)
+        self.fairness = FairnessPolicy(cap)
+        self.service_model = ServiceTimeModel(
+            quantile=config.wait_quantile,
+            min_samples=config.service_min_samples)
         self.admission = AdmissionController(
             shed_enabled=config.shed_enabled,
-            pessimism=config.admission_pessimism)
+            pessimism=config.admission_pessimism,
+            service_model=self.service_model)
+
+    # -------------------------------------------------------- calibration ----
+    def calibrate(self, rates) -> None:
+        """Bind a :class:`~repro.serve.ola_server.MeasuredRates` calibration.
+
+        With ``slot_capacity="measured"`` this derives the fairness
+        capacity from the measured round-cost fit; rates without the fit
+        fields (or ``None``) leave the capacity uncontended.  Hand-set
+        numeric capacities are never overridden.  Called by the server at
+        construction; idempotent, host-side only.
+        """
+        if self.config.slot_capacity != "measured":
+            return
+        cap = measured_slot_capacity(rates, self.config.measured_headroom)
+        self.fairness.slot_capacity = math.inf if cap is None else cap
+
+    # ------------------------------------------------------------ feedback ----
+    def observe_service(self, slo: Optional[QuerySLO],
+                        service_s: float) -> None:
+        """Feed one completed query's scan service time (slot grant →
+        retirement, modeled seconds) into the per-class quantile sketch."""
+        self.service_model.observe((slo or NO_SLO).priority, float(service_s))
 
     # ------------------------------------------------------------- intake ----
     def queue_key(self, wq) -> tuple:
@@ -87,10 +144,15 @@ class WorkloadScheduler:
 
     def claim_order(self, state, chunk_sizes: np.ndarray,
                     active: Optional[np.ndarray] = None,
+                    slot_need: Optional[np.ndarray] = None,
                     ) -> Optional[np.ndarray]:
+        """Variance-guided claim permutation; ``slot_need`` (the server's
+        per-slot ε-distance weights from the last round report) switches the
+        chunk key to the need-weighted aggregate."""
         if self.config.claim_policy != "variance":
             return None
-        return variance_claim_order(state, chunk_sizes, active)
+        return variance_claim_order(state, chunk_sizes, active,
+                                    slot_need=slot_need)
 
     # ---------------------------------------------------------------- SLO ----
     @staticmethod

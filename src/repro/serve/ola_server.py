@@ -43,7 +43,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.controller import _answer_from_stats
-from repro.core.engine import IDLE, EngineConfig, SlotOLAEngine
+from repro.core.engine import (
+    IDLE,
+    EngineConfig,
+    SlotOLAEngine,
+    slot_stats_snapshot,
+    slot_stats_write,
+)
 from repro.core.queries import (
     PLAN_CODES,
     Query,
@@ -60,6 +66,7 @@ from repro.sched.admission import (
     eq4_cost_terms,
     scan_tuples_per_s,
 )
+from repro.sched.preempt import select_victim
 from repro.sched.scheduler import SchedulerConfig, WorkloadScheduler
 from repro.sched.slo import NO_SLO, QuerySLO
 
@@ -86,6 +93,13 @@ class MeasuredRates:
     # store: tuples/s is codec-relative, so serving a different codec
     # rescales by the cost ratio.  0 = unknown -> no rescaling.
     cost_per_tuple: float = 0.0
+    # linear fit of the benchmark's S sweep, round_us(S) = base + slot_us·S:
+    # the scan-side round cost and the marginal cost of one fully-counted
+    # slot evaluation.  Feeds the scheduler's measured slot capacity
+    # (repro.sched.fairness.measured_slot_capacity).  0 = calibration
+    # predates the fit -> measured capacity unavailable.
+    round_base_us: float = 0.0
+    round_slot_us: float = 0.0
 
 
 def default_rates_path() -> str:
@@ -129,12 +143,19 @@ def load_measured_rates(path: Optional[str] = None,
             data = json.load(f)
         cal = data["calibration"]
         cost = float(cal.get("cost_per_tuple", 0.0))
+
+        def _opt(key):
+            v = float(cal.get(key, 0.0))
+            return v if math.isfinite(v) and v > 0 else 0.0
+
         rates = MeasuredRates(
             io_bytes_per_sec=float(cal["io_bytes_per_sec"]),
             cpu_tuples_per_sec=float(cal["cpu_tuples_per_sec"]),
             workers=int(cal.get("workers", data.get("workers", 1))),
             source=f"{path}:{cal.get('backend', '?')}",
-            cost_per_tuple=cost if math.isfinite(cost) and cost > 0 else 0.0)
+            cost_per_tuple=cost if math.isfinite(cost) and cost > 0 else 0.0,
+            round_base_us=_opt("round_base_us"),
+            round_slot_us=_opt("round_slot_us"))
         # json.load accepts the NaN literal, and NaN compares False to
         # everything — require finite positives or fall back to modeled
         if not all(math.isfinite(v) and v > 0 for v in
@@ -191,6 +212,8 @@ class WorkloadQuery:
     row: Optional[dict] = None      # slot row encoded (and validated) at submit
     slo: Optional[QuerySLO] = None  # service-level objective (scheduler)
     queued: bool = False            # waited >= one admission pass for a slot
+    preempted: bool = False         # evicted mid-residence at least once
+    saved_stats: Optional[dict] = None  # eviction snapshot: re-admission seed
 
 
 @dataclasses.dataclass
@@ -213,12 +236,15 @@ class WorkloadResult:
     unserved: bool = False          # scan exhausted before the slot saw any
                                     # tuple (no synopsis seed): estimate is NaN
     # scheduler outcome: "admitted" (straight into a slot), "queued" (waited
-    # for one), or "shed" (never held a slot — answered best-effort from the
-    # synopsis, or unserved).  Lets benchmarks separate scan-served answers
-    # from degraded ones.
+    # for one), "preempted" (evicted mid-residence for a deadline query and
+    # completed after re-queueing — never dropped), or "shed" (never held a
+    # slot — answered best-effort from the synopsis, or unserved).  Lets
+    # benchmarks separate scan-served answers from degraded ones.
     sched_outcome: str = "admitted"
     queue_wait: float = 0.0         # t_admit - t_submit (slot wait, modeled s)
     slo_met: Optional[bool] = None  # None when the query carried no SLO
+    priority: str = "normal"        # SLO priority class (per-class latency
+                                    # curves in benchmarks/bench_workload.py)
 
     @property
     def latency(self) -> float:
@@ -320,10 +346,16 @@ class OLAWorkloadServer:
         if isinstance(scheduler, SchedulerConfig):
             scheduler = WorkloadScheduler(scheduler)
         self.scheduler: Optional[WorkloadScheduler] = scheduler
+        if self.scheduler is not None:
+            # slot_capacity="measured": derive the fairness capacity from
+            # the loaded calibration's round-cost fit
+            self.scheduler.calibrate(self.rates)
         self.shed_count = 0
+        self.preempt_count = 0
         self._service_times: list[float] = []   # scan service per retirement
         self._preview_cache: dict[int, tuple] = {}  # per intake pass, by qid
         self._cur_weights = np.ones(max_slots, np.float32)
+        self._last_err: Optional[np.ndarray] = None  # (S,) last round report
         self._scan_rate = scan_tuples_per_s(store, self.config,
                                             rates=self.rates)
 
@@ -419,10 +451,17 @@ class OLAWorkloadServer:
         slo = wq.slo or NO_SLO
         return slo.has_deadline or np.isfinite(slo.target_halfwidth)
 
+    @staticmethod
+    def _outcome(wq: WorkloadQuery) -> str:
+        if wq.preempted:
+            return "preempted"
+        return "queued" if wq.queued else "admitted"
+
     def _admit_ready_scheduled(self) -> None:
         """Scheduler intake: ready queries are considered in queue-policy
-        order; each is admitted, left queued, or shed per the admission
-        controller's SLO-feasibility call."""
+        order; each is admitted, left queued, shed — or, with
+        ``config.preempt``, granted a slot by evicting a strictly-lower-
+        priority resident when its deadline is feasible *only* that way."""
         sched = self.scheduler
         now = self.t_model
         ready = [wq for wq in self.queue if wq.arrival_t <= now]
@@ -434,38 +473,141 @@ class OLAWorkloadServer:
         self._preview_cache = {}
         if self.synopsis is not None and any(map(self._wants_preview, ready)):
             self._refresh_synopsis()
-        ahead = 0                       # still-queued queries ahead of this one
-        for wq in ready:
-            free = self._free_slots()   # recompute: seed-answered slots refree
-            decision = self._decide_admission(wq, len(free), ahead)
-            if decision.action == SHED:
-                self.queue.remove(wq)
-                self._shed(wq)
-            elif free:
-                self.queue.remove(wq)
-                self._admit(free[0], wq)
-            else:
-                wq.queued = True
-                ahead += 1
+        while True:
+            ready = [wq for wq in self.queue if wq.arrival_t <= now]
+            ready.sort(key=sched.queue_key)
+            ahead: list[WorkloadQuery] = []  # still queued, ahead of this one
+            restart = False
+            for wq in ready:
+                free = self._free_slots()  # recompute: seed-retired slots refree
+                if free and ahead:
+                    # a slot freed mid-pass *behind* queued work (a preempt-
+                    # admitted query retired instantly from its seed):
+                    # restart so the highest-priority queued query gets
+                    # first claim — continuing here would hand the slot to
+                    # a later, lower-priority candidate and price the
+                    # earlier ones against a stale no-free-slot snapshot
+                    restart = True
+                    break
+                decision = self._decide_admission(wq, len(free), ahead)
+                if not free and self._try_preempt(wq, decision):
+                    # a victim was evicted exactly because the deadline fits
+                    # if the query runs now — the freed slot is the
+                    # candidate's
+                    self.queue.remove(wq)
+                    self._admit(self._free_slots()[0], wq)
+                elif decision.action == SHED:
+                    self.queue.remove(wq)
+                    self._shed(wq)
+                elif free:
+                    self.queue.remove(wq)
+                    self._admit(free[0], wq)
+                else:
+                    wq.queued = True
+                    ahead.append(wq)
+            if not restart:
+                break
+            # termination: the restarted pass sees free slots with nothing
+            # ahead, so its head query is admitted or shed — the queue
+            # strictly shrinks every restart
+
+    def _try_preempt(self, wq: WorkloadQuery, decision) -> bool:
+        """Evict a strictly-lower-priority resident slot for ``wq`` when its
+        deadline would die in the queue but fits if the query runs *now*.
+        Returns True when a slot was freed (the victim is snapshotted and
+        re-queued — see :func:`repro.sched.preempt.select_victim`)."""
+        sched = self.scheduler
+        slo = wq.slo or NO_SLO
+        if not (sched.config.preempt and slo.has_deadline):
+            return False
+        deadline_t = wq.arrival_t + slo.deadline_s
+        if decision.predicted_finish_t <= deadline_t:
+            return False                # feasible by waiting: don't evict
+        now = self.t_model
+        if max(now, wq.arrival_t) + decision.predicted_service_s > deadline_t:
+            return False                # hopeless even with a slot right now
+        stopped = np.asarray(self.state.stopped)
+        evictable = [self.slot_wq[s] is not None and not stopped[s]
+                     for s in range(self.max_slots)]
+        victim = select_victim(
+            wq.slo, [w.slo if w is not None else None for w in self.slot_wq],
+            self.slot_admit_t, evictable)
+        if victim is None:
+            return False
+        self._evict(victim)
+        return True
+
+    def _evict(self, s: int) -> None:
+        """Preempt slot ``s``: snapshot its statistics row as the occupant's
+        re-admission seed, release the slot, and re-queue the occupant
+        (flagged ``preempted`` — it completes later, never dropped)."""
+        wq = self.slot_wq[s]
+        wq.saved_stats = slot_stats_snapshot(self.state, s)
+        wq.preempted = True
+        wq.queued = True
+        self.preempt_count += 1
+        self._release(s)
+        self.queue.append(wq)
+        self.queue.sort(key=lambda w: (w.arrival_t, w.qid))
 
     def _cached_preview(self, wq: WorkloadQuery) -> tuple:
         out = self._preview_cache.get(wq.qid)
         if out is None:
-            out = self._seed_answer(wq.query)
+            out = self._seed_answer(wq.query, seed=wq.saved_stats)
             self._preview_cache[wq.qid] = out
         return out
 
-    def _decide_admission(self, wq: WorkloadQuery, n_free: int, ahead: int):
+    def _observed_mean_service_s(self) -> Optional[float]:
+        """Mean scan service over completed queries; None before the first
+        retirement.  Single source for every admission-path consumer."""
+        st = self._service_times
+        return (sum(st) / len(st)) if st else None
+
+    def _service_prior_s(self) -> float:
+        """Cold-start per-job service prior for wait pricing: the observed
+        mean service when any query has completed, else one full pass at
+        the scan rate (the CLT worst case).  Never the *candidate's* own
+        seed-discounted prediction — the queue is other people's work."""
+        mean = self._observed_mean_service_s()
+        if mean is not None:
+            return mean
+        return float(self.store.num_tuples) / max(self._scan_rate, 1e-12)
+
+    def _wait_components(self, ahead: list) -> tuple:
+        """Model-priced wait parts for the admission snapshot:
+        ``(slot_drain_s, queue_ahead_service_s)``.  Each resident slot's
+        remaining service is its class quantile minus its elapsed
+        residence; the drain is the *minimum* across slots (any slot
+        freeing admits the head of the queue).  Each queued job ahead is
+        priced at its own class's quantile — not the candidate's."""
+        model = self.scheduler.service_model
+        prior = self._service_prior_s()
+        now = self.t_model
+        drains = []
+        for s in range(self.max_slots):
+            w = self.slot_wq[s]
+            if w is None:
+                continue
+            pred = model.predict((w.slo or NO_SLO).priority, prior)
+            drains.append(max(pred - max(now - self.slot_admit_t[s], 0.0),
+                              0.0))
+        drain = min(drains) if drains else None
+        ahead_s = sum(model.predict((w.slo or NO_SLO).priority, prior)
+                      for w in ahead)
+        return drain, float(ahead_s)
+
+    def _decide_admission(self, wq: WorkloadQuery, n_free: int, ahead: list):
         slo = wq.slo or NO_SLO
         seed_m, seed_err, seed_est = 0, float("inf"), None
         if self._wants_preview(wq):     # feasibility needs the seed preview
             seed_m, seed_est, _, _, seed_err = self._cached_preview(wq)
-        st = self._service_times
+        drain, ahead_s = self._wait_components(ahead)
         load = ServerLoad(
-            now=self.t_model, free_slots=n_free, queue_ahead=ahead,
+            now=self.t_model, free_slots=n_free, queue_ahead=len(ahead),
             scan_rate=self._scan_rate,
             total_tuples=int(self.store.num_tuples),
-            mean_service_s=(sum(st) / len(st)) if st else None)
+            mean_service_s=self._observed_mean_service_s(),
+            slot_drain_s=drain, queue_ahead_service_s=ahead_s)
         # feasibility must be judged against the ε the slot will actually
         # run at — a finite target_halfwidth tightens it (same translation
         # _admit applies to the slot row)
@@ -474,16 +616,19 @@ class OLAWorkloadServer:
             arrival_t=wq.arrival_t, slo=slo, epsilon=eps_eff,
             load=load, seed_m=seed_m, seed_err=seed_err)
 
-    def _seed_answer(self, query: Query) -> tuple:
-        """Best synopsis-only answer available right now: ``(m, estimate,
-        lo, hi, err)`` — ``(0, nan, nan, nan, inf)`` when the synopsis
-        cannot serve the query.  Assumes the caller refreshed the synopsis
-        (the scheduled intake pass does, once).  Single construction shared
-        by admission feasibility, the effective-ε translation, and
-        shedding."""
-        if self.synopsis is None:
-            return 0, float("nan"), float("nan"), float("nan"), float("inf")
-        seed = self.synopsis.seed_slot(query)
+    def _seed_answer(self, query: Query, seed: Optional[dict] = None) -> tuple:
+        """Best scan-free answer available right now: ``(m, estimate, lo,
+        hi, err)`` — ``(0, nan, nan, nan, inf)`` when nothing can serve the
+        query.  ``seed`` overrides the synopsis lookup (a preempted query's
+        statistics snapshot is a richer seed than the synopsis); otherwise
+        assumes the caller refreshed the synopsis (the scheduled intake
+        pass does, once).  Single construction shared by admission
+        feasibility, the effective-ε translation, and shedding."""
+        if seed is None:
+            if self.synopsis is None:
+                return (0, float("nan"), float("nan"), float("nan"),
+                        float("inf"))
+            seed = self.synopsis.seed_slot(query)
         if seed is None or int(seed["m"].sum()) == 0:
             return 0, float("nan"), float("nan"), float("nan"), float("inf")
         stats_row = self.state.stats._replace(
@@ -526,7 +671,8 @@ class OLAWorkloadServer:
             t_submit=wq.arrival_t, t_admit=now, t_done=now,
             seeded_tuples=m_seen, tuples_seen=m_seen, rounds_resident=0,
             from_synopsis=from_syn, unserved=unserved, sched_outcome="shed",
-            queue_wait=now - wq.arrival_t, slo_met=slo_met))
+            queue_wait=now - wq.arrival_t, slo_met=slo_met,
+            priority=(wq.slo or NO_SLO).priority))
         self.shed_count += 1
 
     def _admit(self, s: int, wq: WorkloadQuery) -> None:
@@ -535,7 +681,13 @@ class OLAWorkloadServer:
         row = wq.row or encode_slot(wq.query, self.store.codec.num_cols)
         row["plan"] = np.int32(PLAN_CODES[plan])
         self._refresh_synopsis()
-        seed = self.synopsis.seed_slot(wq.query) if self.synopsis else None
+        if wq.saved_stats is not None:
+            # preempted query returning to a slot: its eviction snapshot is
+            # the seed — every tuple it already counted, at full per-chunk
+            # resolution (strictly richer than the synopsis)
+            seed = wq.saved_stats
+        else:
+            seed = self.synopsis.seed_slot(wq.query) if self.synopsis else None
         if (self.scheduler is not None and wq.slo is not None
                 and np.isfinite(wq.slo.target_halfwidth)):
             # absolute CI half-width target -> effective relative ε for the
@@ -547,27 +699,14 @@ class OLAWorkloadServer:
             row["eps"] = np.float32(eps_eff)
 
         n = self.store.num_chunks
-        dtype = self.state.stats.ysum.dtype
-        if seed is None:
-            m_row = jnp.zeros((n,), jnp.int32)
-            zs = jnp.zeros((n,), dtype)
-            ys_row, yq_row, ps_row = zs, zs, zs
-            seeded = 0
-        else:
-            m_row = jnp.asarray(seed["m"], jnp.int32)
-            ys_row = jnp.asarray(seed["ysum"], dtype)
-            yq_row = jnp.asarray(seed["ysq"], dtype)
-            ps_row = jnp.asarray(seed["psum"], dtype)
-            seeded = int(seed["m"].sum())
-
-        stats = self.state.stats
-        stats = stats._replace(
-            m=stats.m.at[s].set(m_row),
-            ysum=stats.ysum.at[s].set(ys_row),
-            ysq=stats.ysq.at[s].set(yq_row),
-            psum=stats.psum.at[s].set(ps_row))
+        stats, seeded = slot_stats_write(self.state.stats, s, seed, n)
         self.state = self.state._replace(
             stats=stats, stopped=self.state.stopped.at[s].set(False))
+        if self._last_err is not None:
+            # the previous occupant's round-report error is stale for the
+            # new one; claim weighting treats it as "no estimate yet"
+            self._last_err = self._last_err.copy()
+            self._last_err[s] = np.inf
         self.table = slot_table_set(self.table, s, row)
         # slot_table_set reset the row's fairness weight to 1.0 — keep the
         # written-weights cache in sync, or _apply_scheduling could skip the
@@ -618,8 +757,9 @@ class OLAWorkloadServer:
             t_done=self.t_model, seeded_tuples=int(self.slot_seeded[s]),
             tuples_seen=int(np.asarray(self.state.stats.m[s]).sum()),
             rounds_resident=0, from_synopsis=True,
-            sched_outcome="queued" if wq.queued else "admitted",
-            queue_wait=self.slot_admit_t[s] - wq.arrival_t, slo_met=slo_met))
+            sched_outcome=self._outcome(wq),
+            queue_wait=self.slot_admit_t[s] - wq.arrival_t, slo_met=slo_met,
+            priority=(wq.slo or NO_SLO).priority))
         self._release(s)
         return True
 
@@ -690,10 +830,15 @@ class OLAWorkloadServer:
                 tuples_seen=int(np.asarray(self.state.stats.m[s]).sum()),
                 rounds_resident=int(self.rounds - self.slot_admit_round[s]),
                 unserved=bad,
-                sched_outcome="queued" if wq.queued else "admitted",
+                sched_outcome=self._outcome(wq),
                 queue_wait=float(self.slot_admit_t[s] - wq.arrival_t),
-                slo_met=slo_met))
-            self._service_times.append(self.t_model - self.slot_admit_t[s])
+                slo_met=slo_met,
+                priority=(wq.slo or NO_SLO).priority))
+            service = self.t_model - self.slot_admit_t[s]
+            self._service_times.append(service)
+            if self.scheduler is not None:
+                # feed the per-class service-time sketch (quantile admission)
+                self.scheduler.observe_service(wq.slo, service)
             self._release(s)
 
     def _any_active(self) -> bool:
@@ -715,10 +860,25 @@ class OLAWorkloadServer:
                 weight=jnp.asarray(w, jnp.float32))
             self._cur_weights = w
         order = sched.claim_order(self.state, self.store.chunk_sizes,
-                                  active=active)
+                                  active=active,
+                                  slot_need=self._slot_need())
         if order is not None:
             self.state = self.state._replace(
                 schedule=jnp.asarray(order, jnp.int32))
+
+    def _slot_need(self) -> Optional[np.ndarray]:
+        """Per-slot ε-distance weights for the claim key: how far each
+        resident slot's last-round error ratio still is from its ε target
+        (``max(err/ε − 1, 0)``); slots with no estimate yet weigh 1.0.
+        ``None`` before the first round (claims fall back to the unweighted
+        max key — there is nothing measured to weight anyway)."""
+        if self._last_err is None:
+            return None
+        eps = np.asarray(self.table.eps, np.float64)
+        err = self._last_err
+        return np.where(np.isfinite(err),
+                        np.maximum(err / np.maximum(eps, 1e-12) - 1.0, 0.0),
+                        1.0)
 
     def _enforce_deadlines(self) -> None:
         """Stop slots whose SLO deadline has passed: the query retires this
@@ -754,6 +914,9 @@ class OLAWorkloadServer:
             self.state, self.table, self.engine.round_data(self.state),
             self.engine.speeds)
         self.rounds += 1
+        if self.scheduler is not None:
+            # next round's ε-distance claim weights read this report
+            self._last_err = np.asarray(rep.err, float)
         if (self.scheduler is not None
                 and self.scheduler.config.deadline_enforcement):
             self._enforce_deadlines()

@@ -1,0 +1,133 @@
+"""CI benchmark regression gate (scripts/check_bench_regression.py).
+
+The gate compares fresh smoke-lane BENCH_*.json artifacts against committed
+baselines with per-field tolerance bands.  These tests drive the comparator
+on synthetic fixtures (no benchmark run needed) and pin the ISSUE 5
+acceptance behavior: a seeded regression fails the gate, identical
+artifacts pass it, and a metric silently *disappearing* from the fresh run
+is itself a failure.
+"""
+
+import copy
+import importlib.util
+import json
+import os
+
+import pytest
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_spec = importlib.util.spec_from_file_location(
+    "check_bench_regression",
+    os.path.join(_ROOT, "scripts", "check_bench_regression.py"))
+gate = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(gate)
+
+
+def _fresh_docs():
+    return {
+        "BENCH_workload.json": {
+            "server": {"p95_latency_s": 0.002},
+            "server_stream": {"p95_latency_s": 0.002},
+            "sched": {
+                "open_loop": {"scheduled": {"slo_hit_rate": 0.9}},
+                "closed_loop": {
+                    "scheduled": {"slo_hit_rate": 0.85,
+                                  "p95_latency_s": 0.004},
+                    "unscheduled": {"slo_hit_rate": 0.8},
+                },
+            },
+            "memory": {"peak_host_rss_bytes": 1_000_000},
+        },
+        "BENCH_slot_kernel.json": {
+            "memory": {"peak_host_rss_bytes": 500_000},
+        },
+    }
+
+
+def test_identical_artifacts_pass():
+    fresh = _fresh_docs()
+    failures, lines = gate.compare(fresh, copy.deepcopy(fresh))
+    assert failures == []
+    assert any(line.startswith("OK") for line in lines)
+
+
+def test_slo_hit_rate_band_is_2pp_absolute():
+    fresh = _fresh_docs()
+    base = copy.deepcopy(fresh)
+    sched = fresh["BENCH_workload.json"]["sched"]["closed_loop"]["scheduled"]
+    sched["slo_hit_rate"] = 0.85 - 0.019          # inside the band
+    assert gate.compare(fresh, base)[0] == []
+    sched["slo_hit_rate"] = 0.85 - 0.021          # outside
+    failures, _ = gate.compare(fresh, base)
+    assert failures == [
+        "BENCH_workload.json:sched.closed_loop.scheduled.slo_hit_rate"]
+
+
+def test_latency_and_rss_bands_are_relative():
+    fresh = _fresh_docs()
+    base = copy.deepcopy(fresh)
+    fresh["BENCH_workload.json"]["server"]["p95_latency_s"] = 0.002 * 1.24
+    fresh["BENCH_slot_kernel.json"]["memory"]["peak_host_rss_bytes"] = int(
+        500_000 * 1.14)
+    assert gate.compare(fresh, base)[0] == []
+    fresh["BENCH_workload.json"]["server"]["p95_latency_s"] = 0.002 * 1.26
+    fresh["BENCH_slot_kernel.json"]["memory"]["peak_host_rss_bytes"] = int(
+        500_000 * 1.16)
+    failures, _ = gate.compare(fresh, base)
+    assert set(failures) == {
+        "BENCH_workload.json:server.p95_latency_s",
+        "BENCH_slot_kernel.json:memory.peak_host_rss_bytes"}
+
+
+def test_missing_fresh_metric_fails_missing_baseline_skips():
+    fresh = _fresh_docs()
+    base = copy.deepcopy(fresh)
+    # baseline predates the field -> skip, not fail
+    del base["BENCH_workload.json"]["sched"]["open_loop"]
+    failures, lines = gate.compare(fresh, base)
+    assert failures == []
+    assert any(line.startswith("SKIP") and "open_loop" in line
+               for line in lines)
+    # fresh run dropped a gated field -> fail
+    del fresh["BENCH_workload.json"]["memory"]
+    failures, _ = gate.compare(fresh, copy.deepcopy(_fresh_docs()))
+    assert "BENCH_workload.json:memory.peak_host_rss_bytes" in failures
+    # no baseline file at all -> all its checks skip
+    failures, lines = gate.compare(_fresh_docs(), {})
+    assert failures == []
+    assert all(line.startswith("SKIP") for line in lines)
+
+
+def test_seeded_regression_is_caught():
+    """ISSUE 5 acceptance: a +5pp slo_hit_rate baseline bump (and shrunk
+    latency/RSS baselines) must fail the gate."""
+    fresh = _fresh_docs()
+    seeded = gate.seeded_regression(fresh)
+    failures, _ = gate.compare(fresh, seeded)
+    assert failures, "the gate passed a seeded regression"
+    assert any("slo_hit_rate" in f for f in failures)
+    assert any("peak_host_rss_bytes" in f for f in failures)
+
+
+@pytest.mark.parametrize("mode", ["pass", "fail", "self-test"])
+def test_main_exit_codes(tmp_path, mode):
+    fresh = _fresh_docs()
+    fresh_dir = tmp_path / "fresh"
+    base_dir = tmp_path / "base"
+    fresh_dir.mkdir()
+    base_dir.mkdir()
+    base = copy.deepcopy(fresh)
+    if mode == "fail":
+        base["BENCH_workload.json"]["sched"]["closed_loop"]["scheduled"][
+            "slo_hit_rate"] = 0.95
+    for name, doc in fresh.items():
+        (fresh_dir / name).write_text(json.dumps(doc))
+    for name, doc in base.items():
+        (base_dir / name).write_text(json.dumps(doc))
+    if mode == "self-test":
+        rc = gate.main(["--fresh-dir", str(fresh_dir), "--self-test"])
+        assert rc == 0                     # seeded regression was caught
+    else:
+        rc = gate.main(["--fresh-dir", str(fresh_dir),
+                        "--baseline-dir", str(base_dir)])
+        assert rc == (1 if mode == "fail" else 0)

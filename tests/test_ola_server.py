@@ -291,6 +291,31 @@ def test_select_plan_measured_rates_override(setup, tmp_path):
     assert srv.rates is None  # modeled defaults still in force
 
 
+def test_measured_rates_loader_round_cost_fit(tmp_path):
+    """The loader carries the calibration's S-sweep round-cost fit (the
+    scheduler's measured-capacity input) and treats absent/garbage fit
+    fields as 'fit unavailable' (0.0) without rejecting the calibration."""
+    path = tmp_path / "BENCH_slot_kernel.json"
+    path.write_text('{"calibration": {"backend": "ref", '
+                    '"cpu_tuples_per_sec": 1e6, "io_bytes_per_sec": 1e8, '
+                    '"round_base_us": 3000.0, "round_slot_us": 250.0}}')
+    rates = load_measured_rates(str(path))
+    assert rates.round_base_us == 3000.0
+    assert rates.round_slot_us == 250.0
+    # predates the fit -> 0.0 sentinels, calibration still usable
+    path.write_text('{"calibration": {"backend": "ref", '
+                    '"cpu_tuples_per_sec": 1e6, "io_bytes_per_sec": 1e8}}')
+    rates = load_measured_rates(str(path))
+    assert rates is not None
+    assert rates.round_base_us == 0.0 and rates.round_slot_us == 0.0
+    # NaN/negative fit values are sanitized, not propagated
+    path.write_text('{"calibration": {"backend": "ref", '
+                    '"cpu_tuples_per_sec": 1e6, "io_bytes_per_sec": 1e8, '
+                    '"round_base_us": NaN, "round_slot_us": -4.0}}')
+    rates = load_measured_rates(str(path))
+    assert rates.round_base_us == 0.0 and rates.round_slot_us == 0.0
+
+
 def test_measured_rates_rescale_across_codecs(setup):
     """The calibrated tuple rate is codec-relative (ASCII parsing vs
     near-free binary decode): with the calibration's cost_per_tuple

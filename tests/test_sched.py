@@ -30,14 +30,25 @@ from repro.data.generator import make_synthetic_zipf, store_dataset
 from repro.sched import (
     NEUTRAL,
     AdmissionController,
+    P2Quantile,
     QuerySLO,
     SchedulerConfig,
     ServerLoad,
+    ServiceTimeModel,
     WorkloadScheduler,
     max_min_weights,
+    measured_slot_capacity,
+    select_victim,
+    slot_chunk_variances,
     variance_claim_order,
 )
-from repro.serve.ola_server import OLAWorkloadServer, poisson_workload
+from repro.sched.admission import eq4_cost_terms, scan_tuples_per_s
+from repro.serve.ola_server import (
+    MeasuredRates,
+    OLAWorkloadServer,
+    poisson_workload,
+    select_plan,
+)
 
 COEF = tuple(1.0 / (k + 1) for k in range(8))
 
@@ -548,7 +559,12 @@ def test_fairness_weights_survive_slot_churn(setup):
     srv.submit(Query(agg="count", pred=Range(0, 0.0, 1e12), epsilon=0.5,
                      name="b"), arrival_t=0.0)
     srv.step()
-    np.testing.assert_allclose(np.asarray(srv.table.weight), [0.5, 0.5])
+    w = np.asarray(srv.table.weight)
+    assert w[0] == pytest.approx(0.5)       # a's contended fair share
+    # b (a loose count) may retire within this very step; its cleared row
+    # then resets to the neutral 1.0 (slot_table_clear keeps inactive slots
+    # neutral so no contended weight leaks to the next occupant)
+    assert w[1] == pytest.approx(1.0 if srv.slot_wq[1] is None else 0.5)
     # b retires fast (loose count); c takes its slot — same computed vector
     srv.submit(Query(agg="sum", expr=Linear(COEF), epsilon=1e-6, name="c"))
     for _ in range(6):
@@ -558,3 +574,383 @@ def test_fairness_weights_survive_slot_churn(setup):
     assert any(w is not None and w.query.name == "c" for w in srv.slot_wq)
     np.testing.assert_allclose(np.asarray(srv.table.weight), [0.5, 0.5])
     srv.close()
+
+
+# ---------------------------------------------------------------------------
+# Service-time model: quantile sketch + cold-start blend (ISSUE 5 tentpole)
+# ---------------------------------------------------------------------------
+
+def test_p2_quantile_tracks_percentile():
+    """The P² sketch stays close to the exact empirical quantile on heavy
+    -tailed streams — the service-time shape it exists for — and is exact
+    below five observations."""
+    for p, seed, draw in [(0.9, 0, "lognormal"), (0.5, 1, "lognormal"),
+                          (0.9, 2, "exponential"), (0.75, 3, "uniform")]:
+        rng = np.random.default_rng(seed)
+        xs = getattr(rng, draw)(size=4000)
+        sk = P2Quantile(p)
+        for x in xs:
+            sk.observe(x)
+        exact = float(np.percentile(xs, 100 * p))
+        assert sk.value() == pytest.approx(exact, rel=0.15), (p, draw)
+    # exact small-sample path
+    sk = P2Quantile(0.5)
+    for x in (3.0, 1.0, 2.0):
+        sk.observe(x)
+    assert sk.value() == pytest.approx(2.0)
+    assert P2Quantile(0.9).value() is None
+    with pytest.raises(ValueError):
+        P2Quantile(1.0)
+    # regression: at EXACTLY five observations the markers are still the
+    # raw sorted sample — a p90 over [1,1,1,1,100] must interpolate (~60),
+    # not collapse to the median marker (1)
+    sk = P2Quantile(0.9)
+    for x in (1.0, 1.0, 1.0, 1.0, 100.0):
+        sk.observe(x)
+    assert sk.value() == pytest.approx(np.percentile(
+        [1, 1, 1, 1, 100], 90, method="linear"))
+    assert sk.value() > 50.0
+
+
+def test_service_model_cold_start_blend():
+    """predict() slides from the caller's prior to the class sketch as
+    observations accumulate; unknown classes stay on the prior."""
+    m = ServiceTimeModel(quantile=0.9, min_samples=4)
+    assert m.predict("batch", 10.0) == 10.0          # no evidence: prior
+    m.observe("batch", 2.0)
+    # 1 of 4 samples: 25% sketch (2.0), 75% prior (10.0)
+    assert m.predict("batch", 10.0) == pytest.approx(0.25 * 2.0 + 0.75 * 10.0)
+    for _ in range(5):
+        m.observe("batch", 2.0)
+    assert m.predict("batch", 10.0) == pytest.approx(2.0)   # evidence wins
+    assert m.predict("interactive", 7.0) == 7.0      # other classes untouched
+    m.observe("batch", float("nan"))                 # garbage is ignored
+    assert m.n_obs("batch") == 6
+
+
+def test_admission_queue_priced_at_model_not_candidate():
+    """Regression (ISSUE 5 bugfix): with no completed-query history, queued
+    work ahead must be priced at the full-pass bound — not the candidate's
+    own seed-discounted service — and with a trained model, at the class
+    quantile."""
+    ac = AdmissionController()
+    load_busy = ServerLoad(now=0.0, free_slots=0, queue_ahead=2,
+                           scan_rate=1000.0, total_tuples=10_000)
+    full_pass = 10.0
+    # candidate's seed says it needs almost nothing; 3 jobs ahead (occupant
+    # + 2 queued) are full passes.  The old model priced them at the
+    # candidate's ~0s service and predicted a feasible finish.
+    slo = QuerySLO(deadline_s=5.0)
+    d = ac.decide(arrival_t=0.0, slo=slo, epsilon=0.05, load=load_busy,
+                  seed_m=5000, seed_err=0.051)
+    assert d.predicted_finish_t >= 3 * full_pass
+    assert d.action == "shed"
+    # a model trained on fast completions for this class restores admission
+    model = ServiceTimeModel(quantile=0.9, min_samples=4)
+    for _ in range(8):
+        model.observe("normal", 0.5)
+    d = AdmissionController(service_model=model).decide(
+        arrival_t=0.0, slo=slo, epsilon=0.05, load=load_busy,
+        seed_m=5000, seed_err=0.051)
+    assert d.action == "queued"
+    # the server-priced components take precedence over the per-job fallback
+    load_priced = dataclasses.replace(load_busy, slot_drain_s=0.25,
+                                      queue_ahead_service_s=1.0)
+    d = ac.decide(arrival_t=0.0, slo=slo, epsilon=0.05, load=load_priced,
+                  seed_m=5000, seed_err=0.051)
+    assert d.action == "queued"
+    assert d.predicted_finish_t < 2.0
+
+
+def test_quantile_admission_sheds_on_tail_not_mean(setup):
+    """A bimodal service history (many fast, some near-full-pass) whose p90
+    is slow: the quantile-priced wait sheds a deadline the mean would have
+    accepted — the tentpole's 'shed on a quantile, not the mean' behavior."""
+    vals, store = setup
+    cfg = EngineConfig(num_workers=2, seed=43)
+    srv = OLAWorkloadServer(store, cfg, max_slots=1,
+                            synopsis_budget_tuples=0,
+                            scheduler=WorkloadScheduler(SchedulerConfig()))
+    t_full = store.num_tuples / srv._scan_rate
+    model = srv.scheduler.service_model
+    # observed history: 9 fast batch queries, 3 slow ones -> p90 ~ slow
+    for _ in range(9):
+        model.observe("normal", 0.05 * t_full)
+    for _ in range(3):
+        model.observe("normal", 0.9 * t_full)
+    mean_service = (9 * 0.05 + 3 * 0.9) / 12 * t_full
+    srv._service_times = [0.05 * t_full] * 9 + [0.9 * t_full] * 3
+    # occupy the only slot so the candidate must wait
+    srv.submit(Query(agg="sum", expr=Linear(COEF), epsilon=1e-6,
+                     name="hold"), arrival_t=0.0)
+    srv.step()
+    # candidate: no seed (full-pass service), deadline covers service plus a
+    # mean-priced wait but not a p90-priced one
+    deadline = t_full + mean_service * 2.0
+    srv.submit(Query(agg="sum", expr=Linear(COEF), epsilon=0.05,
+                     name="edge"),
+               slo=QuerySLO(deadline_s=deadline))
+    res = {r.name: r for r in srv.run()}
+    assert res["edge"].sched_outcome == "shed"
+    srv.close()
+
+
+# ---------------------------------------------------------------------------
+# Measured-capacity fairness (ISSUE 5 tentpole)
+# ---------------------------------------------------------------------------
+
+def test_measured_slot_capacity_derivation():
+    rates = MeasuredRates(io_bytes_per_sec=5e8, cpu_tuples_per_sec=3e5,
+                          round_base_us=3000.0, round_slot_us=300.0)
+    # headroom 0.5: half the scan-side round cost worth of slot evaluation
+    assert measured_slot_capacity(rates, 0.5) == pytest.approx(5.0)
+    assert measured_slot_capacity(rates, 1.0) == pytest.approx(10.0)
+    # floor at 1.0: a lone slot always gets the full window
+    tight = dataclasses.replace(rates, round_slot_us=30000.0)
+    assert measured_slot_capacity(tight, 0.5) == 1.0
+    # fit unavailable (old calibration / degenerate slope) -> None
+    assert measured_slot_capacity(None) is None
+    assert measured_slot_capacity(
+        dataclasses.replace(rates, round_slot_us=0.0)) is None
+    assert measured_slot_capacity(
+        dataclasses.replace(rates, round_base_us=0.0)) is None
+    with pytest.raises(ValueError):
+        measured_slot_capacity(rates, headroom=0.0)
+
+
+def test_scheduler_calibrate_binds_measured_capacity():
+    rates = MeasuredRates(io_bytes_per_sec=5e8, cpu_tuples_per_sec=3e5,
+                          round_base_us=3000.0, round_slot_us=500.0)
+    sched = WorkloadScheduler(SchedulerConfig(slot_capacity="measured"))
+    assert sched.fairness.slot_capacity == math.inf    # pre-calibration
+    sched.calibrate(rates)
+    assert sched.fairness.slot_capacity == pytest.approx(3.0)
+    sched.calibrate(None)                              # lost calibration
+    assert sched.fairness.slot_capacity == math.inf
+    # hand-set capacities are never overridden
+    fixed = WorkloadScheduler(SchedulerConfig(slot_capacity=2.0))
+    fixed.calibrate(rates)
+    assert fixed.fairness.slot_capacity == 2.0
+
+
+def test_measured_capacity_drives_round_weights(setup):
+    """A server built with slot_capacity="measured" and a calibration whose
+    fit affords ~1 slot-unit must contend two residents (weights < 1),
+    where an inf capacity would give both full budget."""
+    vals, store = setup
+    cfg = EngineConfig(num_workers=2, seed=47)
+    rates = MeasuredRates(io_bytes_per_sec=5e8, cpu_tuples_per_sec=3e5,
+                          round_base_us=1000.0, round_slot_us=500.0)
+    srv = OLAWorkloadServer(
+        store, cfg, max_slots=2, synopsis_budget_tuples=0,
+        measured_rates=rates,
+        scheduler=WorkloadScheduler(SchedulerConfig(
+            slot_capacity="measured", shed_enabled=False,
+            claim_policy="schedule")))
+    assert srv.scheduler.fairness.slot_capacity == pytest.approx(1.0)
+    srv.submit(Query(agg="sum", expr=Linear(COEF), epsilon=1e-6, name="a"),
+               arrival_t=0.0, slo=QuerySLO(priority="batch"))
+    srv.submit(Query(agg="sum", expr=Linear(COEF), epsilon=1e-6, name="b"),
+               arrival_t=0.0, slo=QuerySLO(priority="interactive"))
+    for _ in range(3):
+        srv.step()
+    w = np.asarray(srv.table.weight)
+    np.testing.assert_allclose(w, [0.8, 0.2], rtol=1e-5)
+    srv.close()
+
+
+# ---------------------------------------------------------------------------
+# Preemption (ISSUE 5 tentpole + acceptance gate)
+# ---------------------------------------------------------------------------
+
+def test_select_victim_policy():
+    slos = [QuerySLO(priority="batch"), QuerySLO(priority="normal"),
+            None, QuerySLO(priority="batch")]
+    admit_t = [0.0, 1.0, 2.0, 3.0]
+    hot = QuerySLO(deadline_s=1.0, priority="interactive")
+    # lowest weight wins; among equal weights, the latest-admitted slot
+    assert select_victim(hot, slos, admit_t, [True] * 4) == 3
+    assert select_victim(hot, slos, admit_t, [True, True, True, False]) == 0
+    # equal priority is never evicted
+    norm = QuerySLO(deadline_s=1.0, priority="batch")
+    assert select_victim(norm, slos, admit_t, [True] * 4) is None
+    # no evictable slots
+    assert select_victim(hot, slos, admit_t, [False] * 4) is None
+
+
+def test_preemption_meets_deadline_only_with_it(setup):
+    """ISSUE 5 acceptance: an interactive deadline that is feasible *only*
+    with preemption — met with preempt=True, missed with the PR-4 behavior
+    (preempt=False), and the evicted batch query still completes with an
+    accurate answer, flagged sched_outcome="preempted"."""
+    vals, store = setup
+    truth = _truth_sum(vals)
+
+    def serve(preempt: bool):
+        cfg = EngineConfig(num_workers=2, seed=51)
+        srv = OLAWorkloadServer(
+            store, cfg, max_slots=1, synopsis_budget_tuples=0,
+            scheduler=WorkloadScheduler(SchedulerConfig(preempt=preempt)))
+        t_full = store.num_tuples / srv._scan_rate
+        # a near-census batch query holds the only slot...
+        srv.submit(Query(agg="sum", expr=Linear(COEF), epsilon=1e-6,
+                         name="bat"), arrival_t=0.0,
+                   slo=QuerySLO(priority="batch"))
+        # ...and an interactive query arrives whose deadline covers its own
+        # (full-pass-bounded) service but not the batch occupant's drain
+        srv.submit(Query(agg="sum", expr=Linear(COEF), epsilon=0.08,
+                         name="hot"), arrival_t=t_full * 0.01,
+                   slo=QuerySLO(deadline_s=t_full * 1.5,
+                                priority="interactive"))
+        res = {r.name: r for r in srv.run()}
+        count = srv.preempt_count
+        srv.close()
+        return res, count
+
+    res_pre, n_pre = serve(preempt=True)
+    assert n_pre == 1
+    assert res_pre["hot"].slo_met is True
+    # the victim completed: re-admitted from its snapshot, never dropped
+    bat = res_pre["bat"]
+    assert bat.sched_outcome == "preempted"
+    assert not bat.unserved and np.isfinite(bat.estimate)
+    assert bat.seeded_tuples > 0          # snapshot seeded the re-admission
+    # tuples scanned during its absence are lost to its sample (cursors
+    # never rewind), so the census retires it with a small honest CI
+    # rather than an exact answer — the estimate must still be inside it
+    assert np.isfinite(bat.err) and bat.err < 0.05
+    assert abs(bat.estimate - truth) / abs(truth) < 3 * max(bat.err, 1e-4)
+    res_fifo, n_fifo = serve(preempt=False)
+    assert n_fifo == 0
+    assert res_fifo["hot"].slo_met is False
+
+
+def test_preempt_never_evicts_for_hopeless_deadline(setup):
+    """A deadline too tight even with a slot right now must shed, not
+    evict: preemption that cannot save the candidate would only hurt the
+    victim."""
+    vals, store = setup
+    cfg = EngineConfig(num_workers=2, seed=53)
+    srv = OLAWorkloadServer(
+        store, cfg, max_slots=1, synopsis_budget_tuples=0,
+        scheduler=WorkloadScheduler(SchedulerConfig(preempt=True)))
+    t_full = store.num_tuples / srv._scan_rate
+    srv.submit(Query(agg="sum", expr=Linear(COEF), epsilon=1e-6,
+                     name="bat"), arrival_t=0.0,
+               slo=QuerySLO(priority="batch"))
+    srv.submit(Query(agg="sum", expr=Linear(COEF), epsilon=0.08,
+                     name="doomed"), arrival_t=t_full * 0.01,
+               slo=QuerySLO(deadline_s=t_full * 1e-6,
+                            priority="interactive"))
+    res = {r.name: r for r in srv.run()}
+    assert srv.preempt_count == 0
+    assert res["doomed"].sched_outcome == "shed"
+    assert res["bat"].sched_outcome == "admitted"
+    srv.close()
+
+
+# ---------------------------------------------------------------------------
+# ε-distance-weighted variance claims (ISSUE 5 tentpole)
+# ---------------------------------------------------------------------------
+
+def test_eps_distance_weighting_flips_claim_key():
+    """Two slots, two started chunks: the unweighted max key ranks chunk 0
+    first (slot 0's huge variance), but slot 0 has already met its ε target
+    (need 0) while far-from-target slot 1 cares about chunk 1 — the
+    need-weighted key must flip the order."""
+    n = 4
+    m = np.zeros((2, n))
+    ys = np.zeros((2, n))
+    yq = np.zeros((2, n))
+    m[:, [0, 1]] = 10
+    ys[0, 0], yq[0, 0] = 10.0, 200.0         # slot 0: chunk 0 variance huge
+    ys[1, 1], yq[1, 1] = 10.0, 60.0          # slot 1: chunk 1 variance modest
+    state = SimpleNamespace(
+        stats=SimpleNamespace(m=m, ysum=ys, ysq=yq),
+        scan_m=np.array([10, 10, 0, 0]), closed=np.zeros(n, bool),
+        head=2, schedule=np.array([2, 3, 0, 1], np.int32))
+    vmax = slot_chunk_variances(state)
+    assert vmax[0] > vmax[1]                 # unweighted: chunk 0 leads
+    need = np.array([0.0, 3.0])              # slot 0 done, slot 1 at 4x ε
+    vw = slot_chunk_variances(state, slot_need=need)
+    assert vw[1] > vw[0] == 0.0              # weighted: chunk 1 leads
+    out = variance_claim_order(state, np.full(n, 64), slot_need=need)
+    np.testing.assert_array_equal(out, [2, 3, 1, 0])
+    with pytest.raises(ValueError):
+        slot_chunk_variances(state, slot_need=np.ones(3))
+
+
+# ---------------------------------------------------------------------------
+# eq4_cost_terms: one cost model for plan choice and admission (ISSUE 5)
+# ---------------------------------------------------------------------------
+
+def _stub_store(rng):
+    sizes = rng.integers(8, 512, size=int(rng.integers(2, 40)))
+    cost = float(rng.uniform(10.0, 5000.0))
+
+    class Codec:
+        record_bytes = int(rng.integers(16, 256))
+
+        @staticmethod
+        def extract_cost_per_tuple():
+            return cost
+
+    return SimpleNamespace(chunk_sizes=np.asarray(sizes), codec=Codec(),
+                           num_tuples=int(sizes.sum()), num_chunks=len(sizes))
+
+
+def test_eq4_cost_terms_shared_by_selectors():
+    """Property (random-draw) test: select_plan's regime choice and the
+    admission controller's scan rate are both pure functions of the SAME
+    eq4_cost_terms output for any (store, config, rates) — a divergence
+    would admit under one cost regime and plan under another."""
+    rng = np.random.default_rng(101)
+    for trial in range(60):
+        store = _stub_store(rng)
+        cfg = EngineConfig(num_workers=int(rng.integers(1, 16)),
+                           io_bytes_per_sec=float(rng.uniform(1e6, 1e9)),
+                           cpu_tuple_ops_per_sec=float(rng.uniform(1e7, 1e10)))
+        rates = None
+        if trial % 2:                        # measured-rates branch
+            rates = MeasuredRates(
+                io_bytes_per_sec=float(rng.uniform(1e6, 1e9)),
+                cpu_tuples_per_sec=float(rng.uniform(1e3, 1e7)),
+                workers=int(rng.integers(1, 16)),
+                cost_per_tuple=float(rng.choice([0.0, rng.uniform(10, 5e3)])))
+        t_io, t_cpu = eq4_cost_terms(store, cfg, rates)
+        assert t_io > 0 and t_cpu > 0
+        # deterministic: both callers see identical terms
+        assert (t_io, t_cpu) == eq4_cost_terms(store, cfg, rates)
+        # admission's scan rate is the overlapped-pipeline reading
+        assert scan_tuples_per_s(store, cfg, rates) == pytest.approx(
+            store.num_tuples / max(t_io, t_cpu))
+        # select_plan's choice matches the regime the shared terms imply
+        q = Query(agg="sum", expr=Linear((1.0,)),
+                  epsilon=float(rng.choice([0.0, 0.05])))
+        plan = select_plan(store, cfg, q, rates=rates)
+        ratio = t_cpu / max(t_io, 1e-12)
+        if q.epsilon <= 0:
+            expect = "chunk_level"
+        elif ratio < 0.5:
+            expect = "holistic"
+        elif ratio > 2.0:
+            expect = "single_pass"
+        else:
+            expect = "resource_aware"
+        assert plan == expect, (trial, ratio)
+
+
+def test_eq4_cost_terms_rates_absent_fallback():
+    """MeasuredRates-absent case: the modeled EngineConfig constants price
+    the pass, and worker count divides only the CPU term."""
+    rng = np.random.default_rng(7)
+    store = _stub_store(rng)
+    cfg = EngineConfig(num_workers=4, io_bytes_per_sec=1e8,
+                       cpu_tuple_ops_per_sec=1e9)
+    t_io, t_cpu = eq4_cost_terms(store, cfg, None)
+    total_bytes = store.chunk_sizes.sum() * store.codec.record_bytes
+    assert t_io == pytest.approx(total_bytes / 1e8)
+    cfg2 = dataclasses.replace(cfg, num_workers=8)
+    t_io2, t_cpu2 = eq4_cost_terms(store, cfg2, None)
+    assert t_io2 == t_io
+    assert t_cpu2 == pytest.approx(t_cpu / 2)
