@@ -191,7 +191,7 @@ def run(fast: bool = False, smoke: bool = False) -> str:
     speedup = (round(pallas_bar["tuples_per_sec"] / ref_bar["tuples_per_sec"],
                      3) if pallas_bar else None)
 
-    from benchmarks.common import memory_report
+    from benchmarks.common import memory_report, runner_fingerprint
 
     io_bps = _measure_read_bw(store)
     # calibration uses the production backend for this platform: the compiled
@@ -211,6 +211,7 @@ def run(fast: bool = False, smoke: bool = False) -> str:
             interp_bar["tuples_per_sec"] / ref_bar["tuples_per_sec"], 3),
         "interpret_exempt": not on_tpu,
         "memory": memory_report(),
+        "fingerprint": runner_fingerprint(),
         "calibration": {
             "backend": cal_entry["backend"],
             "S": cal_entry["S"], "B": cal_entry["B"],

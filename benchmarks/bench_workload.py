@@ -35,6 +35,7 @@ from repro.data.generator import make_synthetic_zipf, store_dataset
 from repro.sched import QuerySLO, SchedulerConfig, WorkloadScheduler
 from repro.sched.admission import scan_tuples_per_s
 from repro.serve.ola_server import OLAWorkloadServer, poisson_workload
+from repro.serve.rollup import RollupConfig
 
 
 def build_queries(num_cols: int, count: int, seed: int) -> list[Query]:
@@ -222,6 +223,87 @@ def run_load_sweep(store, cfg, queries, max_slots: int, seed: int,
     return out
 
 
+def build_hot_cold_mix(num_cols: int, n_hot: int, repeats: int,
+                       n_cold: int, seed: int) -> tuple:
+    """Hot/cold workload for the rollup (Tier-1 answer cache) lane.
+
+    ``n_hot`` distinct SUM patterns are each repeated ``repeats`` times
+    (fresh Query objects per repeat — the cache must match on *pattern*,
+    not object identity), round-robin interleaved with ``n_cold``
+    never-repeating queries from :func:`build_queries`.  Returns
+    ``(queries, hot_count)``; the interleaving spreads a pattern's repeats
+    out in time so later repeats arrive after the promotion threshold."""
+    coeffs = tuple(1.0 / (k + 1) for k in range(num_cols))
+    rounds: list[list[Query]] = [[] for _ in range(repeats)]
+    for h in range(n_hot):
+        sel = 0.4 + 0.5 * (h / max(n_hot - 1, 1))
+        for r in range(repeats):
+            rounds[r].append(Query(
+                agg="sum", expr=Linear(coeffs),
+                pred=Range(0, 0.0, 1e8 * sel), epsilon=0.08,
+                name=f"hot{h}-r{r}"))
+    cold = build_queries(num_cols, n_cold, seed=seed + 1)
+    for i, q in enumerate(cold):
+        rounds[i % repeats].append(q)
+    queries = [q for rnd in rounds for q in rnd]
+    return queries, n_hot * repeats
+
+
+def run_rollup_lane(store, cfg, slots: int, smoke: bool = False) -> dict:
+    """Rollup-tier benchmark: a hot/cold mix served with and without the
+    Tier-1 answer cache.  Headline (and CI-gated): ``rollup_hit_rate`` —
+    the fraction of queries answered from the rollup tier without touching
+    the scan — and ``tier1_p95_latency_s``, the modeled p95 latency of
+    those answers (pure queue-to-intake time: no scan rounds)."""
+    n_hot, repeats, n_cold = (3, 6, 6) if smoke else (4, 10, 16)
+    queries, hot_count = build_hot_cold_mix(
+        store.codec.num_cols, n_hot, repeats, n_cold, seed=21)
+    arrivals = poisson_workload(queries, rate_per_model_s=2000.0, seed=22)
+
+    def _serve(rollup):
+        srv = OLAWorkloadServer(store, cfg, max_slots=slots, rollup=rollup)
+        for q, at in arrivals:
+            srv.submit(q, arrival_t=at)
+        results = srv.run()
+        assert not srv.truncated, "rollup lane did not finish"
+        return srv, results
+
+    base_srv, _ = _serve(None)
+    srv, results = _serve(RollupConfig(promote_hits=2))
+    tier1 = [r for r in results if r.sched_outcome == "tier1"]
+    t1_lat = np.asarray([r.latency for r in tier1], float)
+    out = {
+        "num_queries": len(queries),
+        "hot_queries": hot_count,
+        "hot_patterns": n_hot,
+        "tier1_answers": len(tier1),
+        "rollup_hit_rate": round(len(tier1) / len(queries), 4),
+        "tier1_p95_latency_s": (float(np.percentile(t1_lat, 95))
+                                if len(t1_lat) else None),
+        "cells": len(srv.rollup.cells),
+        "promotions": srv.rollup.promotions,
+        "demotions": srv.rollup.demotions,
+        "tuples_scanned": srv.tuples_scanned,
+        "tuples_scanned_no_rollup": base_srv.tuples_scanned,
+        "tuples_saved": base_srv.tuples_scanned - srv.tuples_scanned,
+        "rounds": srv.rounds,
+        "rounds_no_rollup": base_srv.rounds,
+        **latency_stats_rollup(results),
+    }
+    base_srv.close()
+    srv.close()
+    return out
+
+
+def latency_stats_rollup(results) -> dict:
+    from benchmarks.common import latency_stats
+
+    st = latency_stats(results)
+    return {"p50_latency_s": st["p50_latency_s"],
+            "p95_latency_s": st["p95_latency_s"],
+            "outcomes": st["outcomes"]}
+
+
 def run_sequential(store, cfg, arrivals, synopsis_budget):
     ctrl = EstimationController(store, cfg,
                                 synopsis_budget_tuples=synopsis_budget)
@@ -245,7 +327,8 @@ def run_sequential(store, cfg, arrivals, synopsis_budget):
 
 
 def run(fast: bool = False, smoke: bool = False, sched: bool = True,
-        sched_only: bool = False) -> str:
+        sched_only: bool = False, rollup: bool = True,
+        rollup_only: bool = False) -> str:
     if smoke:
         t, chunks, nq, slots = 2048, 16, 6, 4
     elif fast:
@@ -260,6 +343,8 @@ def run(fast: bool = False, smoke: bool = False, sched: bool = True,
 
     if sched_only:
         return _run_sched_only(store, cfg, queries, slots, smoke=smoke)
+    if rollup_only:
+        return _run_rollup_only(store, cfg, slots, smoke=smoke)
 
     # streaming residency first (clean device-byte measurement), then packed
     server_stream = run_server(
@@ -272,7 +357,7 @@ def run(fast: bool = False, smoke: bool = False, sched: bool = True,
     assert server_stream["tuples"] == server["tuples"], (
         server_stream["tuples"], server["tuples"])
 
-    from benchmarks.common import memory_report
+    from benchmarks.common import memory_report, runner_fingerprint
 
     sched_out = None
     if sched:
@@ -285,6 +370,13 @@ def run(fast: bool = False, smoke: bool = False, sched: bool = True,
             sched_out["load_sweep"] = run_load_sweep(
                 store, cfg, queries, max_slots=slots, seed=11)
 
+    rollup_out = None
+    if rollup and not smoke:
+        # the CI smoke run gets its rollup section from the dedicated
+        # --rollup-only step instead (keeps the base smoke lane's timings
+        # comparable with pre-rollup baselines)
+        rollup_out = run_rollup_lane(store, cfg, slots, smoke=smoke)
+
     out = {
         "num_queries": nq,
         "table_tuples": t,
@@ -295,6 +387,7 @@ def run(fast: bool = False, smoke: bool = False, sched: bool = True,
         "sequential": seq,
         "sequential_synopsis": seq_syn,
         "sched": sched_out,
+        "rollup": rollup_out,
         "tuples_saved_vs_sequential": seq["tuples"] - server["tuples"],
         "tuples_ratio_vs_sequential": round(
             server["tuples"] / max(seq["tuples"], 1), 4),
@@ -302,6 +395,7 @@ def run(fast: bool = False, smoke: bool = False, sched: bool = True,
             server_stream["device_raw_in_flight_bound"]
             / max(server["device_raw_bytes"], 1), 4),
         "memory": memory_report(),
+        "fingerprint": runner_fingerprint(),
     }
     from benchmarks.common import bench_output_paths
 
@@ -327,6 +421,8 @@ def run(fast: bool = False, smoke: bool = False, sched: bool = True,
           f"{server['device_raw_bytes']} resident")
     if sched_out is not None:
         _print_sched(sched_out)
+    if rollup_out is not None:
+        _print_rollup(rollup_out)
     return json.dumps({
         "tuples_ratio_vs_sequential": out["tuples_ratio_vs_sequential"],
         "server_tuples": server["tuples"],
@@ -348,18 +444,13 @@ def _print_sched(sched_out: dict) -> None:
                   f"shed {r['outcomes']['shed']}")
 
 
-def _run_sched_only(store, cfg, queries, slots: int, smoke: bool = True) -> str:
-    """CI scheduler smoke lane: run only the closed-loop/open-loop SLO
-    harness and merge the ``sched`` section into an existing
-    BENCH_workload.json (or write a fresh file when none exists)."""
-    from benchmarks.common import bench_output_paths
+def _merge_section(section: str, value) -> None:
+    """Merge one top-level section (plus the runner fingerprint) into the
+    existing BENCH_workload.json files — the pattern the focused CI lanes
+    (``--sched-only`` / ``--rollup-only``) use so they can update their
+    slice of the result file without re-running the whole benchmark."""
+    from benchmarks.common import bench_output_paths, runner_fingerprint
 
-    sched_out = run_sched_lanes(store, cfg, queries, rate=2000.0,
-                                max_slots=slots,
-                                concurrency=max(2, slots // 2), seed=11)
-    if not smoke:
-        sched_out["load_sweep"] = run_load_sweep(
-            store, cfg, queries, max_slots=slots, seed=11)
     for path in bench_output_paths("workload"):
         base = {}
         try:
@@ -367,10 +458,24 @@ def _run_sched_only(store, cfg, queries, slots: int, smoke: bool = True) -> str:
                 base = json.load(f)
         except (OSError, ValueError):
             pass
-        base["sched"] = sched_out
+        base[section] = value
+        base["fingerprint"] = runner_fingerprint()
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
         with open(path, "w") as f:
             json.dump(base, f, indent=1)
+
+
+def _run_sched_only(store, cfg, queries, slots: int, smoke: bool = True) -> str:
+    """CI scheduler smoke lane: run only the closed-loop/open-loop SLO
+    harness and merge the ``sched`` section into an existing
+    BENCH_workload.json (or write a fresh file when none exists)."""
+    sched_out = run_sched_lanes(store, cfg, queries, rate=2000.0,
+                                max_slots=slots,
+                                concurrency=max(2, slots // 2), seed=11)
+    if not smoke:
+        sched_out["load_sweep"] = run_load_sweep(
+            store, cfg, queries, max_slots=slots, seed=11)
+    _merge_section("sched", sched_out)
     print(f"[bench_workload] scheduler lanes over {len(queries)} queries")
     _print_sched(sched_out)
     cl = sched_out["closed_loop"]
@@ -378,6 +483,32 @@ def _run_sched_only(store, cfg, queries, slots: int, smoke: bool = True) -> str:
         "closed_loop_slo_hit_scheduled": cl["scheduled"]["slo_hit_rate"],
         "closed_loop_slo_hit_unscheduled": cl["unscheduled"]["slo_hit_rate"],
         "closed_loop_p99_scheduled": cl["scheduled"]["p99_latency_s"],
+    })
+
+
+def _print_rollup(r: dict) -> None:
+    t1p95 = r["tier1_p95_latency_s"]
+    print(f"  rollup: {r['tier1_answers']}/{r['num_queries']} answered "
+          f"tier-1 (hit rate {r['rollup_hit_rate']:.2%}), tier-1 p95 "
+          f"{t1p95 if t1p95 is None else round(t1p95, 6)}s, "
+          f"{r['tuples_saved']} tuples saved "
+          f"({r['tuples_scanned']} vs {r['tuples_scanned_no_rollup']} "
+          f"without the cache), {r['cells']} cells "
+          f"({r['promotions']} promotions)")
+
+
+def _run_rollup_only(store, cfg, slots: int, smoke: bool = True) -> str:
+    """CI rollup smoke lane: run only the hot/cold answer-cache harness and
+    merge the ``rollup`` section into an existing BENCH_workload.json."""
+    rollup_out = run_rollup_lane(store, cfg, slots, smoke=smoke)
+    _merge_section("rollup", rollup_out)
+    print(f"[bench_workload] rollup lane over {rollup_out['num_queries']} "
+          f"queries ({rollup_out['hot_patterns']} hot patterns)")
+    _print_rollup(rollup_out)
+    return json.dumps({
+        "rollup_hit_rate": rollup_out["rollup_hit_rate"],
+        "tier1_p95_latency_s": rollup_out["tier1_p95_latency_s"],
+        "tuples_saved": rollup_out["tuples_saved"],
     })
 
 
@@ -392,9 +523,16 @@ def main() -> None:
                     help="run only the scheduler lanes and merge the "
                          "'sched' section into BENCH_workload.json "
                          "(CI scheduler smoke lane)")
+    ap.add_argument("--no-rollup", action="store_true",
+                    help="skip the rollup (Tier-1 answer cache) lane")
+    ap.add_argument("--rollup-only", action="store_true",
+                    help="run only the rollup hot/cold lane and merge the "
+                         "'rollup' section into BENCH_workload.json "
+                         "(CI rollup smoke lane)")
     args = ap.parse_args()
     run(fast=args.fast, smoke=args.smoke, sched=not args.no_sched,
-        sched_only=args.sched_only)
+        sched_only=args.sched_only, rollup=not args.no_rollup,
+        rollup_only=args.rollup_only)
 
 
 if __name__ == "__main__":

@@ -25,6 +25,38 @@ def bench_output_paths(name: str) -> tuple:
             os.path.join(root, "results", f"bench_{name}.json"))
 
 
+def runner_fingerprint() -> dict:
+    """Identity of the machine/toolchain a benchmark ran on — written into
+    every BENCH_*.json so the regression gate (``scripts/
+    check_bench_regression.py``) can tell whether a committed baseline came
+    from a comparable runner.  Machine-dependent checks (RSS) are skipped on
+    mismatch instead of failing spuriously; the Eq. (4) modeled-clock
+    metrics are machine-independent and stay gated regardless."""
+    import os
+    import platform
+
+    cpu_model = None
+    try:
+        with open("/proc/cpuinfo") as f:
+            for line in f:
+                if line.lower().startswith("model name"):
+                    cpu_model = line.split(":", 1)[1].strip()
+                    break
+    except OSError:
+        pass
+    if not cpu_model:
+        cpu_model = platform.processor() or platform.machine()
+    import jax
+
+    return {
+        "cpu_model": cpu_model,
+        "cpu_count": os.cpu_count(),
+        "python": platform.python_version(),
+        "jax": jax.__version__,
+        "platform": platform.platform(),
+    }
+
+
 def memory_report() -> dict:
     """Peak host RSS + resident device bytes for BENCH_*.json outputs.
 
@@ -58,7 +90,7 @@ def latency_stats(results) -> dict:
         if results else None,
         "outcomes": {
             k: sum(r.sched_outcome == k for r in results)
-            for k in ("admitted", "queued", "preempted", "shed")},
+            for k in ("admitted", "queued", "preempted", "shed", "tier1")},
     }
     hits = [r.slo_met for r in results if r.slo_met is not None]
     out["slo_hit_rate"] = float(np.mean(hits)) if hits else None

@@ -7,29 +7,55 @@ and fails when a headline metric regresses past its tolerance band:
 
 * ``slo_hit_rate`` fields may not drop more than 2 percentage points
   (absolute) — the scheduler's core promise;
-* latency percentiles (``p95_latency_s``) may not grow more than 25% —
-  modeled-clock latencies are deterministic per seed, so the band absorbs
-  intentional policy shifts, not noise;
+* ``rollup.rollup_hit_rate`` may not drop more than 5 percentage points —
+  the Tier-1 answer cache's core promise (hot repeats answered without
+  scan rounds);
+* latency percentiles (``p95_latency_s``, ``rollup.tier1_p95_latency_s``)
+  may not grow more than 25% — modeled-clock latencies are deterministic
+  per seed, so the band absorbs intentional policy shifts, not noise.  A
+  zero baseline (tier-1 answers are scan-free, their modeled latency can
+  be exactly 0) gets a small absolute ceiling instead of the vacuous
+  ``0 * 1.25``;
 * peak-RSS fields may not grow more than 15% — real memory, the band
   absorbs runner-to-runner variance.
 
-Exit code 0 = within bands (skipped checks are reported but do not fail);
-1 = at least one regression.  ``--self-test`` proves the gate can fail: it
-seeds a synthetic regression (baseline ``slo_hit_rate`` bumped +5pp /
-latency shrunk) against the real fresh artifacts and exits 0 only if the
-comparator catches it.
+Checks are tagged ``modeled`` (deterministic Eq. (4) clock metrics —
+machine-independent, always gated) or ``machine`` (RSS — only comparable
+when the committed baseline came from a similar runner).  Every benchmark
+writes a ``fingerprint`` (CPU model, core count, python/jax versions) into
+its artifact; when the baseline's fingerprint is absent or disagrees with
+the fresh run's, ``machine`` checks are SKIPped instead of failing
+spuriously.
+
+A metric with *no baseline yet* (new benchmark field, first PR that adds
+it) is reported ``INFO`` and does not gate — adding fields must not break
+unrelated PRs.  A metric present in the baseline but missing from the
+fresh run still FAILs: silently dropping a gated metric is itself a
+regression.
+
+Exit code 0 = within bands (INFO/SKIP lines are reported but do not
+fail); 1 = at least one regression.  ``--self-test`` proves the gate can
+fail: it seeds a synthetic regression (baseline ``*_hit_rate`` bumped by
+twice its band, latency/RSS shrunk 40%) against the real fresh artifacts
+and exits 0 only if the comparator catches it.
 
 Re-baselining: benchmark results are committed at the repo root, so a PR
-that intentionally shifts a gated metric re-runs the smoke lanes locally
-(``python -m benchmarks.bench_workload --smoke --no-sched``, then
-``--sched-only``, then ``python -m benchmarks.bench_slot_kernel --smoke``)
-and commits the refreshed ``BENCH_*.json`` — the gate then compares CI's
-fresh run against the new baseline.  See README "Re-baselining benchmarks".
+that intentionally shifts a gated metric re-runs the smoke lanes and
+commits the refreshed ``BENCH_*.json`` — the gate then compares CI's
+fresh run against the new baseline.  One command does all of it::
+
+    PYTHONPATH=src python scripts/check_bench_regression.py --update-baselines
+
+(equivalent to ``python -m benchmarks.bench_workload --smoke --no-sched
+--no-rollup``, then ``--smoke --sched-only``, then ``--smoke
+--rollup-only``, then ``python -m benchmarks.bench_slot_kernel --smoke``).
+See README "Re-baselining benchmarks".
 
 Usage::
 
     python scripts/check_bench_regression.py [--baseline-ref HEAD]
         [--baseline-dir DIR] [--fresh-dir .] [--self-test]
+        [--update-baselines]
 """
 
 from __future__ import annotations
@@ -44,20 +70,63 @@ import sys
 WORKLOAD = "BENCH_workload.json"
 KERNEL = "BENCH_slot_kernel.json"
 
-# (file, dotted path, rule, tolerance).  Rules: "abs_drop" fails when
-# fresh < baseline - tol; "rel_grow" fails when fresh > baseline * (1+tol).
-# Paths missing from the baseline are skipped (older baselines predate some
-# fields); paths present in the baseline but missing from the fresh run
-# fail — a silently dropped metric is itself a regression.
+# (file, dotted path, rule, tolerance, kind).  Rules: "abs_drop" fails when
+# fresh < baseline - tol; "rel_grow" fails when fresh > baseline * (1+tol)
+# (or, for a non-positive baseline, fresh > REL_GROW_ZERO_CEIL).  Kinds:
+# "modeled" metrics come off the deterministic Eq. (4) clock and gate on
+# any runner; "machine" metrics (RSS) gate only when the baseline's runner
+# fingerprint matches the fresh run's.
 CHECKS = [
-    (WORKLOAD, "sched.open_loop.scheduled.slo_hit_rate", "abs_drop", 0.02),
-    (WORKLOAD, "sched.closed_loop.scheduled.slo_hit_rate", "abs_drop", 0.02),
-    (WORKLOAD, "sched.closed_loop.unscheduled.slo_hit_rate", "abs_drop", 0.02),
-    (WORKLOAD, "server.p95_latency_s", "rel_grow", 0.25),
-    (WORKLOAD, "server_stream.p95_latency_s", "rel_grow", 0.25),
-    (WORKLOAD, "sched.closed_loop.scheduled.p95_latency_s", "rel_grow", 0.25),
-    (WORKLOAD, "memory.peak_host_rss_bytes", "rel_grow", 0.15),
-    (KERNEL, "memory.peak_host_rss_bytes", "rel_grow", 0.15),
+    (WORKLOAD, "sched.open_loop.scheduled.slo_hit_rate", "abs_drop", 0.02, "modeled"),
+    (
+        WORKLOAD,
+        "sched.closed_loop.scheduled.slo_hit_rate",
+        "abs_drop",
+        0.02,
+        "modeled",
+    ),
+    (
+        WORKLOAD,
+        "sched.closed_loop.unscheduled.slo_hit_rate",
+        "abs_drop",
+        0.02,
+        "modeled",
+    ),
+    (WORKLOAD, "server.p95_latency_s", "rel_grow", 0.25, "modeled"),
+    (WORKLOAD, "server_stream.p95_latency_s", "rel_grow", 0.25, "modeled"),
+    (
+        WORKLOAD,
+        "sched.closed_loop.scheduled.p95_latency_s",
+        "rel_grow",
+        0.25,
+        "modeled",
+    ),
+    (WORKLOAD, "rollup.rollup_hit_rate", "abs_drop", 0.05, "modeled"),
+    (WORKLOAD, "rollup.tier1_p95_latency_s", "rel_grow", 0.25, "modeled"),
+    (WORKLOAD, "memory.peak_host_rss_bytes", "rel_grow", 0.15, "machine"),
+    (KERNEL, "memory.peak_host_rss_bytes", "rel_grow", 0.15, "machine"),
+]
+
+#: Fingerprint fields that must agree for "machine" checks to gate.
+#: ``platform`` is recorded but deliberately not compared — kernel build
+#: strings churn without changing memory behavior.
+FINGERPRINT_KEYS = ("cpu_model", "cpu_count", "python", "jax")
+
+#: Absolute latency ceiling (modeled seconds) used by "rel_grow" when the
+#: baseline is non-positive: tier-1 answers consume no scan time, so their
+#: modeled p95 can be exactly 0.0 and a relative band would be vacuous.
+#: Any fresh value under this ceiling is still "scan-free" territory (real
+#: scan latencies in the smoke lane are >= ~1e-3 s).
+REL_GROW_ZERO_CEIL = 1e-4
+
+#: The smoke lanes whose artifacts the gate checks, in run order — the
+#: single source of truth for --update-baselines (and the CI bench-smoke
+#: job mirrors the same sequence).
+SMOKE_LANES = [
+    ["-m", "benchmarks.bench_workload", "--smoke", "--no-sched", "--no-rollup"],
+    ["-m", "benchmarks.bench_workload", "--smoke", "--sched-only"],
+    ["-m", "benchmarks.bench_workload", "--smoke", "--rollup-only"],
+    ["-m", "benchmarks.bench_slot_kernel", "--smoke"],
 ]
 
 
@@ -95,20 +164,45 @@ def load_baseline(name, ref, baseline_dir):
         return None
 
 
-def compare(fresh_docs, baseline_docs, checks=CHECKS):
+def fingerprints_match(fresh_docs, baseline_docs) -> bool:
+    """True iff every artifact pair that exists on both sides carries a
+    runner fingerprint agreeing on :data:`FINGERPRINT_KEYS`.  A missing
+    fingerprint on either side counts as a mismatch — a baseline that
+    predates fingerprinting (or a doctored one) must not silently gate
+    machine-dependent bands."""
+    for name, fresh_doc in fresh_docs.items():
+        base_doc = baseline_docs.get(name)
+        if fresh_doc is None or base_doc is None:
+            continue
+        fp_fresh = fresh_doc.get("fingerprint")
+        fp_base = base_doc.get("fingerprint")
+        if not isinstance(fp_fresh, dict) or not isinstance(fp_base, dict):
+            return False
+        for key in FINGERPRINT_KEYS:
+            if fp_fresh.get(key) != fp_base.get(key):
+                return False
+    return True
+
+
+def compare(fresh_docs, baseline_docs, checks=CHECKS, same_runner=True):
     """Evaluate every check; returns (failures, lines) where ``lines`` is
-    the human-readable report and ``failures`` the failing subset."""
+    the human-readable report and ``failures`` the failing subset.
+    ``same_runner=False`` (fingerprint mismatch) turns "machine"-kind
+    checks into SKIPs — modeled-clock checks gate regardless."""
     failures, lines = [], []
-    for name, path, rule, tol in checks:
+    for name, path, rule, tol, kind in checks:
         base_doc = baseline_docs.get(name)
         fresh_doc = fresh_docs.get(name)
         label = f"{name}:{path}"
+        if kind == "machine" and not same_runner:
+            lines.append(f"SKIP  {label}: runner fingerprint mismatch")
+            continue
         if base_doc is None:
-            lines.append(f"SKIP  {label}: no baseline")
+            lines.append(f"INFO  {label}: no baseline yet")
             continue
         base = get_path(base_doc, path)
         if base is None:
-            lines.append(f"SKIP  {label}: field absent in baseline")
+            lines.append(f"INFO  {label}: no baseline yet (field absent)")
             continue
         if fresh_doc is None:
             failures.append(label)
@@ -125,10 +219,7 @@ def compare(fresh_docs, baseline_docs, checks=CHECKS):
             floor = base - tol
             detail = f"baseline {base:.4f} fresh {fresh:.4f} (floor {floor:.4f})"
         elif rule == "rel_grow":
-            if base <= 0:
-                lines.append(f"SKIP  {label}: non-positive baseline {base}")
-                continue
-            ceil = base * (1.0 + tol)
+            ceil = base * (1.0 + tol) if base > 0 else REL_GROW_ZERO_CEIL
             ok = fresh <= ceil
             detail = f"baseline {base:.6g} fresh {fresh:.6g} (ceiling {ceil:.6g})"
         else:  # pragma: no cover - spec typo guard
@@ -143,14 +234,17 @@ def compare(fresh_docs, baseline_docs, checks=CHECKS):
 
 def seeded_regression(fresh_docs):
     """Synthesize a baseline the fresh artifacts must FAIL against: every
-    gated slo_hit_rate bumped +5pp, every gated latency/RSS shrunk 40%.
-    Used by --self-test to prove the comparator has teeth."""
+    gated hit-rate bumped by *twice its band* (so the fresh value lands
+    strictly below the floor, whatever the band), every gated latency/RSS
+    shrunk 40%.  Used by --self-test to prove the comparator has teeth.
+    A zero-valued rel_grow leaf cannot be seeded (no baseline makes a
+    fresh 0 exceed a grow ceiling) and is left alone."""
     out = {}
     for name, doc in fresh_docs.items():
         if doc is None:
             continue
         doc = copy.deepcopy(doc)
-        for cname, path, rule, _tol in CHECKS:
+        for cname, path, rule, tol, _kind in CHECKS:
             if cname != name:
                 continue
             parts = path.split(".")
@@ -159,11 +253,35 @@ def seeded_regression(fresh_docs):
             if not isinstance(parent, dict) or parent.get(leaf) is None:
                 continue
             if rule == "abs_drop":
-                parent[leaf] = float(parent[leaf]) + 0.05
-            else:
+                parent[leaf] = float(parent[leaf]) + 2.0 * tol
+            elif float(parent[leaf]) > 0:
                 parent[leaf] = float(parent[leaf]) * 0.6
         out[name] = doc
     return out
+
+
+def update_baselines(runner=subprocess.run) -> int:
+    """Re-run every gated smoke lane and rewrite the BENCH_*.json
+    baselines in place (the one-command re-baselining flow).  ``runner``
+    is injectable for tests.  Returns a process exit code."""
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in [os.path.join(repo, "src"), env.get("PYTHONPATH")] if p
+    )
+    for lane in SMOKE_LANES:
+        cmd = [sys.executable, *lane]
+        print(f"[update-baselines] {' '.join(lane)}")
+        proc = runner(cmd, cwd=repo, env=env)
+        code = getattr(proc, "returncode", 0)
+        if code != 0:
+            print(f"[update-baselines] lane failed (exit {code})", file=sys.stderr)
+            return code
+    print(
+        f"[update-baselines] refreshed {WORKLOAD} and {KERNEL}; "
+        "review and `git add` them to commit the new baselines"
+    )
+    return 0
 
 
 def main(argv=None) -> int:
@@ -188,7 +306,16 @@ def main(argv=None) -> int:
         action="store_true",
         help="seed a synthetic regression and require the gate to catch it",
     )
+    ap.add_argument(
+        "--update-baselines",
+        action="store_true",
+        help="re-run all gated smoke lanes and rewrite the committed "
+        "BENCH_*.json baselines in place",
+    )
     args = ap.parse_args(argv)
+
+    if args.update_baselines:
+        return update_baselines()
 
     names = sorted({c[0] for c in CHECKS})
     fresh_docs = {}
@@ -216,7 +343,13 @@ def main(argv=None) -> int:
         name: load_baseline(name, args.baseline_ref, args.baseline_dir)
         for name in names
     }
-    failures, lines = compare(fresh_docs, baseline_docs)
+    same_runner = fingerprints_match(fresh_docs, baseline_docs)
+    if not same_runner:
+        print(
+            "runner fingerprint mismatch vs baseline: machine-dependent "
+            "checks (RSS) will be skipped; modeled-clock checks still gate"
+        )
+    failures, lines = compare(fresh_docs, baseline_docs, same_runner=same_runner)
     print("\n".join(lines))
     if failures:
         print(

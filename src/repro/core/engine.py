@@ -810,6 +810,32 @@ def slot_stats_snapshot(state: EngineState, s: int) -> dict:
     )
 
 
+def slot_stats_fold(state: EngineState, slot_ids) -> dict:
+    """Batched host-side fold-out of several slots' sufficient-statistics
+    rows: ``{s: {m, ysum, ysq, psum}}`` with the same row contract as
+    :func:`slot_stats_snapshot`.
+
+    This is the rollup tier's per-round maintenance hook (see
+    ``repro.serve.rollup``): after each engine round the server folds the
+    resident slots whose query pattern is promoted into their rollup
+    cells.  One device→host transfer per statistics array covers *all*
+    requested rows (vs one transfer per slot through repeated
+    :func:`slot_stats_snapshot` calls), and the empty-``slot_ids`` case —
+    the common one, when no promoted pattern is resident — returns without
+    touching the device at all.
+    """
+    slot_ids = list(slot_ids)
+    if not slot_ids:
+        return {}
+    stats = state.stats
+    m = np.asarray(stats.m)
+    ysum = np.asarray(stats.ysum)
+    ysq = np.asarray(stats.ysq)
+    psum = np.asarray(stats.psum)
+    return {s: dict(m=m[s], ysum=ysum[s], ysq=ysq[s], psum=psum[s])
+            for s in slot_ids}
+
+
 def slot_stats_write(stats: BiLevelStats, s: int, seed: Optional[dict],
                      n_chunks: int) -> tuple[BiLevelStats, int]:
     """Functional write of slot ``s``'s statistics row from a seed dict

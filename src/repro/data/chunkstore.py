@@ -49,6 +49,7 @@ class ChunkStore:
         self.meta: list[ChunkMeta] = []
         self._chunks: list[Optional[np.ndarray]] = []
         self._finalized = False
+        self._content_version = 0
 
     # ------------------------------------------------------------- create --
     @classmethod
@@ -71,6 +72,7 @@ class ChunkStore:
         else:
             self.meta.append(ChunkMeta(num_tuples, raw.nbytes, None))
             self._chunks.append(raw)
+        self._content_version += 1
 
     def finalize(self) -> None:
         self._finalized = True
@@ -101,6 +103,23 @@ class ChunkStore:
         return store
 
     # -------------------------------------------------------------- access --
+    @property
+    def content_version(self) -> int:
+        """Monotone counter over the store's raw content: bumped per
+        ingested chunk and by :meth:`mark_content_changed`.  Derived
+        artifacts that cache *answers* over the bytes (the rollup tier's
+        cells, see ``repro.serve.rollup``) pin the version they were built
+        over and invalidate on mismatch."""
+        return self._content_version
+
+    def mark_content_changed(self) -> None:
+        """Signal an out-of-band mutation of the raw bytes (a re-ingest,
+        an external writer touching the backing files): bumps
+        :attr:`content_version` so version-pinned caches drop their
+        state.  The store itself holds no derived aggregates — this is a
+        pure version bump."""
+        self._content_version += 1
+
     @property
     def num_chunks(self) -> int:
         return len(self.meta)

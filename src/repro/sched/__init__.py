@@ -19,6 +19,7 @@ from repro.sched.admission import (
     ADMIT,
     QUEUE,
     SHED,
+    TIER1,
     AdmissionController,
     AdmissionDecision,
     ServerLoad,
@@ -36,7 +37,7 @@ from repro.sched.service_model import P2Quantile, ServiceTimeModel
 from repro.sched.slo import NO_SLO, PRIORITY_WEIGHTS, QuerySLO
 
 __all__ = [
-    "ADMIT", "QUEUE", "SHED",
+    "ADMIT", "QUEUE", "SHED", "TIER1",
     "AdmissionController", "AdmissionDecision", "ServerLoad",
     "scan_tuples_per_s", "slot_chunk_variances", "variance_claim_order",
     "FairnessPolicy", "max_min_weights", "measured_slot_capacity",

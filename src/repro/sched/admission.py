@@ -7,6 +7,10 @@ call per submitted query, from the same Eq. (4) cost terms ``select_plan``
 uses (measured IO/CPU rates when a calibration exists, modeled constants
 otherwise):
 
+* **tier-1** — a promoted rollup cell (``repro.serve.rollup``) already
+  answers the query within its accuracy target: served from the cache
+  before the triage even prices a scan — zero scan seconds beats every
+  plan below;
 * **admit** — a slot is free and the predicted finish lands inside the
   deadline;
 * **queue** — no slot right now (or higher-priority work is ahead) but the
@@ -37,6 +41,12 @@ import math
 from typing import Optional
 
 ADMIT, QUEUE, SHED = "admitted", "queued", "shed"
+#: Tier-1 short-circuit: answered from the rollup cache, no slot, no scan
+#: rounds (see repro.serve.rollup).  Decided *before* the admit/queue/shed
+#: triage — under the Eq. (4) cost model a rollup answer that already meets
+#: the query's accuracy target costs zero scan seconds, which beats any
+#: feasible scan plan (and any wait) unconditionally.
+TIER1 = "tier1"
 
 
 def eq4_cost_terms(store, config, rates=None) -> tuple:
@@ -143,10 +153,27 @@ class AdmissionController:
 
     def decide(self, *, arrival_t: float, slo, epsilon: float,
                load: ServerLoad, seed_m: int = 0,
-               seed_err: float = math.inf) -> AdmissionDecision:
+               seed_err: float = math.inf,
+               rollup_err: float = math.inf) -> AdmissionDecision:
         """One admission call.  ``seed_m``/``seed_err`` describe the best
         synopsis-seeded answer currently available for the query (0/inf when
-        the synopsis cannot serve it)."""
+        the synopsis cannot serve it).
+
+        ``rollup_err`` is the error ratio of the Tier-1 rollup answer for
+        the query's pattern (``inf`` when no promoted cell serves it; the
+        caller passes 0.0 when a HAVING verdict is already decided).  The
+        Tier-1 short-circuit runs *before* the admit/queue/shed triage:
+        when the rollup answer meets ε, Eq. (4) routing is trivial — its
+        scan cost is zero, so no admit/queue plan can beat it.  When it
+        does not meet ε the query still benefits: the caller feeds the
+        cell as ``seed_m``/``seed_err`` and the CLT extrapolation prices
+        the *remaining* scan, not a cold start.
+        """
+        if rollup_err <= epsilon:
+            return AdmissionDecision(
+                TIER1, 0.0, max(load.now, arrival_t),
+                f"rollup answer meets target (err {rollup_err:.3g} <= "
+                f"eps {epsilon:.3g}) at zero scan cost")
         free = load.free_slots > 0 and load.queue_ahead == 0
         need = self.required_tuples(seed_m, seed_err, epsilon,
                                     load.total_tuples)

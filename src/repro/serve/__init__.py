@@ -1,5 +1,6 @@
-"""Serving plane: batched decode engine over the model zoo, plus the OLA
-workload server (shared-scan multi-query serving)."""
+"""Serving plane: batched decode engine over the model zoo, the OLA
+workload server (shared-scan multi-query serving), and the Tier-1 rollup
+answer cache that fronts it."""
 
 from repro.serve.engine import ServeEngine
 from repro.serve.ola_server import (
@@ -9,6 +10,8 @@ from repro.serve.ola_server import (
     poisson_workload,
     select_plan,
 )
+from repro.serve.rollup import RollupConfig, RollupTier, pattern_key
 
 __all__ = ["ServeEngine", "OLAWorkloadServer", "WorkloadQuery",
-           "WorkloadResult", "poisson_workload", "select_plan"]
+           "WorkloadResult", "poisson_workload", "select_plan",
+           "RollupConfig", "RollupTier", "pattern_key"]

@@ -47,6 +47,7 @@ from repro.core.engine import (
     IDLE,
     EngineConfig,
     SlotOLAEngine,
+    slot_stats_fold,
     slot_stats_snapshot,
     slot_stats_write,
 )
@@ -62,6 +63,7 @@ from repro.core.synopsis import BiLevelSynopsis
 from repro.core import estimators as est
 from repro.sched.admission import (
     SHED,
+    TIER1,
     ServerLoad,
     eq4_cost_terms,
     scan_tuples_per_s,
@@ -69,6 +71,7 @@ from repro.sched.admission import (
 from repro.sched.preempt import select_victim
 from repro.sched.scheduler import SchedulerConfig, WorkloadScheduler
 from repro.sched.slo import NO_SLO, QuerySLO
+from repro.serve.rollup import RollupConfig, RollupTier, pattern_key
 
 
 @dataclasses.dataclass(frozen=True)
@@ -214,6 +217,8 @@ class WorkloadQuery:
     queued: bool = False            # waited >= one admission pass for a slot
     preempted: bool = False         # evicted mid-residence at least once
     saved_stats: Optional[dict] = None  # eviction snapshot: re-admission seed
+    key: Optional[tuple] = None     # rollup pattern key (None: not cacheable
+                                    # or the server runs without a rollup tier)
 
 
 @dataclasses.dataclass
@@ -237,9 +242,11 @@ class WorkloadResult:
                                     # tuple (no synopsis seed): estimate is NaN
     # scheduler outcome: "admitted" (straight into a slot), "queued" (waited
     # for one), "preempted" (evicted mid-residence for a deadline query and
-    # completed after re-queueing — never dropped), or "shed" (never held a
-    # slot — answered best-effort from the synopsis, or unserved).  Lets
-    # benchmarks separate scan-served answers from degraded ones.
+    # completed after re-queueing — never dropped), "shed" (never held a
+    # slot — answered best-effort from the synopsis, or unserved), or
+    # "tier1" (answered from the rollup cache: no slot, no scan rounds,
+    # plan="rollup").  Lets benchmarks separate scan-served answers from
+    # cached and degraded ones.
     sched_outcome: str = "admitted"
     queue_wait: float = 0.0         # t_admit - t_submit (slot wait, modeled s)
     slo_met: Optional[bool] = None  # None when the query carried no SLO
@@ -272,7 +279,7 @@ class OLAWorkloadServer:
                  mesh=None, engine=None,
                  measured_rates: Optional[MeasuredRates] = None,
                  rates_path: Optional[str] = None,
-                 scheduler=None):
+                 scheduler=None, rollup=None):
         """``engine`` may be a pre-built :class:`SlotOLAEngine` or
         :class:`~repro.core.engine_spmd.SlotSPMDEngine` (the server only uses
         the shared round-step protocol); with ``mesh`` and no ``engine`` a
@@ -289,6 +296,15 @@ class OLAWorkloadServer:
         keeps the historic admit-or-FIFO-queue behavior; the *neutral*
         scheduler configuration (``repro.sched.NEUTRAL``) reproduces it
         bit-exactly (gated in tests/test_sched.py).
+
+        ``rollup`` — a :class:`~repro.serve.rollup.RollupConfig` (or a
+        pre-built :class:`~repro.serve.rollup.RollupTier`) turns on the
+        Tier-1 answer cache: hot query patterns mined from the completed
+        log are promoted to rollup cells maintained incrementally from the
+        scan's per-chunk sufficient statistics, and repeats are answered
+        from the cell — no slot, no scan rounds — whenever the cached
+        answer meets their accuracy target.  ``None`` (default) keeps
+        every query on the Tier-2 scan path.
         """
         if engine is not None:
             if engine.store is not store:
@@ -350,10 +366,16 @@ class OLAWorkloadServer:
             # slot_capacity="measured": derive the fairness capacity from
             # the loaded calibration's round-cost fit
             self.scheduler.calibrate(self.rates)
+        if isinstance(rollup, RollupConfig):
+            rollup = RollupTier(store, rollup)
+        self.rollup: Optional[RollupTier] = rollup
+        if self.rollup is not None and self.rollup.store is not store:
+            raise ValueError("rollup tier was built over a different store")
         self.shed_count = 0
         self.preempt_count = 0
         self._service_times: list[float] = []   # scan service per retirement
         self._preview_cache: dict[int, tuple] = {}  # per intake pass, by qid
+        self._rollup_cache: dict[int, tuple] = {}   # per intake pass, by qid
         self._cur_weights = np.ones(max_slots, np.float32)
         self._last_err: Optional[np.ndarray] = None  # (S,) last round report
         self._scan_rate = scan_tuples_per_s(store, self.config,
@@ -411,8 +433,10 @@ class OLAWorkloadServer:
         qid = self._next_qid
         self._next_qid += 1
         at = self.t_model if arrival_t is None else float(arrival_t)
+        key = (pattern_key(query, self.store.codec.num_cols)
+               if self.rollup is not None else None)
         self.queue.append(WorkloadQuery(qid=qid, query=query, arrival_t=at,
-                                        plan=plan, row=row, slo=slo))
+                                        plan=plan, row=row, slo=slo, key=key))
         self.queue.sort(key=lambda wq: (wq.arrival_t, wq.qid))
         return qid
 
@@ -432,10 +456,21 @@ class OLAWorkloadServer:
             self.state, np.asarray(self.state.schedule), variances)
 
     def _admit_ready(self) -> None:
+        if self.rollup is not None:
+            self.rollup.maintain(self.t_model)
+            self._rollup_cache = {}
         if self.scheduler is not None:
             self._admit_ready_scheduled()
             return
         now = self.t_model
+        if self.rollup is not None:
+            # Tier-1 short-circuit: a rollup-served query needs no slot, so
+            # every ready hit is answered now — even when the slot table is
+            # full and even behind other ready work (it consumes nothing
+            # the others are waiting for)
+            for wq in [w for w in self.queue if w.arrival_t <= now]:
+                if self._try_tier1(wq):
+                    self.queue.remove(wq)
         while self.queue and self.queue[0].arrival_t <= now:
             free = self._free_slots()   # recompute: seed-answered slots refree
             if not free:
@@ -490,6 +525,11 @@ class OLAWorkloadServer:
                     restart = True
                     break
                 decision = self._decide_admission(wq, len(free), ahead)
+                if decision.action == TIER1 and self._try_tier1(wq):
+                    # rollup cache answered: no slot consumed, the slot
+                    # picture is unchanged — no restart needed
+                    self.queue.remove(wq)
+                    continue
                 if not free and self._try_preempt(wq, decision):
                     # a victim was evicted exactly because the deadline fits
                     # if the query runs now — the freed slot is the
@@ -553,9 +593,85 @@ class OLAWorkloadServer:
     def _cached_preview(self, wq: WorkloadQuery) -> tuple:
         out = self._preview_cache.get(wq.qid)
         if out is None:
-            out = self._seed_answer(wq.query, seed=wq.saved_stats)
+            out = self._seed_answer(wq.query, seed=wq.saved_stats, key=wq.key)
             self._preview_cache[wq.qid] = out
         return out
+
+    def _rollup_answer(self, wq: WorkloadQuery) -> Optional[tuple]:
+        """Tier-1 answer preview from the query's promoted rollup cell:
+        ``(m, estimate, lo, hi, err, having_decision)`` — exact over the
+        cell's fully-covered chunks (the FPC zeroes their variance), CI
+        over the remainder — or None when no cell serves the pattern.
+        Cached per intake pass (cells only change between rounds)."""
+        if self.rollup is None or wq.key is None:
+            return None
+        cell = self.rollup.get(wq.key)
+        if cell is None or int(cell.m.sum()) == 0:
+            return None
+        out = self._rollup_cache.get(wq.qid)
+        if out is None:
+            m, est_v, lo, hi, err = self._seed_answer(
+                wq.query, seed=cell.seed_dict())
+            q = wq.query
+            decision = -1
+            if q.having is not None and m > 0:
+                decision = int(est.having_decision(lo, hi, q.having.op,
+                                                   q.having.threshold))
+            out = (m, est_v, lo, hi, err, decision)
+            self._rollup_cache[wq.qid] = out
+        return out
+
+    def _try_tier1(self, wq: WorkloadQuery) -> bool:
+        """Serve ``wq`` from the rollup cache iff the cached answer meets
+        its accuracy ask (the slot-effective ε, or a decided HAVING).
+        Tier-1 answers hold no slot and consume zero scan rounds."""
+        ans = self._rollup_answer(wq)
+        if ans is None:
+            return False
+        m, est_v, lo, hi, err, decision = ans
+        if m == 0:
+            return False
+        eps_eff = wq.query.epsilon
+        if self.scheduler is not None:
+            eps_eff = self.scheduler.effective_epsilon(wq.query, wq.slo,
+                                                       est_v)
+        if err > eps_eff and decision == -1:
+            return False
+        now = self.t_model
+        cell = self.rollup.get(wq.key)
+        cell.touch(now)
+        self.rollup.tier1_hits += 1
+        self.rollup.observe(wq.query, wq.key, now)  # hits keep patterns hot
+        latency = now - wq.arrival_t
+        slo_met = None
+        if wq.slo is not None:
+            slo_met = wq.slo.met(latency, (hi - lo) / 2.0)
+        self.results.append(WorkloadResult(
+            qid=wq.qid, name=wq.query.name, estimate=est_v, lo=lo, hi=hi,
+            err=err, decision=decision, plan="rollup",
+            t_submit=wq.arrival_t, t_admit=now, t_done=now,
+            seeded_tuples=m, tuples_seen=m, rounds_resident=0,
+            sched_outcome="tier1", queue_wait=latency, slo_met=slo_met,
+            priority=(wq.slo or NO_SLO).priority))
+        return True
+
+    def _rollup_on_retire(self, wq: WorkloadQuery, s: Optional[int],
+                          valid: bool) -> None:
+        """Completion hook for the rollup miner: log the pattern (promoting
+        it when the workload has shown it hot) and, when the query retired
+        from a slot with real statistics, fold that final row into its
+        cell.  A newly promoted cell is birth-seeded from the synopsis so
+        the *next* repeat already starts warm even if no slot runs the
+        pattern again before then."""
+        if self.rollup is None or wq.key is None:
+            return
+        promoted = self.rollup.observe(wq.query, wq.key, self.t_model)
+        if promoted is not None and self.synopsis is not None:
+            seed = self.synopsis.seed_slot(wq.query)
+            if seed is not None:
+                promoted.fold(seed)
+        if s is not None and valid:
+            self.rollup.fold(wq.key, slot_stats_snapshot(self.state, s))
 
     def _observed_mean_service_s(self) -> Optional[float]:
         """Mean scan service over completed queries; None before the first
@@ -599,8 +715,19 @@ class OLAWorkloadServer:
     def _decide_admission(self, wq: WorkloadQuery, n_free: int, ahead: list):
         slo = wq.slo or NO_SLO
         seed_m, seed_err, seed_est = 0, float("inf"), None
+        rollup_err = float("inf")
+        rollup = self._rollup_answer(wq)
+        if rollup is not None:
+            r_m, r_est, _, _, r_err, r_dec = rollup
+            # Tier-1 routing input: a decided HAVING is as good as err 0;
+            # the cell also doubles as the feasibility seed (Eq. (4) prices
+            # only the *remaining* scan when the cache falls short of ε)
+            rollup_err = 0.0 if r_dec != -1 else r_err
+            seed_m, seed_est, seed_err = r_m, r_est, r_err
         if self._wants_preview(wq):     # feasibility needs the seed preview
-            seed_m, seed_est, _, _, seed_err = self._cached_preview(wq)
+            m, e, _, _, err = self._cached_preview(wq)
+            if m > seed_m:
+                seed_m, seed_est, seed_err = m, e, err
         drain, ahead_s = self._wait_components(ahead)
         load = ServerLoad(
             now=self.t_model, free_slots=n_free, queue_ahead=len(ahead),
@@ -614,21 +741,29 @@ class OLAWorkloadServer:
         eps_eff = self.scheduler.effective_epsilon(wq.query, wq.slo, seed_est)
         return self.scheduler.admission.decide(
             arrival_t=wq.arrival_t, slo=slo, epsilon=eps_eff,
-            load=load, seed_m=seed_m, seed_err=seed_err)
+            load=load, seed_m=seed_m, seed_err=seed_err,
+            rollup_err=rollup_err)
 
-    def _seed_answer(self, query: Query, seed: Optional[dict] = None) -> tuple:
+    def _seed_answer(self, query: Query, seed: Optional[dict] = None,
+                     key: Optional[tuple] = None) -> tuple:
         """Best scan-free answer available right now: ``(m, estimate, lo,
         hi, err)`` — ``(0, nan, nan, nan, inf)`` when nothing can serve the
-        query.  ``seed`` overrides the synopsis lookup (a preempted query's
+        query.  ``seed`` overrides the lookups (a preempted query's
         statistics snapshot is a richer seed than the synopsis); otherwise
-        assumes the caller refreshed the synopsis (the scheduled intake
-        pass does, once).  Single construction shared by admission
-        feasibility, the effective-ε translation, and shedding."""
+        the synopsis row and — when ``key`` names a promoted rollup cell —
+        the cell row compete by sample size, and the caller is assumed to
+        have refreshed the synopsis (the scheduled intake pass does,
+        once).  Single construction shared by admission feasibility, the
+        effective-ε translation, shedding, and the rollup preview."""
         if seed is None:
-            if self.synopsis is None:
-                return (0, float("nan"), float("nan"), float("nan"),
-                        float("inf"))
-            seed = self.synopsis.seed_slot(query)
+            if self.synopsis is not None:
+                seed = self.synopsis.seed_slot(query)
+            if self.rollup is not None and key is not None:
+                cell = self.rollup.get(key)
+                if cell is not None and (
+                        seed is None or int(cell.m.sum())
+                        > int(np.asarray(seed["m"]).sum())):
+                    seed = cell.seed_dict()
         if seed is None or int(seed["m"].sum()) == 0:
             return 0, float("nan"), float("nan"), float("nan"), float("inf")
         stats_row = self.state.stats._replace(
@@ -674,6 +809,9 @@ class OLAWorkloadServer:
             queue_wait=now - wq.arrival_t, slo_met=slo_met,
             priority=(wq.slo or NO_SLO).priority))
         self.shed_count += 1
+        # a shed still evidences demand for the pattern: mine it (no fold —
+        # the query never held a slot, there are no statistics to merge)
+        self._rollup_on_retire(wq, None, False)
 
     def _admit(self, s: int, wq: WorkloadQuery) -> None:
         plan = wq.plan or select_plan(self.store, self.config, wq.query,
@@ -688,6 +826,18 @@ class OLAWorkloadServer:
             seed = wq.saved_stats
         else:
             seed = self.synopsis.seed_slot(wq.query) if self.synopsis else None
+            if self.rollup is not None and wq.key is not None:
+                cell = self.rollup.get(wq.key)
+                if cell is not None and (
+                        seed is None or int(cell.m.sum())
+                        > int(np.asarray(seed["m"]).sum())):
+                    # Tier-2 with a Tier-1 discount: the cell alone missed
+                    # the target, but it out-samples the synopsis — the
+                    # slot starts from the cached partial aggregate and
+                    # scans only the remainder (both are permutation-window
+                    # samples inside the scanned prefix, so future round
+                    # deltas compose without overlap)
+                    seed = cell.seed_dict()
         if (self.scheduler is not None and wq.slo is not None
                 and np.isfinite(wq.slo.target_halfwidth)):
             # absolute CI half-width target -> effective relative ε for the
@@ -744,6 +894,7 @@ class OLAWorkloadServer:
                 q.having.threshold))
         if e > q.epsilon and decision == -1:
             return False
+        self._rollup_on_retire(wq, s, True)
         lo_f, hi_f = float(np.asarray(lo)[0]), float(np.asarray(hi)[0])
         slo_met = None
         if wq.slo is not None:
@@ -839,6 +990,7 @@ class OLAWorkloadServer:
             if self.scheduler is not None:
                 # feed the per-class service-time sketch (quantile admission)
                 self.scheduler.observe_service(wq.slo, service)
+            self._rollup_on_retire(wq, s, not bad)
             self._release(s)
 
     def _any_active(self) -> bool:
@@ -914,6 +1066,16 @@ class OLAWorkloadServer:
             self.state, self.table, self.engine.round_data(self.state),
             self.engine.speeds)
         self.rounds += 1
+        if self.rollup is not None and self.rollup.cells:
+            # incremental maintenance: resident slots running a promoted
+            # pattern fold their round-accumulated stats into the cell —
+            # one batched device→host copy for all such slots (near-free;
+            # empty in the no-promoted-occupant common case)
+            ids = [s for s in range(self.max_slots)
+                   if self.slot_wq[s] is not None
+                   and self.rollup.get(self.slot_wq[s].key) is not None]
+            for s, row in slot_stats_fold(self.state, ids).items():
+                self.rollup.fold(self.slot_wq[s].key, row)
         if self.scheduler is not None:
             # next round's ε-distance claim weights read this report
             self._last_err = np.asarray(rep.err, float)

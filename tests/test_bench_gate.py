@@ -2,10 +2,12 @@
 
 The gate compares fresh smoke-lane BENCH_*.json artifacts against committed
 baselines with per-field tolerance bands.  These tests drive the comparator
-on synthetic fixtures (no benchmark run needed) and pin the ISSUE 5
-acceptance behavior: a seeded regression fails the gate, identical
-artifacts pass it, and a metric silently *disappearing* from the fresh run
-is itself a failure.
+on synthetic fixtures (no benchmark run needed) and pin the acceptance
+behavior: a seeded regression fails the gate, identical artifacts pass it,
+a metric silently *disappearing* from the fresh run is itself a failure, a
+metric with no baseline yet is informational (adding benchmark fields must
+not break unrelated PRs), and machine-dependent bands (RSS) are skipped —
+not failed — when the baseline came from a different runner.
 """
 
 import copy
@@ -22,6 +24,9 @@ _spec = importlib.util.spec_from_file_location(
 gate = importlib.util.module_from_spec(_spec)
 _spec.loader.exec_module(gate)
 
+_FP = {"cpu_model": "TestCPU v1", "cpu_count": 8,
+       "python": "3.11.0", "jax": "0.4.0", "platform": "test"}
+
 
 def _fresh_docs():
     return {
@@ -36,10 +41,14 @@ def _fresh_docs():
                     "unscheduled": {"slo_hit_rate": 0.8},
                 },
             },
+            "rollup": {"rollup_hit_rate": 0.5,
+                       "tier1_p95_latency_s": 0.001},
             "memory": {"peak_host_rss_bytes": 1_000_000},
+            "fingerprint": dict(_FP),
         },
         "BENCH_slot_kernel.json": {
             "memory": {"peak_host_rss_bytes": 500_000},
+            "fingerprint": dict(_FP),
         },
     }
 
@@ -79,37 +88,144 @@ def test_latency_and_rss_bands_are_relative():
         "BENCH_slot_kernel.json:memory.peak_host_rss_bytes"}
 
 
-def test_missing_fresh_metric_fails_missing_baseline_skips():
+def test_rollup_bands():
+    """ISSUE 6: rollup_hit_rate gates at -5pp absolute, tier-1 p95 latency
+    at +25% relative — against the rollup smoke-lane baselines."""
     fresh = _fresh_docs()
     base = copy.deepcopy(fresh)
-    # baseline predates the field -> skip, not fail
+    roll = fresh["BENCH_workload.json"]["rollup"]
+    roll["rollup_hit_rate"] = 0.5 - 0.049           # inside the band
+    roll["tier1_p95_latency_s"] = 0.001 * 1.24
+    assert gate.compare(fresh, base)[0] == []
+    roll["rollup_hit_rate"] = 0.5 - 0.051           # outside
+    roll["tier1_p95_latency_s"] = 0.001 * 1.26
+    failures, _ = gate.compare(fresh, base)
+    assert set(failures) == {
+        "BENCH_workload.json:rollup.rollup_hit_rate",
+        "BENCH_workload.json:rollup.tier1_p95_latency_s"}
+
+
+def test_zero_tier1_latency_baseline_gets_absolute_ceiling():
+    """Tier-1 answers are scan-free, so their modeled p95 can be exactly 0;
+    a relative band over 0 would be vacuous (or reject any change).  The
+    gate substitutes a small absolute ceiling."""
+    fresh = _fresh_docs()
+    base = copy.deepcopy(fresh)
+    base["BENCH_workload.json"]["rollup"]["tier1_p95_latency_s"] = 0.0
+    fresh["BENCH_workload.json"]["rollup"]["tier1_p95_latency_s"] = 0.0
+    assert gate.compare(fresh, base)[0] == []
+    near_free = gate.REL_GROW_ZERO_CEIL * 0.5
+    fresh["BENCH_workload.json"]["rollup"]["tier1_p95_latency_s"] = near_free
+    assert gate.compare(fresh, base)[0] == []
+    scan_like = gate.REL_GROW_ZERO_CEIL * 20
+    fresh["BENCH_workload.json"]["rollup"]["tier1_p95_latency_s"] = scan_like
+    failures, _ = gate.compare(fresh, base)
+    assert failures == ["BENCH_workload.json:rollup.tier1_p95_latency_s"]
+
+
+def test_missing_fresh_metric_fails_missing_baseline_is_informational():
+    fresh = _fresh_docs()
+    base = copy.deepcopy(fresh)
+    # baseline predates the field -> informational, not fail
     del base["BENCH_workload.json"]["sched"]["open_loop"]
     failures, lines = gate.compare(fresh, base)
     assert failures == []
-    assert any(line.startswith("SKIP") and "open_loop" in line
+    assert any(line.startswith("INFO") and "open_loop" in line
                for line in lines)
     # fresh run dropped a gated field -> fail
     del fresh["BENCH_workload.json"]["memory"]
     failures, _ = gate.compare(fresh, copy.deepcopy(_fresh_docs()))
     assert "BENCH_workload.json:memory.peak_host_rss_bytes" in failures
-    # no baseline file at all -> all its checks skip
+    # no baseline file at all -> all its checks informational
     failures, lines = gate.compare(_fresh_docs(), {})
     assert failures == []
-    assert all(line.startswith("SKIP") for line in lines)
+    assert all(line.startswith("INFO") for line in lines)
+
+
+def test_new_metric_without_baseline_does_not_gate():
+    """Adding a benchmark field (a new gated metric whose baseline does not
+    exist yet) must not fail unrelated PRs — it reports INFO until a
+    baseline lands."""
+    fresh = _fresh_docs()
+    base = copy.deepcopy(fresh)
+    del base["BENCH_workload.json"]["rollup"]    # baseline predates rollup
+    failures, lines = gate.compare(fresh, base)
+    assert failures == []
+    info = [line for line in lines
+            if line.startswith("INFO") and "rollup" in line]
+    assert len(info) == 2                        # both rollup checks
+
+
+def test_fingerprint_mismatch_skips_machine_checks_only():
+    fresh = _fresh_docs()
+    base = copy.deepcopy(fresh)
+    # a memory regression on a *different* runner: not comparable -> SKIP
+    fresh["BENCH_workload.json"]["memory"]["peak_host_rss_bytes"] = 10_000_000
+    failures, lines = gate.compare(fresh, base, same_runner=False)
+    assert failures == []
+    skips = [line for line in lines if line.startswith("SKIP")]
+    assert len(skips) == 2 and all("fingerprint" in s for s in skips)
+    # ...but modeled-clock metrics still gate on any runner
+    fresh["BENCH_workload.json"]["rollup"]["rollup_hit_rate"] = 0.1
+    failures, _ = gate.compare(fresh, base, same_runner=False)
+    assert failures == ["BENCH_workload.json:rollup.rollup_hit_rate"]
+
+
+def test_fingerprints_match():
+    fresh = _fresh_docs()
+    base = copy.deepcopy(fresh)
+    assert gate.fingerprints_match(fresh, base)
+    # platform churn alone is not a mismatch (not in FINGERPRINT_KEYS)
+    base["BENCH_workload.json"]["fingerprint"]["platform"] = "other"
+    assert gate.fingerprints_match(fresh, base)
+    base["BENCH_workload.json"]["fingerprint"]["cpu_model"] = "OtherCPU"
+    assert not gate.fingerprints_match(fresh, base)
+    # a baseline with no fingerprint at all is not comparable
+    base = copy.deepcopy(fresh)
+    del base["BENCH_slot_kernel.json"]["fingerprint"]
+    assert not gate.fingerprints_match(fresh, base)
+    # absent docs on either side don't block the comparison
+    assert gate.fingerprints_match(fresh, {"BENCH_workload.json":
+                                           fresh["BENCH_workload.json"]})
 
 
 def test_seeded_regression_is_caught():
-    """ISSUE 5 acceptance: a +5pp slo_hit_rate baseline bump (and shrunk
-    latency/RSS baselines) must fail the gate."""
+    """A seeded baseline bump (hit-rates +2x band, latency/RSS shrunk) must
+    fail the gate — including the rollup hit-rate band, whose tolerance
+    (5pp) is wider than the old flat +5pp seed bump."""
     fresh = _fresh_docs()
     seeded = gate.seeded_regression(fresh)
     failures, _ = gate.compare(fresh, seeded)
     assert failures, "the gate passed a seeded regression"
     assert any("slo_hit_rate" in f for f in failures)
+    assert any("rollup_hit_rate" in f for f in failures)
+    assert any("tier1_p95_latency_s" in f for f in failures)
     assert any("peak_host_rss_bytes" in f for f in failures)
 
 
-@pytest.mark.parametrize("mode", ["pass", "fail", "self-test"])
+def test_update_baselines_runs_all_smoke_lanes():
+    calls = []
+
+    class _Proc:
+        returncode = 0
+
+    def fake_runner(cmd, cwd=None, env=None):
+        calls.append((cmd, cwd, env))
+        return _Proc()
+
+    rc = gate.update_baselines(runner=fake_runner)
+    assert rc == 0
+    assert len(calls) == len(gate.SMOKE_LANES)
+    for (cmd, cwd, env), lane in zip(calls, gate.SMOKE_LANES):
+        assert cmd[1:] == lane
+        assert os.path.isdir(cwd)
+        assert "src" in env["PYTHONPATH"]
+    # a failing lane aborts with its exit code
+    _Proc.returncode = 3
+    assert gate.update_baselines(runner=fake_runner) == 3
+
+
+@pytest.mark.parametrize("mode", ["pass", "fail", "self-test", "other-runner"])
 def test_main_exit_codes(tmp_path, mode):
     fresh = _fresh_docs()
     fresh_dir = tmp_path / "fresh"
@@ -120,6 +236,10 @@ def test_main_exit_codes(tmp_path, mode):
     if mode == "fail":
         base["BENCH_workload.json"]["sched"]["closed_loop"]["scheduled"][
             "slo_hit_rate"] = 0.95
+    if mode == "other-runner":
+        # RSS regressed on a baseline from a different machine: skipped
+        base["BENCH_workload.json"]["fingerprint"]["cpu_model"] = "OtherCPU"
+        fresh["BENCH_workload.json"]["memory"]["peak_host_rss_bytes"] = 10**9
     for name, doc in fresh.items():
         (fresh_dir / name).write_text(json.dumps(doc))
     for name, doc in base.items():
