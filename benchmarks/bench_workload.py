@@ -304,6 +304,147 @@ def latency_stats_rollup(results) -> dict:
             "outcomes": st["outcomes"]}
 
 
+def run_chaos_lane(store, cfg, slots: int, smoke: bool = False) -> dict:
+    """Chaos benchmark: the SLO-tagged scheduled workload served under
+    injected chunk-read faults (``repro.data.faults.FaultInjector``, fixed
+    seed — deterministic run to run).
+
+    Two fault families, matching the fault-tolerant scan plane's two
+    recovery tiers:
+
+    * **transient sweep** — every chunk read fails ``transient_fails``
+      times with probability ``rate`` before healing; the retry policy
+      must absorb all of them, so every lane asserts the estimates are
+      *bit-exact* against the fault-free run and no result is degraded.
+      ``recovery_overhead_pct`` is the retried-read overhead (retries per
+      hundred chunk reads — the modeled clock is retry-invariant, so the
+      extra reads are the honest cost signal);
+    * **lost chunk** — one chunk is permanently unreadable: the scan
+      quarantines it, every affected query completes ``degraded=True``
+      over the surviving population, and the lane records the degraded
+      rate and that the workload finished without stalling.
+
+    Stream residency throughout: faults surface at the read path (packed
+    residency reads raw bytes once at ingest, before any fault window).
+    """
+    from repro.core.engine import SlotOLAEngine
+    from repro.data.faults import FaultConfig, FaultInjector, RetryPolicy
+
+    cfg = dataclasses.replace(cfg, residency="stream")
+    nq = 6 if smoke else 16
+    queries = build_queries(8, nq, seed=31)
+    t_full = float(store.num_tuples) / scan_tuples_per_s(store, cfg)
+    slos = attach_slos(queries, t_full, seed=32)
+    arrivals = poisson_workload(queries, rate_per_model_s=2000.0, seed=33)
+    items = [(q, at, slo) for (q, at), slo in zip(arrivals, slos)]
+    sched_cfg = SchedulerConfig(slot_capacity=max(2.0, slots / 2),
+                                preempt=True)
+    # seed chosen so the 10% lane injects on >= 1 chunk even in the
+    # 16-chunk smoke store — a zero-retry lane would gate the recovery
+    # overhead band on a degenerate 0.0 baseline
+    injector_seed = 7
+
+    def _serve(fault_cfg, max_attempts: int = 4):
+        fstore = (FaultInjector(store, fault_cfg)
+                  if fault_cfg is not None else store)
+        engine = SlotOLAEngine(fstore, slots, cfg)
+        # benchmark clock is modeled: don't wall-sleep through backoff
+        engine.pipeline.retry = RetryPolicy(max_attempts=max_attempts,
+                                            sleep=lambda s: None)
+        srv = OLAWorkloadServer(fstore, cfg, engine=engine,
+                                synopsis_budget_tuples=0,
+                                scheduler=WorkloadScheduler(sched_cfg))
+        for q, at, slo in items:
+            srv.submit(q, arrival_t=at, slo=slo)
+        results = srv.run()
+        assert not srv.truncated, "chaos lane did not finish"
+        pf = srv.engine.pipeline
+        slo_res = [r.slo_met for r in results if r.slo_met is not None]
+        out = {
+            "completed": len(results),
+            "degraded_rate": round(
+                sum(r.degraded for r in results) / max(len(results), 1), 4),
+            "chunks_quarantined": srv.chunks_quarantined,
+            "read_retries": int(pf.read_retries),
+            "read_failures": int(pf.read_failures),
+            "chunk_reads": int(pf.chunk_reads),
+            "recovery_overhead_pct": round(
+                100.0 * pf.read_retries / max(pf.chunk_reads, 1), 4),
+            "slo_hit_rate": (round(sum(slo_res) / len(slo_res), 4)
+                             if slo_res else None),
+            "injected": (dict(fstore.injected)
+                         if fault_cfg is not None else {}),
+        }
+        ests = [r.estimate for r in results]
+        srv.close()
+        return out, ests
+
+    rates = (0.0, 0.1, 0.3)
+    sweep = []
+    base_ests = None
+    for rate in rates:
+        fc = (FaultConfig(seed=injector_seed, transient_rate=rate,
+                          transient_fails=2) if rate > 0 else None)
+        lane, ests = _serve(fc)
+        lane["transient_rate"] = rate
+        if rate == 0.0:
+            base_ests = ests
+        else:
+            exact = len(ests) == len(base_ests) and all(
+                a == b or (np.isnan(a) and np.isnan(b))
+                for a, b in zip(base_ests, ests))
+            lane["bit_exact_vs_fault_free"] = bool(exact)
+            assert exact, f"transient rate {rate}: estimates diverged"
+            assert lane["degraded_rate"] == 0.0, lane
+        sweep.append(lane)
+
+    lost, _ = _serve(FaultConfig(seed=injector_seed, lost_chunks=(3,)),
+                     max_attempts=2)
+    assert lost["chunks_quarantined"] == 1, lost
+    assert lost["completed"] == nq, lost
+
+    at_10 = next(l for l in sweep if l["transient_rate"] == 0.1)
+    return {
+        "num_queries": nq,
+        "injector_seed": injector_seed,
+        "transient_sweep": sweep,
+        "lost_chunk": lost,
+        # CI-gated headline metrics (scripts/check_bench_regression.py)
+        "slo_hit_rate_under_faults": at_10["slo_hit_rate"],
+        "recovery_overhead_pct": at_10["recovery_overhead_pct"],
+        "degraded_rate": lost["degraded_rate"],
+    }
+
+
+def _print_chaos(c: dict) -> None:
+    for lane in c["transient_sweep"]:
+        exact = lane.get("bit_exact_vs_fault_free", "-")
+        print(f"  chaos/transient {lane['transient_rate']:<4g}: "
+              f"slo-hit {lane['slo_hit_rate']}  retries "
+              f"{lane['read_retries']}/{lane['chunk_reads']} reads "
+              f"({lane['recovery_overhead_pct']:.1f}% overhead)  "
+              f"degraded {lane['degraded_rate']:.0%}  bit-exact {exact}")
+    l = c["lost_chunk"]
+    print(f"  chaos/lost-chunk: {l['chunks_quarantined']} quarantined, "
+          f"{l['completed']} completed, degraded {l['degraded_rate']:.0%}, "
+          f"slo-hit {l['slo_hit_rate']}")
+
+
+def _run_chaos_only(store, cfg, slots: int, smoke: bool = True) -> str:
+    """CI chaos smoke lane: run only the fault-injection harness and merge
+    the ``chaos`` section into an existing BENCH_workload.json."""
+    chaos_out = run_chaos_lane(store, cfg, slots, smoke=smoke)
+    _merge_section("chaos", chaos_out)
+    print(f"[bench_workload] chaos lanes over {chaos_out['num_queries']} "
+          f"queries (injector seed {chaos_out['injector_seed']})")
+    _print_chaos(chaos_out)
+    return json.dumps({
+        "slo_hit_rate_under_faults": chaos_out["slo_hit_rate_under_faults"],
+        "recovery_overhead_pct": chaos_out["recovery_overhead_pct"],
+        "degraded_rate": chaos_out["degraded_rate"],
+    })
+
+
 def run_sequential(store, cfg, arrivals, synopsis_budget):
     ctrl = EstimationController(store, cfg,
                                 synopsis_budget_tuples=synopsis_budget)
@@ -328,7 +469,7 @@ def run_sequential(store, cfg, arrivals, synopsis_budget):
 
 def run(fast: bool = False, smoke: bool = False, sched: bool = True,
         sched_only: bool = False, rollup: bool = True,
-        rollup_only: bool = False) -> str:
+        rollup_only: bool = False, chaos_only: bool = False) -> str:
     if smoke:
         t, chunks, nq, slots = 2048, 16, 6, 4
     elif fast:
@@ -345,6 +486,8 @@ def run(fast: bool = False, smoke: bool = False, sched: bool = True,
         return _run_sched_only(store, cfg, queries, slots, smoke=smoke)
     if rollup_only:
         return _run_rollup_only(store, cfg, slots, smoke=smoke)
+    if chaos_only:
+        return _run_chaos_only(store, cfg, slots, smoke=smoke)
 
     # streaming residency first (clean device-byte measurement), then packed
     server_stream = run_server(
@@ -529,10 +672,14 @@ def main() -> None:
                     help="run only the rollup hot/cold lane and merge the "
                          "'rollup' section into BENCH_workload.json "
                          "(CI rollup smoke lane)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="run only the fault-injection chaos lanes and "
+                         "merge the 'chaos' section into "
+                         "BENCH_workload.json (CI chaos smoke lane)")
     args = ap.parse_args()
     run(fast=args.fast, smoke=args.smoke, sched=not args.no_sched,
         sched_only=args.sched_only, rollup=not args.no_rollup,
-        rollup_only=args.rollup_only)
+        rollup_only=args.rollup_only, chaos_only=args.chaos)
 
 
 if __name__ == "__main__":

@@ -48,7 +48,8 @@ fresh run against the new baseline.  One command does all of it::
 
 (equivalent to ``python -m benchmarks.bench_workload --smoke --no-sched
 --no-rollup``, then ``--smoke --sched-only``, then ``--smoke
---rollup-only``, then ``python -m benchmarks.bench_slot_kernel --smoke``).
+--rollup-only``, then ``--smoke --chaos``, then
+``python -m benchmarks.bench_slot_kernel --smoke``).
 See README "Re-baselining benchmarks".
 
 Usage::
@@ -103,6 +104,12 @@ CHECKS = [
     ),
     (WORKLOAD, "rollup.rollup_hit_rate", "abs_drop", 0.05, "modeled"),
     (WORKLOAD, "rollup.tier1_p95_latency_s", "rel_grow", 0.25, "modeled"),
+    # fault-tolerant scan plane: SLO hits under a 10% seeded transient-fault
+    # rate may not drop more than 2pp, and the retried-read recovery
+    # overhead (retries per hundred chunk reads at that rate) may not grow
+    # more than 25% — both deterministic (fixed injector seed)
+    (WORKLOAD, "chaos.slo_hit_rate_under_faults", "abs_drop", 0.02, "modeled"),
+    (WORKLOAD, "chaos.recovery_overhead_pct", "rel_grow", 0.25, "modeled"),
     (WORKLOAD, "memory.peak_host_rss_bytes", "rel_grow", 0.15, "machine"),
     (KERNEL, "memory.peak_host_rss_bytes", "rel_grow", 0.15, "machine"),
 ]
@@ -126,6 +133,7 @@ SMOKE_LANES = [
     ["-m", "benchmarks.bench_workload", "--smoke", "--no-sched", "--no-rollup"],
     ["-m", "benchmarks.bench_workload", "--smoke", "--sched-only"],
     ["-m", "benchmarks.bench_workload", "--smoke", "--rollup-only"],
+    ["-m", "benchmarks.bench_workload", "--smoke", "--chaos"],
     ["-m", "benchmarks.bench_slot_kernel", "--smoke"],
 ]
 

@@ -122,8 +122,8 @@ class EstimationController:
         last = None
         for _ in range(max_rounds):
             b = engine.budget_ladder(float(state.budget))
-            state, rep = engine.round_fn(b)(state, engine.round_data(state),
-                                            engine.speeds)
+            state, data = engine.round_data(state)
+            state, rep = engine.round_fn(b)(state, data, engine.speeds)
             rounds += 1
             io_s = float(rep.round_io_s)
             cpu_s = float(rep.round_cpu_s)

@@ -67,6 +67,7 @@ import numpy as np
 
 from repro.core import estimators as est
 from repro.core.estimators import BiLevelStats
+from repro.data.faults import FaultError
 from repro.core.queries import (
     AGG_COUNT,
     AGG_SUM,
@@ -176,6 +177,14 @@ class EngineState(NamedTuple):
                                  # first-touch set remains a prefix of the
                                  # committed random order (the inspection-
                                  # paradox guarantee is ordering-invariant).
+    quarantined: jnp.ndarray     # (N,) bool — chunk dropped from the
+                                 # population (read retries exhausted / CRC
+                                 # mismatch).  A host-side write (like the
+                                 # scheduler's claim reorder): the round
+                                 # treats it as closed with a zero budget,
+                                 # and estimation rescales to the surviving
+                                 # chunk count and tuple total (CIs widen;
+                                 # answers are flagged degraded upstream).
 
 
 class RoundReport(NamedTuple):
@@ -353,6 +362,7 @@ class EngineProgram:
             cache=jnp.zeros((self.n_chunks, cfg.cache_cap, self.num_cols),
                             jnp.float32),
             schedule=jnp.asarray(self.schedule_np),
+            quarantined=jnp.zeros((self.n_chunks,), bool),
         )
         if synopsis_seed is not None:
             stats = state.stats._replace(
@@ -464,6 +474,10 @@ class EngineProgram:
         b_eff = jnp.minimum(jnp.floor(b_static * speeds).astype(jnp.int32),
                             jnp.maximum(mj - m_before, 0))
         b_eff = jnp.where(active, b_eff, 0)
+        # a quarantined chunk yields nothing: a worker that (still) holds one
+        # extracts zero tuples this round and releases it below (quarantine
+        # implies closed), so claims drain without a stall
+        b_eff = jnp.where(state.quarantined[j], 0, b_eff)
         k = jnp.arange(b_static, dtype=jnp.int32)
         valid = k[None, :] < b_eff[:, None]                      # (W, B)
         if slot_mode:
@@ -622,7 +636,9 @@ class EngineProgram:
         else:
             local_ok = jnp.all(local_ok_q | stopped_mask[:, None], axis=0)
             local_ok = local_ok & (mj_new >= 2.0)
-        exhausted_w = scan_m[j] >= sizes[j]
+        # a quarantined chunk counts as exhausted: whoever holds it closes it
+        # immediately (it contributed b_eff == 0 above)
+        exhausted_w = (scan_m[j] >= sizes[j]) | state.quarantined[j]
         newly_acc = active & local_ok & ~state.acc_met[j]
 
         if slot_mode:
@@ -699,12 +715,25 @@ class EngineProgram:
                 est_mask = closed                  # inspection-paradox-vulnerable
             else:
                 est_mask = stats.m > 0
+        # coverage-adjusted population: quarantined chunks leave the sample
+        # *and* the universe — the bi-level estimator's chunk count |U| and
+        # tuple total M shrink to the survivors, so the N/n scale-up and the
+        # FPC price exactly the population an answer can still speak for
+        # (CIs widen; masked stats over N slots equal a compact scan over
+        # the survivors bit-for-bit, since the dropped columns are zero).
+        alive = ~state.quarantined
+        est_mask = est_mask & alive
+        n_eff = (jnp.asarray(stats.n_total, jnp.int32)
+                 - jnp.sum(state.quarantined.astype(jnp.int32)))
+        m_eff = (jnp.asarray(stats.m_total, jnp.int32)
+                 - jnp.sum(jnp.where(state.quarantined, sizes, 0)))
         # (N,) masks broadcast over the leading query dim; (S, N) are per-slot
         stats_est = stats._replace(
             m=jnp.where(est_mask, stats.m, 0),
             ysum=jnp.where(est_mask, stats.ysum, 0),
             ysq=jnp.where(est_mask, stats.ysq, 0),
-            psum=jnp.where(est_mask, stats.psum, 0))
+            psum=jnp.where(est_mask, stats.psum, 0),
+            n_total=n_eff, m_total=m_eff)
 
         sum_t = est.tau_hat(stats_est)
         sum_v, _ = est.var_hat(stats_est)
@@ -768,7 +797,7 @@ class EngineProgram:
             round=state.round + 1, t_io=state.t_io + round_io,
             t_cpu=state.t_cpu + round_cpu, cpu_bound=cpu_bound,
             cached_m=state.cached_m, raw_touched=raw_touched, cache=cache,
-            schedule=state.schedule)
+            schedule=state.schedule, quarantined=state.quarantined)
         report = RoundReport(
             estimate=estimate, lo=lo, hi=hi, err=err, decided=decided,
             n_chunks=n_chunks_rep, m_tuples=m_tuples_rep,
@@ -862,6 +891,49 @@ def slot_stats_write(stats: BiLevelStats, s: int, seed: Optional[dict],
         psum=stats.psum.at[s].set(ps_row)), seeded
 
 
+def quarantine_chunks(state: EngineState, chunk_ids) -> EngineState:
+    """Host-side quarantine write (between rounds, like the scheduler's
+    claim reorder): mark chunks quarantined + closed and zero their
+    statistics columns.
+
+    With the columns zeroed and the round's ESTIMATE stage substituting the
+    surviving chunk count / tuple total, the masked N-slot estimator sums
+    are *bit-for-bit* what a fresh scan over only the surviving chunks
+    would compute (adding float zeros is IEEE-exact) — the oracle property
+    gated in ``tests/test_faults.py``.  A worker currently holding a
+    quarantined chunk extracts zero tuples next round and releases it
+    (quarantine implies exhausted), so the scan never stalls.
+    """
+    ids = np.asarray(sorted({int(c) for c in chunk_ids}), np.int64)
+    if ids.size == 0:
+        return state
+    q = np.asarray(state.quarantined).copy()
+    ids = ids[~q[ids]]
+    if ids.size == 0:
+        return state
+    q[ids] = True
+    closed = np.asarray(state.closed).copy()
+    closed[ids] = True
+    stats = state.stats
+    m = np.asarray(stats.m).copy()
+    ysum = np.asarray(stats.ysum).copy()
+    ysq = np.asarray(stats.ysq).copy()
+    psum = np.asarray(stats.psum).copy()
+    m[..., ids] = 0
+    ysum[..., ids] = 0
+    ysq[..., ids] = 0
+    psum[..., ids] = 0
+    cached_m = np.asarray(state.cached_m).copy()
+    cached_m[ids] = 0
+    return state._replace(
+        quarantined=jnp.asarray(q),
+        closed=jnp.asarray(closed),
+        cached_m=jnp.asarray(cached_m),
+        stats=stats._replace(
+            m=jnp.asarray(m), ysum=jnp.asarray(ysum),
+            ysq=jnp.asarray(ysq), psum=jnp.asarray(psum)))
+
+
 class _ResidencyMixin:
     """Host-side raw-data feed shared by every engine.
 
@@ -869,7 +941,10 @@ class _ResidencyMixin:
     argument: the resident packed view under ``residency="packed"``, or a
     freshly assembled bounded slab under ``residency="stream"`` (claim
     prediction → prefetcher assemble → read-ahead hint for the next schedule
-    positions, overlapping disk READ with this round's device compute).
+    positions, overlapping disk READ with this round's device compute).  It
+    returns ``(state, data)``: streaming assembly is where permanent read
+    failures surface, and each one quarantines the lost chunk in the
+    returned state instead of raising into the driver loop.
     """
 
     pipeline = None
@@ -879,6 +954,7 @@ class _ResidencyMixin:
         """Set up ``self.packed``/``self.pipeline`` per the configured
         residency; returns the chunk-size vector.  ``slab_put``/``packed_put``
         let the SPMD engines place buffers with mesh shardings."""
+        self.quarantine_log: list[int] = []
         if config.residency == "stream":
             from repro.data.pipeline import SlabPrefetcher
 
@@ -894,17 +970,34 @@ class _ResidencyMixin:
                        else packed_put(packed))
         return sizes
 
-    def round_data(self, state: EngineState):
+    def round_data(self, state: EngineState) -> tuple[EngineState, object]:
         if self.pipeline is None:
-            return self.packed
-        j, active, new_head = self.program.plan_claims(state)
-        slab = self.pipeline.assemble(j, active)
-        # read-ahead follows the *state* schedule, so a scheduler-permuted
-        # claim order (repro.sched) is what the reader thread warms up
-        nxt = np.asarray(state.schedule)[new_head:new_head
-                                         + self.pipeline.lookahead]
-        self.pipeline.prefetch(nxt)
-        return slab
+            return state, self.packed
+        while True:
+            j, active, new_head = self.program.plan_claims(state)
+            qn = np.asarray(state.quarantined)
+            # never read a quarantined chunk: its worker still claims it
+            # in-jit but extracts b_eff == 0 from a zero slab row
+            active = np.asarray(active) & ~qn[np.asarray(j)]
+            try:
+                slab = self.pipeline.assemble(j, active)
+            except FaultError as e:
+                if e.chunk_id is None:
+                    raise
+                # retries exhausted / CRC mismatch / permanent loss: drop
+                # the chunk from the population and re-plan.  Progress is
+                # monotone (each pass quarantines one more chunk), so this
+                # loop is bounded by the chunk count.
+                state = quarantine_chunks(state, [e.chunk_id])
+                self.quarantine_log.append(int(e.chunk_id))
+                continue
+            # read-ahead follows the *state* schedule, so a scheduler-
+            # permuted claim order (repro.sched) is what the reader thread
+            # warms up; quarantined chunks are skipped
+            nxt = np.asarray(state.schedule)[new_head:new_head
+                                             + self.pipeline.lookahead]
+            self.pipeline.prefetch(int(p) for p in nxt if not qn[p])
+            return state, slab
 
     def close(self) -> None:
         if self.pipeline is not None:
@@ -957,8 +1050,8 @@ class OLAEngine(_ResidencyMixin):
         t0 = time.perf_counter()
         for _ in range(max_rounds):
             b = self.budget_ladder(float(state.budget))
-            state, rep = self.round_fn(b)(state, self.round_data(state),
-                                          self.speeds)
+            state, data = self.round_data(state)
+            state, rep = self.round_fn(b)(state, data, self.speeds)
             if collect_history:
                 history.append(jax.tree.map(np.asarray, rep))
             if bool(rep.all_stopped) or bool(rep.exhausted):

@@ -70,7 +70,7 @@ def engine_state_specs() -> EngineState:
         head=rep, cur=P("data"), budget=rep, decay=rep, calib_sum=rep,
         calib_cnt=rep, first_est=rep, stopped=rep, round=rep, t_io=rep,
         t_cpu=rep, cpu_bound=rep, cached_m=rep, raw_touched=rep, cache=rep,
-        schedule=rep)
+        schedule=rep, quarantined=rep)
 
 
 def report_specs() -> RoundReport:
@@ -174,8 +174,8 @@ class SPMDEngine(_SPMDEngineBase):
         t0 = time.perf_counter()
         for _ in range(max_rounds):
             b = self.budget_ladder(float(state.budget))
-            state, rep = self.round_fn(b)(state, self.round_data(state),
-                                          self.speeds)
+            state, data = self.round_data(state)
+            state, rep = self.round_fn(b)(state, data, self.speeds)
             if collect_history:
                 history.append(jax.tree.map(np.asarray, rep))
             if bool(rep.all_stopped) or bool(rep.exhausted):

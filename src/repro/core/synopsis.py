@@ -265,3 +265,13 @@ class BiLevelSynopsis:
         self.chunks.clear()
         self.origin_schedule = None
         self.rebuilds += 1
+
+    def drop_chunks(self, chunk_ids) -> int:
+        """Forget windows over quarantined chunks: a lost/corrupt chunk is
+        out of the surviving population, so its cached tuples must stop
+        seeding estimates.  Returns the number of windows dropped."""
+        n = 0
+        for j in chunk_ids:
+            if self.chunks.pop(int(j), None) is not None:
+                n += 1
+        return n

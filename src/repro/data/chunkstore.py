@@ -29,9 +29,12 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import zlib
 from typing import Optional
 
 import numpy as np
+
+from repro.data.faults import CorruptChunkError
 
 
 @dataclasses.dataclass
@@ -39,6 +42,10 @@ class ChunkMeta:
     num_tuples: int
     num_bytes: int
     path: Optional[str] = None  # set iff disk-backed
+    # CRC32 of the chunk's raw bytes, recorded at ingest and checked on
+    # every disk re-read; None for stores ingested before checksums
+    # existed (legacy manifests open fine, they just skip verification)
+    crc32: Optional[int] = None
 
 
 class ChunkStore:
@@ -64,13 +71,14 @@ class ChunkStore:
         assert raw.shape[1] == self.codec.record_bytes, (
             raw.shape, self.codec.record_bytes)
         j = len(self.meta)
+        crc = zlib.crc32(raw.tobytes()) & 0xFFFFFFFF
         if self.directory is not None:
             path = os.path.join(self.directory, f"{self.name}.chunk{j:05d}.bin")
             raw.tofile(path)
-            self.meta.append(ChunkMeta(num_tuples, raw.nbytes, path))
+            self.meta.append(ChunkMeta(num_tuples, raw.nbytes, path, crc))
             self._chunks.append(None)  # not resident
         else:
-            self.meta.append(ChunkMeta(num_tuples, raw.nbytes, None))
+            self.meta.append(ChunkMeta(num_tuples, raw.nbytes, None, crc))
             self._chunks.append(raw)
         self._content_version += 1
 
@@ -138,13 +146,41 @@ class ChunkStore:
         return int(self.chunk_sizes.max())
 
     def chunk_bytes(self, j: int) -> np.ndarray:
-        """READ stage for one chunk: resident copy or a disk read."""
+        """READ stage for one chunk: resident copy or a disk read.
+
+        Disk re-reads are CRC-verified against the manifest; a mismatch
+        raises :class:`CorruptChunkError` (which feeds the retry/quarantine
+        path) instead of handing corrupt bytes to the extractor.
+        """
         raw = self._chunks[j]
         if raw is None:
             m = self.meta[j]
-            raw = np.fromfile(m.path, dtype=np.uint8).reshape(
-                m.num_tuples, self.codec.record_bytes)
+            data = np.fromfile(m.path, dtype=np.uint8)
+            if data.size != m.num_tuples * self.codec.record_bytes:
+                raise CorruptChunkError(
+                    f"chunk {j}: short read ({data.size} bytes, expected "
+                    f"{m.num_tuples * self.codec.record_bytes})", chunk_id=j)
+            raw = data.reshape(m.num_tuples, self.codec.record_bytes)
+            self.verify_chunk(j, raw)
         return raw
+
+    def verify_chunk(self, j: int, raw: np.ndarray) -> None:
+        """Check ``raw`` against chunk ``j``'s manifest CRC32.
+
+        No-op for legacy manifests without checksums.  Consumers that
+        receive chunk bytes through an intermediary (the
+        :class:`~repro.data.pipeline.SlabPrefetcher`, possibly via a
+        :class:`~repro.data.faults.FaultInjector`) call this to verify
+        end-to-end, not just at the disk boundary.
+        """
+        crc = self.meta[j].crc32
+        if crc is None:
+            return
+        got = zlib.crc32(np.ascontiguousarray(raw).tobytes()) & 0xFFFFFFFF
+        if got != crc:
+            raise CorruptChunkError(
+                f"chunk {j}: CRC32 mismatch (manifest {crc:#010x}, "
+                f"read {got:#010x})", chunk_id=j)
 
     def evict(self, j: int) -> None:
         """Drop a resident chunk (only meaningful for disk-backed stores)."""

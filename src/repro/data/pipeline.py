@@ -41,6 +41,8 @@ from typing import Callable, Iterable, Optional
 
 import numpy as np
 
+from repro.data.faults import RetryPolicy
+
 
 def device_resident_bytes(dtype=None) -> int:
     """Total bytes of live JAX device arrays (optionally one dtype only).
@@ -83,8 +85,10 @@ class SlabPrefetcher:
                  lookahead: int = 8, max_cached_chunks: Optional[int] = None,
                  device_put: Optional[Callable] = None,
                  adaptive: bool = False,
-                 max_lookahead: Optional[int] = None):
+                 max_lookahead: Optional[int] = None,
+                 retry: Optional[RetryPolicy] = None):
         self.store = store
+        self.retry = retry if retry is not None else RetryPolicy()
         self.num_workers = int(num_workers)
         rb = int(store.codec.record_bytes)
         rows = int(store.max_chunk_tuples)
@@ -128,6 +132,13 @@ class SlabPrefetcher:
         self.cache_hits = 0
         self.bytes_read = 0
         self.slabs_built = 0
+        # fault accounting: retried reads, reads that exhausted their
+        # retries, and the per-chunk error slot the reader thread stashes
+        # into (re-raised — after one more synchronous retried attempt —
+        # at assemble() time instead of being silently swallowed)
+        self.read_retries = 0
+        self.read_failures = 0
+        self.read_errors: dict[int, Exception] = {}
         # the reader holds only a weakref: an engine dropped without close()
         # lets the prefetcher be GC'd, upon which the thread exits on its
         # next poll instead of pinning the cache for the process lifetime
@@ -158,11 +169,24 @@ class SlabPrefetcher:
                 continue  # re-check the cache (entry may have been trimmed)
             try:
                 t0 = time.perf_counter()
-                raw = self.store.chunk_bytes(j)
+
+                def _verified_read():
+                    raw = self.store.chunk_bytes(j)
+                    # end-to-end integrity: verify against the manifest CRC
+                    # even when the bytes came through a wrapper (the store
+                    # itself only checks its own disk boundary)
+                    verify = getattr(self.store, "verify_chunk", None)
+                    if verify is not None:
+                        verify(j, raw)
+                    return raw
+
+                raw, retries = self.retry.call(_verified_read, j)
                 self.store.evict(j)  # host residency stays O(slab)
                 dt = time.perf_counter() - t0
                 with self._lock:
                     self.chunk_reads += 1
+                    self.read_retries += retries
+                    self.read_errors.pop(j, None)
                     self.bytes_read += raw.nbytes
                     self.read_seconds += dt
                     self._cache[j] = raw
@@ -170,6 +194,10 @@ class SlabPrefetcher:
                     while len(self._cache) > self.capacity:
                         self._cache.popitem(last=False)
                 return raw
+            except Exception as e:
+                with self._lock:
+                    self.read_retries += int(getattr(e, "retries", 0))
+                raise
             finally:
                 with self._lock:
                     self._inflight.pop(j, None)
@@ -239,6 +267,13 @@ class SlabPrefetcher:
     def close(self) -> None:
         self._closed = True
         self._hints.put(None)
+        # join the reader so interpreter shutdown can't race a half-read
+        # chunk (daemon threads die mid-read otherwise); bounded so a stuck
+        # disk cannot hang close()
+        reader = getattr(self, "_reader", None)
+        if (reader is not None and reader.is_alive()
+                and reader is not threading.current_thread()):
+            reader.join(timeout=5.0)
 
 
 def _reader_main(ref: "weakref.ref[SlabPrefetcher]",
@@ -261,6 +296,13 @@ def _reader_main(ref: "weakref.ref[SlabPrefetcher]",
                 hit = j in pf._cache
             if not hit:
                 pf._read_chunk(int(j))
-        except Exception:  # pragma: no cover - reader must never die
-            pass
+        except Exception as e:
+            # the reader must never die — but a failure must not vanish
+            # either: count it and stash the exception per chunk id so
+            # assemble() can retry synchronously and re-raise if the chunk
+            # really is gone (the old bare ``pass`` silently under-delivered
+            # the round)
+            with pf._lock:
+                pf.read_failures += 1
+                pf.read_errors[int(j)] = e
         del pf  # drop the strong ref before blocking on the next hint

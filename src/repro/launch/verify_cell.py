@@ -181,7 +181,7 @@ def _sharded_round(program: EngineProgram, n_dev: int, budget: int):
             t_io=state.t_io + round_io, t_cpu=state.t_cpu + round_cpu,
             cpu_bound=round_cpu > round_io, cached_m=state.cached_m,
             raw_touched=raw_touched, cache=state.cache,
-            schedule=state.schedule)
+            schedule=state.schedule, quarantined=state.quarantined)
         report = RoundReport(
             estimate=estimate, lo=lo, hi=hi, err=err, decided=decided,
             n_chunks=stats_est.n, m_tuples=jnp.sum(stats_est.m),

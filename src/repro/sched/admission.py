@@ -49,16 +49,24 @@ ADMIT, QUEUE, SHED = "admitted", "queued", "shed"
 TIER1 = "tier1"
 
 
-def eq4_cost_terms(store, config, rates=None) -> tuple:
+def eq4_cost_terms(store, config, rates=None, *, total_bytes=None,
+                   total_tuples=None) -> tuple:
     """The two Eq. (4) cost terms for one full pass over ``store`` —
     ``(T_io, T_cpu)`` modeled seconds — on measured rates when available
     (worker-count and codec-cost rescaled), modeled constants otherwise.
     Single source of truth shared by ``select_plan`` (plan choice) and the
     admission controller (feasibility): both must price the scan on the
     same model, or a query could be admitted under one cost regime and
-    planned under another."""
-    total_bytes = float(store.chunk_sizes.sum()) * store.codec.record_bytes
-    total_tuples = float(store.num_tuples)
+    planned under another.
+
+    ``total_bytes``/``total_tuples`` override the store totals — the
+    workload server prices a *surviving* population after chunk quarantine
+    (a lost chunk is neither read nor extracted on any future pass)."""
+    if total_bytes is None:
+        total_bytes = float(store.chunk_sizes.sum()) * store.codec.record_bytes
+    if total_tuples is None:
+        total_tuples = float(store.num_tuples)
+    total_bytes, total_tuples = float(total_bytes), float(total_tuples)
     if rates is not None:
         t_io = total_bytes / rates.io_bytes_per_sec
         # the measured tuple rate is aggregate over the calibration run's
@@ -78,13 +86,19 @@ def eq4_cost_terms(store, config, rates=None) -> tuple:
     return t_io, t_cpu
 
 
-def scan_tuples_per_s(store, config, rates=None) -> float:
+def scan_tuples_per_s(store, config, rates=None, *, total_bytes=None,
+                      total_tuples=None) -> float:
     """Aggregate scan throughput (tuples/modeled-second) for a full pass —
     the Eq. (4) overlapped-pipeline rate ``total / max(T_io, T_cpu)``.  A
     slot riding the shared scan accumulates sample at (up to) this rate;
-    under fairness contention its share scales by its weight."""
-    t_io, t_cpu = eq4_cost_terms(store, config, rates)
-    return float(store.num_tuples) / max(t_io, t_cpu, 1e-12)
+    under fairness contention its share scales by its weight.  The
+    population overrides mirror :func:`eq4_cost_terms` (post-quarantine
+    repricing over surviving chunks)."""
+    t_io, t_cpu = eq4_cost_terms(store, config, rates,
+                                 total_bytes=total_bytes,
+                                 total_tuples=total_tuples)
+    n = float(store.num_tuples) if total_tuples is None else float(total_tuples)
+    return n / max(t_io, t_cpu, 1e-12)
 
 
 @dataclasses.dataclass(frozen=True)

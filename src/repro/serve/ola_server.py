@@ -252,6 +252,17 @@ class WorkloadResult:
     slo_met: Optional[bool] = None  # None when the query carried no SLO
     priority: str = "normal"        # SLO priority class (per-class latency
                                     # curves in benchmarks/bench_workload.py)
+    # degraded-answer semantics (fault-tolerant scan plane): the estimate
+    # describes the *surviving* population — at least one chunk was
+    # quarantined (lost or irrecoverably corrupt) before this query
+    # completed, so its answer is exact/valid over N - chunks_quarantined
+    # chunks, not the full table.  Transient faults healed by retries never
+    # set this flag (the sample is bit-identical to a fault-free run);
+    # ``read_retries`` counts the retried chunk reads during the query's
+    # residency (recovery overhead, 0 on packed residency).
+    degraded: bool = False
+    chunks_quarantined: int = 0
+    read_retries: int = 0
 
     @property
     def latency(self) -> float:
@@ -378,6 +389,17 @@ class OLAWorkloadServer:
         self._rollup_cache: dict[int, tuple] = {}   # per intake pass, by qid
         self._cur_weights = np.ones(max_slots, np.float32)
         self._last_err: Optional[np.ndarray] = None  # (S,) last round report
+        # fault tolerance: surviving-population bookkeeping.  Quarantining a
+        # chunk (lost / irrecoverably corrupt) shrinks the population every
+        # price and estimate must describe; the server re-derives these from
+        # engine.quarantine_log after each round (see _note_quarantine).
+        self._quarantine_seen = 0       # quarantine_log entries consumed
+        self._quarantine_count = 0      # chunks quarantined so far
+        self._eff_chunks = int(store.num_chunks)
+        self._eff_tuples = int(store.num_tuples)
+        self._eff_bytes = (float(np.asarray(store.chunk_sizes).sum())
+                           * store.codec.record_bytes)
+        self._slot_retries0 = np.zeros(max_slots, np.int64)
         self._scan_rate = scan_tuples_per_s(store, self.config,
                                             rates=self.rates)
 
@@ -404,6 +426,73 @@ class OLAWorkloadServer:
         """Raw tuples the shared scan has extracted (workload total)."""
         return int(np.asarray(self.state.scan_m).sum())
 
+    # -------------------------------------------------- fault tolerance ----
+    def _pipeline_retries(self) -> int:
+        """Cumulative retried chunk reads (stream residency; 0 packed)."""
+        pf = getattr(self.engine, "pipeline", None)
+        return int(pf.read_retries) if pf is not None else 0
+
+    @property
+    def chunks_quarantined(self) -> int:
+        return self._quarantine_count
+
+    def quarantine(self, chunk_ids) -> None:
+        """Quarantine chunks by hand (operator escape hatch / tests): the
+        same path round_data takes when a read exhausts its retries."""
+        from repro.core.engine import quarantine_chunks
+
+        before = int(np.asarray(self.state.quarantined).sum())
+        self.state = quarantine_chunks(self.state, chunk_ids)
+        after = int(np.asarray(self.state.quarantined).sum())
+        if after == before:
+            return
+        log = getattr(self.engine, "quarantine_log", None)
+        if log is not None:
+            qn = np.asarray(self.state.quarantined)
+            known = set(int(j) for j in log)
+            log.extend(sorted(int(j) for j in np.flatnonzero(qn)
+                              if int(j) not in known))
+        self._note_quarantine(force=True)
+
+    def _note_quarantine(self, force: bool = False) -> None:
+        """Absorb newly quarantined chunks into every population-priced
+        structure: the synopsis forgets their windows, rollup cells covering
+        them die, and the scan rate / admission totals re-price over the
+        survivors.  Idempotent and O(cells + new ids); a no-op round costs
+        one list-length check."""
+        log = getattr(self.engine, "quarantine_log", None) or []
+        if len(log) <= self._quarantine_seen and not force:
+            return
+        new = [int(j) for j in log[self._quarantine_seen:]]
+        self._quarantine_seen = len(log)
+        qn = np.asarray(self.state.quarantined)
+        self._quarantine_count = int(qn.sum())
+        sizes = np.asarray(self.store.chunk_sizes)
+        alive = ~qn
+        self._eff_chunks = int(alive.sum())
+        self._eff_tuples = int(sizes[alive].sum())
+        self._eff_bytes = (float(sizes[alive].sum())
+                           * self.store.codec.record_bytes)
+        self._scan_rate = scan_tuples_per_s(
+            self.store, self.config, rates=self.rates,
+            total_bytes=self._eff_bytes, total_tuples=self._eff_tuples)
+        if self.synopsis is not None and new:
+            self.synopsis.drop_chunks(new)
+        if self.rollup is not None and new:
+            self.rollup.invalidate_chunks(new)
+
+    def _mask_quarantined_seed(self, seed: Optional[dict]) -> Optional[dict]:
+        """Zero a seed row's quarantined columns (preemption snapshots and
+        pre-quarantine cells may still carry their tuples)."""
+        if seed is None or self._quarantine_count == 0:
+            return seed
+        alive = ~np.asarray(self.state.quarantined)
+        return dict(
+            m=np.where(alive, np.asarray(seed["m"]), 0),
+            ysum=np.where(alive, np.asarray(seed["ysum"]), 0.0),
+            ysq=np.where(alive, np.asarray(seed["ysq"]), 0.0),
+            psum=np.where(alive, np.asarray(seed["psum"]), 0.0))
+
     # ------------------------------------------------------------ intake ----
     def submit(self, query: Query, arrival_t: Optional[float] = None,
                plan: Optional[str] = None,
@@ -424,8 +513,9 @@ class OLAWorkloadServer:
                 f"unknown plan {plan!r}; expected one of {sorted(PLAN_CODES)}")
         row = encode_slot(query, self.store.codec.num_cols)  # validates early
         if self.synopsis is None and not (
-                np.asarray(self.state.scan_m)
-                < np.asarray(self.store.chunk_sizes)).any():
+                (np.asarray(self.state.scan_m)
+                 < np.asarray(self.store.chunk_sizes))
+                & ~np.asarray(self.state.quarantined)).any():
             raise ValueError(
                 "scan fully extracted and no synopsis configured: the query "
                 "can never be served; construct the server with "
@@ -652,7 +742,9 @@ class OLAWorkloadServer:
             t_submit=wq.arrival_t, t_admit=now, t_done=now,
             seeded_tuples=m, tuples_seen=m, rounds_resident=0,
             sched_outcome="tier1", queue_wait=latency, slo_met=slo_met,
-            priority=(wq.slo or NO_SLO).priority))
+            priority=(wq.slo or NO_SLO).priority,
+            degraded=self._quarantine_count > 0,
+            chunks_quarantined=self._quarantine_count))
         return True
 
     def _rollup_on_retire(self, wq: WorkloadQuery, s: Optional[int],
@@ -687,7 +779,7 @@ class OLAWorkloadServer:
         mean = self._observed_mean_service_s()
         if mean is not None:
             return mean
-        return float(self.store.num_tuples) / max(self._scan_rate, 1e-12)
+        return float(self._eff_tuples) / max(self._scan_rate, 1e-12)
 
     def _wait_components(self, ahead: list) -> tuple:
         """Model-priced wait parts for the admission snapshot:
@@ -732,7 +824,7 @@ class OLAWorkloadServer:
         load = ServerLoad(
             now=self.t_model, free_slots=n_free, queue_ahead=len(ahead),
             scan_rate=self._scan_rate,
-            total_tuples=int(self.store.num_tuples),
+            total_tuples=int(self._eff_tuples),
             mean_service_s=self._observed_mean_service_s(),
             slot_drain_s=drain, queue_ahead_service_s=ahead_s)
         # feasibility must be judged against the ε the slot will actually
@@ -764,13 +856,17 @@ class OLAWorkloadServer:
                         seed is None or int(cell.m.sum())
                         > int(np.asarray(seed["m"]).sum())):
                     seed = cell.seed_dict()
+        seed = self._mask_quarantined_seed(seed)
         if seed is None or int(seed["m"].sum()) == 0:
             return 0, float("nan"), float("nan"), float("nan"), float("inf")
+        # population substitution: after quarantine the estimator's N/M are
+        # the surviving totals (the same rescale the jitted round applies)
         stats_row = self.state.stats._replace(
             m=jnp.asarray(seed["m"], jnp.int32),
             ysum=jnp.asarray(seed["ysum"])[None],
             ysq=jnp.asarray(seed["ysq"])[None],
-            psum=jnp.asarray(seed["psum"])[None])
+            psum=jnp.asarray(seed["psum"])[None],
+            n_total=self._eff_chunks, m_total=self._eff_tuples)
         est_v, lo, hi, err = _answer_from_stats([query], stats_row)
         return (int(seed["m"].sum()), float(np.asarray(est_v)[0]),
                 float(np.asarray(lo)[0]), float(np.asarray(hi)[0]),
@@ -807,7 +903,9 @@ class OLAWorkloadServer:
             seeded_tuples=m_seen, tuples_seen=m_seen, rounds_resident=0,
             from_synopsis=from_syn, unserved=unserved, sched_outcome="shed",
             queue_wait=now - wq.arrival_t, slo_met=slo_met,
-            priority=(wq.slo or NO_SLO).priority))
+            priority=(wq.slo or NO_SLO).priority,
+            degraded=self._quarantine_count > 0,
+            chunks_quarantined=self._quarantine_count))
         self.shed_count += 1
         # a shed still evidences demand for the pattern: mine it (no fold —
         # the query never held a slot, there are no statistics to merge)
@@ -869,6 +967,7 @@ class OLAWorkloadServer:
         self.slot_admit_round[s] = self.rounds
         self.slot_plan[s] = plan
         self.slot_seeded[s] = seeded
+        self._slot_retries0[s] = self._pipeline_retries()
 
         # Section 6.3 best case, per slot: the seed alone may already meet
         # the target — answer at admission without consuming scan rounds.
@@ -884,7 +983,8 @@ class OLAWorkloadServer:
         stats_row = self.state.stats._replace(
             m=self.state.stats.m[s], ysum=self.state.stats.ysum[s][None],
             ysq=self.state.stats.ysq[s][None],
-            psum=self.state.stats.psum[s][None])
+            psum=self.state.stats.psum[s][None],
+            n_total=self._eff_chunks, m_total=self._eff_tuples)
         est_v, lo, hi, err = _answer_from_stats([q], stats_row)
         e = float(np.asarray(err)[0])
         decision = -1
@@ -910,7 +1010,11 @@ class OLAWorkloadServer:
             rounds_resident=0, from_synopsis=True,
             sched_outcome=self._outcome(wq),
             queue_wait=self.slot_admit_t[s] - wq.arrival_t, slo_met=slo_met,
-            priority=(wq.slo or NO_SLO).priority))
+            priority=(wq.slo or NO_SLO).priority,
+            degraded=self._quarantine_count > 0,
+            chunks_quarantined=self._quarantine_count,
+            read_retries=max(self._pipeline_retries()
+                             - int(self._slot_retries0[s]), 0)))
         self._release(s)
         return True
 
@@ -933,7 +1037,11 @@ class OLAWorkloadServer:
         up)."""
         sizes = np.asarray(self.store.chunk_sizes)
         scan_m = np.asarray(self.state.scan_m)
-        not_exhausted = scan_m < sizes
+        # a quarantined chunk is permanently out of the population: it can
+        # never be topped up, and re-opening it would stall the scan on a
+        # chunk whose reads always fail
+        not_exhausted = ((scan_m < sizes)
+                         & ~np.asarray(self.state.quarantined))
         if not not_exhausted.any():
             return False
         reopened = np.asarray(self.state.closed) & not_exhausted
@@ -984,7 +1092,11 @@ class OLAWorkloadServer:
                 sched_outcome=self._outcome(wq),
                 queue_wait=float(self.slot_admit_t[s] - wq.arrival_t),
                 slo_met=slo_met,
-                priority=(wq.slo or NO_SLO).priority))
+                priority=(wq.slo or NO_SLO).priority,
+                degraded=self._quarantine_count > 0,
+                chunks_quarantined=self._quarantine_count,
+                read_retries=max(self._pipeline_retries()
+                                 - int(self._slot_retries0[s]), 0)))
             service = self.t_model - self.slot_admit_t[s]
             self._service_times.append(service)
             if self.scheduler is not None:
@@ -1062,9 +1174,13 @@ class OLAWorkloadServer:
         # passes, since _begin_topup_pass rewrites cur/head *before* the
         # prediction runs, so re-opened chunks are re-requested from the
         # prefetcher exactly when a worker is about to claim them
+        self.state, data = self.engine.round_data(self.state)
+        # a failed read may have quarantined chunks inside round_data: fold
+        # the survivors into every population-priced structure before the
+        # round estimates over them
+        self._note_quarantine()
         self.state, rep = self.engine.round_fn(b)(
-            self.state, self.table, self.engine.round_data(self.state),
-            self.engine.speeds)
+            self.state, self.table, data, self.engine.speeds)
         self.rounds += 1
         if self.rollup is not None and self.rollup.cells:
             # incremental maintenance: resident slots running a promoted

@@ -236,6 +236,24 @@ class RollupTier:
             for k in cold:
                 self._demote(k)
 
+    def invalidate_chunks(self, chunk_ids) -> int:
+        """Drop every cell whose partial aggregate covers a quarantined
+        chunk: the cell's answer counts tuples that left the surviving
+        population, so it can no longer serve Tier-1 (or seed Tier-2).
+        Cells with zero sample over the quarantined ids keep serving —
+        their statistics already describe only surviving chunks.  Returns
+        the number of cells invalidated; the miner's pattern log survives
+        (hot patterns re-promote and rebuild over the survivors)."""
+        ids = [int(j) for j in chunk_ids]
+        if not ids:
+            return 0
+        stale = [k for k, c in self.cells.items()
+                 if int(c.m[ids].sum()) > 0]
+        for k in stale:
+            self.cells.pop(k, None)
+        self.invalidations += len(stale)
+        return len(stale)
+
     # ------------------------------------------------------------ lookup ----
     def get(self, key: Optional[tuple]) -> Optional[RollupCell]:
         """The promoted cell for a pattern key, or None.  Callers run

@@ -92,8 +92,8 @@ def drive(engine):
             table = slot_table_set(table, 2,
                                    encode_slot(q2, 8, plan='single_pass'))
         b = engine.budget_ladder(float(state.budget))
-        state, rep = engine.round_fn(b)(state, table,
-                                        engine.round_data(state),
+        state, data = engine.round_data(state)
+        state, rep = engine.round_fn(b)(state, table, data,
                                         engine.speeds)
         ests.append(np.asarray(rep.estimate))
         curs.append(np.asarray(state.cur))

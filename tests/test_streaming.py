@@ -166,8 +166,9 @@ def test_slot_stream_matches_packed_with_midscan_admission():
                 QUERIES[1], 8, plan="single_pass"))
         for res, e in engines.items():
             b = e.budget_ladder(float(states[res].budget))
+            states[res], data = e.round_data(states[res])
             states[res], rep = e.round_fn(b)(
-                states[res], table, e.round_data(states[res]), e.speeds)
+                states[res], table, data, e.speeds)
     for name in ("m", "ysum", "ysq", "psum"):
         np.testing.assert_array_equal(
             np.asarray(getattr(states["packed"].stats, name)),
@@ -244,7 +245,8 @@ def test_stream_engine_pallas_matches_ref():
             budget_min=32, budget_max=32))
         s = eng.init_state()
         for _ in range(6):
-            s, r = eng.round_fn(32)(s, eng.round_data(s), eng.speeds)
+            s, data = eng.round_data(s)
+            s, r = eng.round_fn(32)(s, data, eng.speeds)
         states[be], reps[be] = s, r
         eng.close()
     np.testing.assert_allclose(np.asarray(reps["ref"].estimate),
@@ -292,7 +294,8 @@ peak = 0
 rounds = 0
 for _ in range(2000):
     b = eng.budget_ladder(float(state.budget))
-    state, rep = eng.round_fn(b)(state, eng.round_data(state), eng.speeds)
+    state, data = eng.round_data(state)
+    state, rep = eng.round_fn(b)(state, data, eng.speeds)
     peak = max(peak, device_resident_bytes(np.uint8))
     rounds += 1
     if bool(rep.all_stopped) or bool(rep.exhausted):
