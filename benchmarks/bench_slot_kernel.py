@@ -29,8 +29,7 @@ which the workload scheduler derives its *measured* per-round slot capacity
 scan-side cost of one round, the slope the marginal cost of one
 fully-counted slot evaluation.
 
-Results land in ``BENCH_slot_kernel.json`` (and
-``results/bench_slot_kernel.json``).
+Results land in ``BENCH_slot_kernel.json`` at the repo root.
 
 Standalone:  PYTHONPATH=src python -m benchmarks.bench_slot_kernel [--smoke]
 """

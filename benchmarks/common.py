@@ -15,14 +15,17 @@ PTF_COEF = (0.0, 0.0, 0.0, 1.0, 2.0, 1.5, 0.0, 0.0)  # mag/err/flux expression
 
 
 def bench_output_paths(name: str) -> tuple:
-    """Result-file paths anchored to the repo root, not the process CWD —
+    """Result-file path(s) anchored to the repo root, not the process CWD —
     the server's ``default_rates_path`` reads from the same anchor, so the
-    calibration round-trips no matter where either process was started."""
+    calibration round-trips no matter where either process was started.
+    ``BENCH_<name>.json`` at the root is the single canonical artifact (the
+    committed baseline the CI gate diffs against); the old
+    ``results/bench_<name>.json`` mirror is gone — it was gitignored, went
+    stale the moment a lane ran from another CWD, and nothing read it."""
     import os
 
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-    return (os.path.join(root, f"BENCH_{name}.json"),
-            os.path.join(root, "results", f"bench_{name}.json"))
+    return (os.path.join(root, f"BENCH_{name}.json"),)
 
 
 def runner_fingerprint() -> dict:

@@ -16,16 +16,24 @@ and fails when a headline metric regresses past its tolerance band:
   zero baseline (tier-1 answers are scan-free, their modeled latency can
   be exactly 0) gets a small absolute ceiling instead of the vacuous
   ``0 * 1.25``;
+* ``rescan.*.decoded_hit_rate`` (parse-once decoded-chunk cache) may not
+  drop more than 5 percentage points, and the ASCII
+  ``rescan.ascii.hot_rescan_speedup`` not more than 20% relative — the
+  cache's core promise (hot re-scans skip tokenize/parse);
+* ``speedup_pallas_vs_ref`` may not drop more than 20% relative — but only
+  when the compiled kernel lane actually ran (see ``compiled`` below);
 * peak-RSS fields may not grow more than 15% — real memory, the band
   absorbs runner-to-runner variance.
 
 Checks are tagged ``modeled`` (deterministic Eq. (4) clock metrics —
-machine-independent, always gated) or ``machine`` (RSS — only comparable
-when the committed baseline came from a similar runner).  Every benchmark
-writes a ``fingerprint`` (CPU model, core count, python/jax versions) into
-its artifact; when the baseline's fingerprint is absent or disagrees with
-the fresh run's, ``machine`` checks are SKIPped instead of failing
-spuriously.
+machine-independent, always gated), ``machine`` (RSS — only comparable
+when the committed baseline came from a similar runner), or ``compiled``
+(compiled-pallas metrics — SKIPped, not silently absent, when the fresh
+run recorded ``null`` or is ``interpret_exempt`` because only the Pallas
+interpreter lane ran, e.g. off-TPU CI).  Every benchmark writes a
+``fingerprint`` (CPU model, core count, python/jax versions) into its
+artifact; when the baseline's fingerprint is absent or disagrees with the
+fresh run's, ``machine`` checks are SKIPped instead of failing spuriously.
 
 A metric with *no baseline yet* (new benchmark field, first PR that adds
 it) is reported ``INFO`` and does not gate — adding fields must not break
@@ -48,8 +56,8 @@ fresh run against the new baseline.  One command does all of it::
 
 (equivalent to ``python -m benchmarks.bench_workload --smoke --no-sched
 --no-rollup``, then ``--smoke --sched-only``, then ``--smoke
---rollup-only``, then ``--smoke --chaos``, then
-``python -m benchmarks.bench_slot_kernel --smoke``).
+--rollup-only``, then ``--smoke --chaos``, then ``--smoke --rescan``,
+then ``python -m benchmarks.bench_slot_kernel --smoke``).
 See README "Re-baselining benchmarks".
 
 Usage::
@@ -73,10 +81,14 @@ KERNEL = "BENCH_slot_kernel.json"
 
 # (file, dotted path, rule, tolerance, kind).  Rules: "abs_drop" fails when
 # fresh < baseline - tol; "rel_grow" fails when fresh > baseline * (1+tol)
-# (or, for a non-positive baseline, fresh > REL_GROW_ZERO_CEIL).  Kinds:
-# "modeled" metrics come off the deterministic Eq. (4) clock and gate on
-# any runner; "machine" metrics (RSS) gate only when the baseline's runner
-# fingerprint matches the fresh run's.
+# (or, for a non-positive baseline, fresh > REL_GROW_ZERO_CEIL); "rel_drop"
+# fails when fresh < baseline * (1-tol).  Kinds: "modeled" metrics come off
+# the deterministic Eq. (4) clock and gate on any runner; "machine" metrics
+# (RSS) gate only when the baseline's runner fingerprint matches the fresh
+# run's; "compiled" metrics exist only when the compiled pallas lane ran —
+# a fresh run that recorded null (or is flagged ``interpret_exempt``: only
+# the interpreter lane ran, e.g. off-TPU CI) SKIPs instead of failing,
+# mirroring how fingerprint-gated machine bands degrade.
 CHECKS = [
     (WORKLOAD, "sched.open_loop.scheduled.slo_hit_rate", "abs_drop", 0.02, "modeled"),
     (
@@ -110,6 +122,16 @@ CHECKS = [
     # more than 25% — both deterministic (fixed injector seed)
     (WORKLOAD, "chaos.slo_hit_rate_under_faults", "abs_drop", 0.02, "modeled"),
     (WORKLOAD, "chaos.recovery_overhead_pct", "rel_grow", 0.25, "modeled"),
+    # parse-once decoded-chunk cache, repeated-scan lane: hot-chunk hit rate
+    # may not drop more than 5pp (deterministic counters), and the ASCII
+    # hot-rescan speedup — the tentpole's headline, a wall-time ratio taken
+    # on one runner so it ports across machines — not more than 20%
+    (WORKLOAD, "rescan.ascii.decoded_hit_rate", "abs_drop", 0.05, "modeled"),
+    (WORKLOAD, "rescan.binary.decoded_hit_rate", "abs_drop", 0.05, "modeled"),
+    (WORKLOAD, "rescan.ascii.hot_rescan_speedup", "rel_drop", 0.20, "modeled"),
+    # compiled-kernel speedup: gates only when the compiled lane ran (TPU);
+    # interpret-only runs record null and SKIP — never silently absent
+    (KERNEL, "speedup_pallas_vs_ref", "rel_drop", 0.20, "compiled"),
     (WORKLOAD, "memory.peak_host_rss_bytes", "rel_grow", 0.15, "machine"),
     (KERNEL, "memory.peak_host_rss_bytes", "rel_grow", 0.15, "machine"),
 ]
@@ -134,6 +156,7 @@ SMOKE_LANES = [
     ["-m", "benchmarks.bench_workload", "--smoke", "--sched-only"],
     ["-m", "benchmarks.bench_workload", "--smoke", "--rollup-only"],
     ["-m", "benchmarks.bench_workload", "--smoke", "--chaos"],
+    ["-m", "benchmarks.bench_workload", "--smoke", "--rescan"],
     ["-m", "benchmarks.bench_slot_kernel", "--smoke"],
 ]
 
@@ -217,6 +240,11 @@ def compare(fresh_docs, baseline_docs, checks=CHECKS, same_runner=True):
             lines.append(f"FAIL  {label}: fresh artifact missing")
             continue
         fresh = get_path(fresh_doc, path)
+        if kind == "compiled" and (fresh is None
+                                   or fresh_doc.get("interpret_exempt")):
+            lines.append(f"SKIP  {label}: compiled lane did not run "
+                         "(interpret-only / off-TPU)")
+            continue
         if fresh is None:
             failures.append(label)
             lines.append(f"FAIL  {label}: dropped from the fresh run")
@@ -230,6 +258,10 @@ def compare(fresh_docs, baseline_docs, checks=CHECKS, same_runner=True):
             ceil = base * (1.0 + tol) if base > 0 else REL_GROW_ZERO_CEIL
             ok = fresh <= ceil
             detail = f"baseline {base:.6g} fresh {fresh:.6g} (ceiling {ceil:.6g})"
+        elif rule == "rel_drop":
+            floor = base * (1.0 - tol)
+            ok = fresh >= floor
+            detail = f"baseline {base:.6g} fresh {fresh:.6g} (floor {floor:.6g})"
         else:  # pragma: no cover - spec typo guard
             raise ValueError(f"unknown rule {rule!r}")
         if ok:
@@ -243,10 +275,12 @@ def compare(fresh_docs, baseline_docs, checks=CHECKS, same_runner=True):
 def seeded_regression(fresh_docs):
     """Synthesize a baseline the fresh artifacts must FAIL against: every
     gated hit-rate bumped by *twice its band* (so the fresh value lands
-    strictly below the floor, whatever the band), every gated latency/RSS
-    shrunk 40%.  Used by --self-test to prove the comparator has teeth.
-    A zero-valued rel_grow leaf cannot be seeded (no baseline makes a
-    fresh 0 exceed a grow ceiling) and is left alone."""
+    strictly below the floor, whatever the band), every gated rel_drop
+    metric doubled, every gated latency/RSS shrunk 40%.  Used by
+    --self-test to prove the comparator has teeth.  A zero-valued rel_grow
+    leaf cannot be seeded (no baseline makes a fresh 0 exceed a grow
+    ceiling) and is left alone, as is a null compiled-lane leaf (the fresh
+    null SKIPs by design)."""
     out = {}
     for name, doc in fresh_docs.items():
         if doc is None:
@@ -262,6 +296,9 @@ def seeded_regression(fresh_docs):
                 continue
             if rule == "abs_drop":
                 parent[leaf] = float(parent[leaf]) + 2.0 * tol
+            elif rule == "rel_drop":
+                if float(parent[leaf]) > 0:
+                    parent[leaf] = float(parent[leaf]) * 2.0
             elif float(parent[leaf]) > 0:
                 parent[leaf] = float(parent[leaf]) * 0.6
         out[name] = doc

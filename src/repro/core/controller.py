@@ -123,7 +123,8 @@ class EstimationController:
         for _ in range(max_rounds):
             b = engine.budget_ladder(float(state.budget))
             state, data = engine.round_data(state)
-            state, rep = engine.round_fn(b)(state, data, engine.speeds)
+            mode, data = engine.data_mode(data)
+            state, rep = engine.round_fn(b, mode)(state, data, engine.speeds)
             rounds += 1
             io_s = float(rep.round_io_s)
             cpu_s = float(rep.round_cpu_s)

@@ -134,12 +134,22 @@ class EngineConfig:
     # (a slow store raises it toward the prefetcher's ceiling so reads stay
     # hidden under compute; purely a perf knob — estimates are unaffected)
     prefetch_adaptive: bool = False
+    # parse-once decoded-chunk cache byte budget (streaming residency only):
+    # the prefetcher retains each chunk's decoded (rows, C) f32 block on
+    # first extraction, and later rounds feed the decoded-input kernel —
+    # skipping tokenize/parse.  Estimates and the modeled resource clock are
+    # bit-identical with the cache on or off; only wall time changes.
+    decoded_cache_bytes: int = 0
 
     def __post_init__(self):
         assert self.strategy in STRATEGIES, self.strategy
         assert self.extract_backend in ("ref", "pallas", "pallas-interpret",
                                         "auto"), self.extract_backend
         assert self.residency in ("packed", "stream"), self.residency
+        assert self.decoded_cache_bytes >= 0
+        assert self.decoded_cache_bytes == 0 or self.residency == "stream", (
+            "decoded_cache_bytes requires residency='stream' (the cache "
+            "lives in the slab prefetcher)")
 
 
 class EngineState(NamedTuple):
@@ -428,6 +438,7 @@ class EngineProgram:
     def round_body(self, state: EngineState, data: jnp.ndarray,
                    speeds: jnp.ndarray, b_static: int,
                    coll: _Collectives, slots: Optional[SlotTable] = None,
+                   decoded_mode: str = "none",
                    ) -> tuple[EngineState, RoundReport]:
         """One engine round.  ``state.cur``/``speeds`` are *local* worker
         slices (the full arrays in single-device mode); everything else is
@@ -439,11 +450,25 @@ class EngineProgram:
         below recomputes the same assignment, so slab row w always holds the
         chunk worker w claims).
 
+        ``decoded_mode`` (static; streaming + decoded-chunk cache only)
+        selects the round variant: ``"none"`` is the classic raw-slab round,
+        otherwise ``data`` is the ``(raw_slab, decoded_slab, is_decoded)``
+        triple from the prefetcher — ``"all"`` skips tokenize/parse entirely
+        (every active worker's chunk is decoded-cached), ``"mixed"`` splits
+        the budget between the raw-EXTRACT and decoded-input kernels per the
+        mask.  Every variant produces bit-identical statistics and modeled
+        resource clock (decoded workers keep their as-if-raw cost), so scan
+        decisions never diverge with the cache on or off.
+
         With ``slots`` (slot-table mode) the query plane is data-driven:
         evaluation, ε targets, plan policies, and HAVING verdicts all come
         from the table, and per-query arrays are sized ``max_slots``."""
         cfg = self.config
         streaming = cfg.residency == "stream"
+        assert decoded_mode in ("none", "mixed", "all"), decoded_mode
+        if decoded_mode != "none":
+            assert streaming, "decoded rounds exist only under streaming"
+            data, dec, is_dec = data
         n = self.n_chunks
         slot_mode = slots is not None
         q = self.q_dim
@@ -514,19 +539,44 @@ class EngineProgram:
                 isc = self._plan_is_count
                 gate_v = jnp.ones((q,), jnp.float32)
                 wts = jnp.ones((q,), jnp.float32)
+            cols = None
+            cache_rows = None
             if streaming:
-                # slab-streaming kernel: row tiles of the worker's slab, so
-                # chunks larger than VMEM stream tile-by-tile
-                stats4 = kernel_ops.slot_extract_stream(
-                    data, idx, b_eff, coeffs, p_lo, p_hi, isc, gate_v,
-                    weights=wts,
-                    row_tile=cfg.slab_row_tile, backend=self._ops_backend)
-                cols = None
+                # slab-streaming kernels: row tiles of the worker's slab, so
+                # chunks larger than VMEM stream tile-by-tile.  cache_cap > 0
+                # makes the kernel itself emit the synopsis-cache delta rows
+                # (W, cap, C) — only O(cap·C) per worker reaches HBM, never
+                # the whole decoded window.
+                def _stream_raw(budgets):
+                    return kernel_ops.slot_extract_stream(
+                        data, idx, budgets, coeffs, p_lo, p_hi, isc, gate_v,
+                        weights=wts, row_tile=cfg.slab_row_tile,
+                        backend=self._ops_backend, cache_cap=cap,
+                        m_before=m_before)
+
+                def _stream_dec(budgets):
+                    return kernel_ops.slot_eval_decoded(
+                        dec, idx, budgets, coeffs, p_lo, p_hi, isc, gate_v,
+                        weights=wts, row_tile=cfg.slab_row_tile,
+                        backend=self._ops_backend, cache_cap=cap,
+                        m_before=m_before)
+
+                if decoded_mode == "all":
+                    res = _stream_dec(b_eff)
+                elif decoded_mode == "mixed":
+                    # complementary budgets: a zero-budget worker contributes
+                    # exact float zeros, so the two kernel outputs sum to the
+                    # single-kernel result bit-for-bit
+                    b_raw = jnp.where(is_dec, 0, b_eff)
+                    r_raw = _stream_raw(b_raw)
+                    r_dec = _stream_dec(b_eff - b_raw)
+                    res = jax.tree.map(lambda a, b: a + b, r_raw, r_dec)
+                else:
+                    res = _stream_raw(b_eff)
                 if cap > 0:
-                    # the stream kernel never materializes the decoded window;
-                    # the synopsis cache needs it, so gather+decode here
-                    raw = jax.vmap(lambda sw, ii: sw[ii])(data, idx)
-                    cols = jax.vmap(self.codec.decode_ref)(raw)
+                    stats4, cache_rows = res
+                else:
+                    stats4 = res
             else:
                 stats4, cols = kernel_ops.slot_extract(
                     data, j, idx, b_eff, coeffs, p_lo, p_hi, isc, gate_v,
@@ -536,11 +586,23 @@ class EngineProgram:
             sum_xx = stats4[..., 2].astype(dtype).T
             sum_p = stats4[..., 3].astype(dtype).T
         else:
-            if streaming:
-                raw = jax.vmap(lambda sw, ii: sw[ii])(data, idx)   # (W, B, rec)
+            cache_rows = None
+            w_ids = jnp.arange(idx.shape[0], dtype=jnp.int32)[:, None]
+            if decoded_mode == "all":
+                # parse-once fast path: the whole window gathers from the
+                # decoded slab — no tokenize/parse at all
+                cols = dec[w_ids, idx]                           # (W, B, C)
             else:
-                raw = jax.vmap(lambda jj, ii: data[jj][ii])(j, idx)  # (W, B, rec)
-            cols = jax.vmap(self.codec.decode_ref)(raw)          # (W, B, C)
+                if streaming:
+                    raw = jax.vmap(lambda sw, ii: sw[ii])(data, idx)   # (W, B, rec)
+                else:
+                    raw = jax.vmap(lambda jj, ii: data[jj][ii])(j, idx)  # (W, B, rec)
+                cols = jax.vmap(self.codec.decode_ref)(raw)      # (W, B, C)
+                if decoded_mode == "mixed":
+                    # decode_ref is row-elementwise, so decoded-slab gathers
+                    # equal gather-then-decode bit-for-bit
+                    cols = jnp.where(is_dec[:, None, None], dec[w_ids, idx],
+                                     cols)
             if slot_mode:
                 x, pr = slot_evaluate(slots, cols)               # (S, W, B)
                 gate = slots.active.astype(dtype)[:, None, None]
@@ -597,12 +659,17 @@ class EngineProgram:
         # holds the r-th tuple of its permutation window (append-only; the
         # maintenance pass shrinks windows host-side).  OOB rows are dropped.
         if cap > 0:
-            kk = jnp.arange(b_static, dtype=jnp.int32)
-            rows = m_before[:, None] + kk[None, :]               # (W, B) ordinals
-            writable = (kk[None, :] < b_eff[:, None]) & active[:, None]
-            rows = jnp.where(writable, rows, cap)                # cap == OOB -> drop
-            cache_delta = jnp.zeros_like(state.cache).at[
-                j[:, None], rows].add(cols * writable[..., None], mode="drop")
+            if cache_rows is not None:
+                # streaming kernels already emitted the (W, cap, C) delta
+                # rows (zeros off-window, so inactive workers are no-ops)
+                cache_delta = jnp.zeros_like(state.cache).at[j].add(cache_rows)
+            else:
+                kk = jnp.arange(b_static, dtype=jnp.int32)
+                rows = m_before[:, None] + kk[None, :]           # (W, B) ordinals
+                writable = (kk[None, :] < b_eff[:, None]) & active[:, None]
+                rows = jnp.where(writable, rows, cap)            # cap == OOB -> drop
+                cache_delta = jnp.zeros_like(state.cache).at[
+                    j[:, None], rows].add(cols * writable[..., None], mode="drop")
             cache = state.cache + coll.merge(cache_delta)
         else:
             cache = state.cache
@@ -963,7 +1030,8 @@ class _ResidencyMixin:
                 store, num_workers=config.num_workers,
                 row_multiple=config.slab_row_tile,
                 lookahead=config.prefetch_lookahead, device_put=slab_put,
-                adaptive=config.prefetch_adaptive)
+                adaptive=config.prefetch_adaptive,
+                decoded_cache_bytes=config.decoded_cache_bytes)
             return store.chunk_sizes
         packed, sizes = store.packed_device_view()
         self.packed = (jnp.asarray(packed) if packed_put is None
@@ -987,8 +1055,11 @@ class _ResidencyMixin:
                 # retries exhausted / CRC mismatch / permanent loss: drop
                 # the chunk from the population and re-plan.  Progress is
                 # monotone (each pass quarantines one more chunk), so this
-                # loop is bounded by the chunk count.
+                # loop is bounded by the chunk count.  The decoded-chunk
+                # cache drops the chunk too: a block decoded from bytes the
+                # scan no longer trusts must not keep serving hits.
                 state = quarantine_chunks(state, [e.chunk_id])
+                self.drop_decoded_chunks([e.chunk_id])
                 self.quarantine_log.append(int(e.chunk_id))
                 continue
             # read-ahead follows the *state* schedule, so a scheduler-
@@ -998,6 +1069,31 @@ class _ResidencyMixin:
                                              + self.pipeline.lookahead]
             self.pipeline.prefetch(int(p) for p in nxt if not qn[p])
             return state, slab
+
+    def drop_decoded_chunks(self, chunk_ids) -> int:
+        """Evict chunks from the prefetcher's decoded cache (quarantine /
+        invalidation hook); returns the number actually dropped."""
+        if self.pipeline is None or self.pipeline.decoded is None:
+            return 0
+        return self.pipeline.drop_decoded(chunk_ids)
+
+    def decoded_fraction(self) -> float:
+        """Fraction of the store's tuples with decoded blocks cached (the
+        Eq. (4) CPU-cost discount input); 0.0 without a decoded cache."""
+        if self.pipeline is None:
+            return 0.0
+        return self.pipeline.decoded_fraction()
+
+    @staticmethod
+    def data_mode(data) -> tuple[str, object]:
+        """Split :meth:`round_data`'s result into the static round variant
+        and the jit-able data argument: the prefetcher's decoded 4-tuple
+        carries a host-side all-decoded flag that picks ``"all"`` vs
+        ``"mixed"``; anything else is the classic ``"none"`` round."""
+        if isinstance(data, tuple) and len(data) == 4:
+            raw, dec_slab, mask, all_dec = data
+            return ("all" if all_dec else "mixed"), (raw, dec_slab, mask)
+        return "none", data
 
     def close(self) -> None:
         if self.pipeline is not None:
@@ -1019,7 +1115,7 @@ class OLAEngine(_ResidencyMixin):
         speeds = config.worker_speed or (1.0,) * config.num_workers
         assert len(speeds) == config.num_workers
         self.speeds = jnp.asarray(speeds, jnp.float32)
-        self._round_fns: dict[int, callable] = {}
+        self._round_fns: dict[tuple, callable] = {}
         self.m_max = int(store.max_chunk_tuples)
 
     @property
@@ -1029,15 +1125,17 @@ class OLAEngine(_ResidencyMixin):
     def init_state(self, synopsis_seed: Optional[dict] = None) -> EngineState:
         return self.program.init_state(synopsis_seed)
 
-    def round_fn(self, b_static: int):
-        if b_static not in self._round_fns:
+    def round_fn(self, b_static: int, decoded_mode: str = "none"):
+        key = (b_static, decoded_mode)
+        if key not in self._round_fns:
             coll = _Collectives()
 
             def step(state, packed, speeds):
-                return self.program.round_body(state, packed, speeds, b_static, coll)
+                return self.program.round_body(state, packed, speeds, b_static,
+                                               coll, decoded_mode=decoded_mode)
 
-            self._round_fns[b_static] = jax.jit(step, donate_argnums=(0,))
-        return self._round_fns[b_static]
+            self._round_fns[key] = jax.jit(step, donate_argnums=(0,))
+        return self._round_fns[key]
 
     def budget_ladder(self, b: float) -> int:
         return budget_ladder(self.config, self.m_max, b)
@@ -1051,7 +1149,8 @@ class OLAEngine(_ResidencyMixin):
         for _ in range(max_rounds):
             b = self.budget_ladder(float(state.budget))
             state, data = self.round_data(state)
-            state, rep = self.round_fn(b)(state, data, self.speeds)
+            mode, data = self.data_mode(data)
+            state, rep = self.round_fn(b, mode)(state, data, self.speeds)
             if collect_history:
                 history.append(jax.tree.map(np.asarray, rep))
             if bool(rep.all_stopped) or bool(rep.exhausted):
@@ -1087,7 +1186,7 @@ class SlotOLAEngine(_ResidencyMixin):
         speeds = config.worker_speed or (1.0,) * config.num_workers
         assert len(speeds) == config.num_workers
         self.speeds = jnp.asarray(speeds, jnp.float32)
-        self._round_fns: dict[int, callable] = {}
+        self._round_fns: dict[tuple, callable] = {}
         self.m_max = int(store.max_chunk_tuples)
 
     @property
@@ -1097,16 +1196,18 @@ class SlotOLAEngine(_ResidencyMixin):
     def init_state(self) -> EngineState:
         return self.program.init_state()
 
-    def round_fn(self, b_static: int):
-        if b_static not in self._round_fns:
+    def round_fn(self, b_static: int, decoded_mode: str = "none"):
+        key = (b_static, decoded_mode)
+        if key not in self._round_fns:
             coll = _Collectives()
 
             def step(state, table, packed, speeds):
                 return self.program.round_body(state, packed, speeds,
-                                               b_static, coll, slots=table)
+                                               b_static, coll, slots=table,
+                                               decoded_mode=decoded_mode)
 
-            self._round_fns[b_static] = jax.jit(step, donate_argnums=(0,))
-        return self._round_fns[b_static]
+            self._round_fns[key] = jax.jit(step, donate_argnums=(0,))
+        return self._round_fns[key]
 
     def budget_ladder(self, b: float) -> int:
         return budget_ladder(self.config, self.m_max, b)

@@ -113,7 +113,7 @@ class _SPMDEngineBase(_ResidencyMixin):
         assert len(speeds) == config.num_workers
         self.speeds = jax.device_put(np.asarray(speeds, np.float32),
                                      NamedSharding(mesh, P("data")))
-        self._round_fns: dict[int, callable] = {}
+        self._round_fns: dict[tuple, callable] = {}
 
     def _put_state(self, state: EngineState) -> EngineState:
         shardings = jax.tree.map(lambda spec: NamedSharding(self.mesh, spec),
@@ -121,13 +121,20 @@ class _SPMDEngineBase(_ResidencyMixin):
                                  is_leaf=lambda x: isinstance(x, P))
         return jax.device_put(state, shardings)
 
-    def _compile_round(self, step, extra_in_specs: tuple):
+    def _compile_round(self, step, extra_in_specs: tuple,
+                       decoded_mode: str = "none"):
         """shard_map + jit one round step; ``step`` takes
         ``(state, *extras, data, speeds)``.  The raw-data argument is
         replicated in packed residency and worker-sharded in stream
-        residency (slab rows follow their workers)."""
+        residency (slab rows follow their workers); a decoded round's data
+        is the ``(raw, dec, is_decoded)`` triple — every leaf is per-worker,
+        so all three shard over the mesh worker axis."""
         specs = engine_state_specs()
-        data_spec = P("data") if self.config.residency == "stream" else P()
+        if self.config.residency == "stream":
+            data_spec = ((P("data"), P("data"), P("data"))
+                         if decoded_mode != "none" else P("data"))
+        else:
+            data_spec = P()
         sm = shard_map(step, mesh=self.mesh,
                        in_specs=(specs, *extra_in_specs, data_spec, P("data")),
                        out_specs=(specs, report_specs()),
@@ -156,16 +163,19 @@ class SPMDEngine(_SPMDEngineBase):
     def init_state(self, synopsis_seed: Optional[dict] = None) -> EngineState:
         return self._put_state(self.program.init_state(synopsis_seed))
 
-    def round_fn(self, b_static: int):
-        if b_static not in self._round_fns:
+    def round_fn(self, b_static: int, decoded_mode: str = "none"):
+        key = (b_static, decoded_mode)
+        if key not in self._round_fns:
             coll = _Collectives(axis_name="data", workers_per_device=self.wpd)
 
             def step(state, packed, speeds):
                 return self.program.round_body(state, packed, speeds,
-                                               b_static, coll)
+                                               b_static, coll,
+                                               decoded_mode=decoded_mode)
 
-            self._round_fns[b_static] = self._compile_round(step, ())
-        return self._round_fns[b_static]
+            self._round_fns[key] = self._compile_round(
+                step, (), decoded_mode=decoded_mode)
+        return self._round_fns[key]
 
     def run(self, max_rounds: int = 100_000, wall_timeout_s: float = 600.0,
             synopsis_seed: Optional[dict] = None, collect_history: bool = True):
@@ -175,7 +185,8 @@ class SPMDEngine(_SPMDEngineBase):
         for _ in range(max_rounds):
             b = self.budget_ladder(float(state.budget))
             state, data = self.round_data(state)
-            state, rep = self.round_fn(b)(state, data, self.speeds)
+            mode, data = self.data_mode(data)
+            state, rep = self.round_fn(b, mode)(state, data, self.speeds)
             if collect_history:
                 history.append(jax.tree.map(np.asarray, rep))
             if bool(rep.all_stopped) or bool(rep.exhausted):
@@ -215,14 +226,16 @@ class SlotSPMDEngine(_SPMDEngineBase):
     def init_state(self) -> EngineState:
         return self._put_state(self.program.init_state())
 
-    def round_fn(self, b_static: int):
-        if b_static not in self._round_fns:
+    def round_fn(self, b_static: int, decoded_mode: str = "none"):
+        key = (b_static, decoded_mode)
+        if key not in self._round_fns:
             coll = _Collectives(axis_name="data", workers_per_device=self.wpd)
 
             def step(state, table, packed, speeds):
                 return self.program.round_body(state, packed, speeds,
-                                               b_static, coll, slots=table)
+                                               b_static, coll, slots=table,
+                                               decoded_mode=decoded_mode)
 
-            self._round_fns[b_static] = self._compile_round(
-                step, (slot_table_specs(),))
-        return self._round_fns[b_static]
+            self._round_fns[key] = self._compile_round(
+                step, (slot_table_specs(),), decoded_mode=decoded_mode)
+        return self._round_fns[key]

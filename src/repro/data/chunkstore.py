@@ -164,6 +164,38 @@ class ChunkStore:
             self.verify_chunk(j, raw)
         return raw
 
+    def read_chunk_into(self, j: int, out: np.ndarray) -> np.ndarray:
+        """READ one chunk directly into a caller-provided buffer.
+
+        ``out`` is a C-contiguous uint8 array of at least
+        ``(num_tuples, record_bytes)``; the chunk's rows land at
+        ``out[:num_tuples]`` and the filled view is returned.  Disk-backed
+        chunks ``readinto()`` the file — the zero-copy slab-assembly path:
+        file bytes go straight into the target slab slice with no
+        intermediate numpy staging buffer.  Short reads and CRC mismatches
+        raise :class:`CorruptChunkError` exactly like :meth:`chunk_bytes`.
+
+        Note for wrappers: :class:`~repro.data.faults.FaultInjector` and
+        other store proxies intercept :meth:`chunk_bytes` only, so callers
+        that must honor injection (the :class:`SlabPrefetcher`) take this
+        fast path only when the store's *own class* provides it.
+        """
+        m = self.meta[j]
+        view = out[: m.num_tuples]
+        raw = self._chunks[j]
+        if raw is not None:
+            np.copyto(view, raw)
+            return view
+        nbytes = m.num_tuples * self.codec.record_bytes
+        with open(m.path, "rb") as f:
+            got = f.readinto(memoryview(view.reshape(-1)[:nbytes]))
+        if got != nbytes:
+            raise CorruptChunkError(
+                f"chunk {j}: short read ({got} bytes, expected {nbytes})",
+                chunk_id=j)
+        self.verify_chunk(j, view)
+        return view
+
     def verify_chunk(self, j: int, raw: np.ndarray) -> None:
         """Check ``raw`` against chunk ``j``'s manifest CRC32.
 

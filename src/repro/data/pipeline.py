@@ -72,6 +72,101 @@ def peak_host_rss_bytes() -> int:
     return int(ru) if sys.platform == "darwin" else int(ru) * 1024
 
 
+class DecodedChunkCache:
+    """Budgeted parse-once cache of decoded ``(rows, C)`` float32 blocks.
+
+    The first time a chunk is extracted its decoded block is retained here
+    (up to ``budget_bytes``); later rounds feed the decoded-input slot-eval
+    kernel and skip tokenize/parse entirely.  Eviction is **cost-aware**:
+    victims minimize ``extract_cost_per_tuple × touch-frequency / recency
+    age``, so an ASCII chunk (≈3360 ns/tuple to re-extract) is worth ~25×
+    more residency than a binary one (≈32 ns/tuple) at equal touch history.
+
+    The cache pins the store's ``content_version`` (the same invalidation
+    contract the rollup tier uses): :meth:`check_version` clears everything
+    on a bump, so out-of-band re-ingests can never serve stale decodes.
+    """
+
+    def __init__(self, budget_bytes: int, cost_per_tuple: float = 1.0):
+        self.budget_bytes = int(budget_bytes)
+        self.cost_per_tuple = float(cost_per_tuple)
+        self._blocks: dict[int, np.ndarray] = {}
+        self._cost: dict[int, float] = {}
+        self._hits: dict[int, int] = {}
+        self._last: dict[int, int] = {}
+        self._clock = 0
+        self._version: Optional[int] = None
+        self.bytes_cached = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._blocks)
+
+    def __contains__(self, j: int) -> bool:
+        return j in self._blocks
+
+    @property
+    def tuples_cached(self) -> int:
+        return sum(b.shape[0] for b in self._blocks.values())
+
+    def check_version(self, version: int) -> None:
+        """Pin/verify the store content version; clear on mismatch."""
+        if self._version is None:
+            self._version = version
+        elif version != self._version:
+            self.clear()
+            self._version = version
+
+    def get(self, j: int) -> Optional[np.ndarray]:
+        blk = self._blocks.get(j)
+        if blk is not None:
+            self._clock += 1
+            self._hits[j] += 1
+            self._last[j] = self._clock
+        return blk
+
+    def _score(self, j: int) -> float:
+        age = self._clock - self._last[j] + 1
+        return self._cost[j] * self._hits[j] / age
+
+    def put(self, j: int, block: np.ndarray,
+            cost_per_tuple: Optional[float] = None) -> bool:
+        """Admit a decoded block, evicting lowest-score victims to fit."""
+        nb = int(block.nbytes)
+        if j in self._blocks or nb > self.budget_bytes:
+            return False
+        self._clock += 1
+        while self.bytes_cached + nb > self.budget_bytes and self._blocks:
+            victim = min(self._blocks, key=self._score)
+            self.drop(victim)
+            self.evictions += 1
+        self._blocks[j] = block
+        self._cost[j] = (self.cost_per_tuple if cost_per_tuple is None
+                         else float(cost_per_tuple))
+        self._hits[j] = 1
+        self._last[j] = self._clock
+        self.bytes_cached += nb
+        return True
+
+    def drop(self, j: int) -> bool:
+        """Remove one chunk (quarantine / invalidation hook)."""
+        blk = self._blocks.pop(j, None)
+        if blk is None:
+            return False
+        self.bytes_cached -= int(blk.nbytes)
+        self._cost.pop(j, None)
+        self._hits.pop(j, None)
+        self._last.pop(j, None)
+        return True
+
+    def clear(self) -> None:
+        self._blocks.clear()
+        self._cost.clear()
+        self._hits.clear()
+        self._last.clear()
+        self.bytes_cached = 0
+
+
 class SlabPrefetcher:
     """Assembles bounded per-round slabs from a :class:`ChunkStore`.
 
@@ -79,6 +174,12 @@ class SlabPrefetcher:
     dim, ``row_multiple`` pads ``rows_max`` up to the streaming kernel's row
     tile so block shapes stay stable.  ``device_put`` lets the SPMD engines
     place the slab sharded over the mesh's worker axis.
+
+    With ``decoded_cache_bytes > 0`` the prefetcher additionally maintains a
+    :class:`DecodedChunkCache` and :meth:`assemble` returns a *mixed
+    raw/decoded* slab triple ``(raw (W,R,rec) u8, dec (W,R,C) f32,
+    is_decoded (W,) bool)``: cached workers get their decoded rows (no disk
+    read, no parse), the rest get raw bytes as before.
     """
 
     def __init__(self, store, num_workers: int, row_multiple: int = 1,
@@ -86,7 +187,8 @@ class SlabPrefetcher:
                  device_put: Optional[Callable] = None,
                  adaptive: bool = False,
                  max_lookahead: Optional[int] = None,
-                 retry: Optional[RetryPolicy] = None):
+                 retry: Optional[RetryPolicy] = None,
+                 decoded_cache_bytes: int = 0):
         self.store = store
         self.retry = retry if retry is not None else RetryPolicy()
         self.num_workers = int(num_workers)
@@ -127,11 +229,41 @@ class SlabPrefetcher:
         self._inflight: dict[int, threading.Event] = {}
         self._hints: "queue.SimpleQueue[Optional[int]]" = queue.SimpleQueue()
         self._closed = False
+        # ring of pre-allocated slab buffers (zero-copy assembly): disk
+        # bytes readinto() the target slab slice directly, and the two-deep
+        # ring preserves the double-buffer slack — the previous round's
+        # async device_put source is never touched by the current round
+        self._ring = [np.zeros(self.slab_shape, np.uint8) for _ in range(2)]
+        self._ring_i = 0
+        # the zero-copy readinto path must honor store *wrappers* (fault
+        # injection, pacing proxies) that intercept chunk_bytes via
+        # __getattr__ delegation — so it is taken only when the store's own
+        # class implements read_chunk_into
+        self._direct_readinto = any(
+            "read_chunk_into" in k.__dict__ for k in type(store).__mro__)
+        # parse-once decoded-chunk cache (budget 0 = off, the parity default)
+        self._num_cols = int(store.codec.num_cols)
+        if int(decoded_cache_bytes) > 0:
+            self.decoded: Optional[DecodedChunkCache] = DecodedChunkCache(
+                int(decoded_cache_bytes),
+                cost_per_tuple=float(store.codec.extract_cost_per_tuple()))
+            self._dec_ring = [
+                np.zeros((self.num_workers, self.rows_max, self._num_cols),
+                         np.float32) for _ in range(2)]
+        else:
+            self.decoded = None
+            self._dec_ring = None
+        self._empty_slab_dev = None  # lazy (W, 0, rec) raw leaf, all-dec rounds
+        self._last_assembled: dict[int, int] = {}
         # counters (monitoring / tests)
         self.chunk_reads = 0
         self.cache_hits = 0
         self.bytes_read = 0
         self.slabs_built = 0
+        self.decoded_hits = 0
+        self.decoded_misses = 0
+        self.decoded_fills = 0
+        self.extract_tuples_avoided = 0
         # fault accounting: retried reads, reads that exhausted their
         # retries, and the per-chunk error slot the reader thread stashes
         # into (re-raised — after one more synchronous retried attempt —
@@ -212,28 +344,149 @@ class SlabPrefetcher:
         for j in chunk_ids:
             self._hints.put(int(j))
 
+    def _fill_raw(self, j: int, out_rows: np.ndarray) -> np.ndarray:
+        """Fill ``out_rows[:rows]`` with chunk ``j``'s bytes in place.
+
+        Host-cache (or in-flight) chunks copy out of the cache; cold
+        disk-backed chunks ``readinto()`` the file directly into the slab
+        slice — the zero-copy path (retry + end-to-end CRC included, the
+        read happens inside :meth:`ChunkStore.read_chunk_into`).
+        """
+        with self._lock:
+            raw = self._cache.get(j)
+            if raw is not None:
+                self._cache.move_to_end(j)
+                self.cache_hits += 1
+            inflight = j in self._inflight
+        if raw is None and not inflight and self._direct_readinto:
+            t0 = time.perf_counter()
+            view, retries = self.retry.call(
+                lambda: self.store.read_chunk_into(j, out_rows), j)
+            dt = time.perf_counter() - t0
+            with self._lock:
+                self.chunk_reads += 1
+                self.read_retries += retries
+                self.read_errors.pop(j, None)
+                self.bytes_read += view.nbytes
+                self.read_seconds += dt
+            return view
+        if raw is None:
+            raw = self._read_chunk(j)
+        out_rows[: raw.shape[0]] = raw
+        return out_rows[: raw.shape[0]]
+
+    def _maybe_fill_decoded(self, j: int, raw: np.ndarray) -> None:
+        """Parse-once: retain chunk ``j``'s decoded block on first extract."""
+        if self.decoded is None or j in self.decoded or raw.shape[0] == 0:
+            return
+        if raw.shape[0] * self._num_cols * 4 > self.decoded.budget_bytes:
+            return
+        import jax.numpy as jnp
+
+        blk = np.asarray(self.store.codec.decode_ref(
+            jnp.asarray(np.ascontiguousarray(raw))), np.float32)
+        if self.decoded.put(j, blk):
+            self.decoded_fills += 1
+
+    def decoded_fraction(self) -> float:
+        """Fraction of the store's tuples whose decoded blocks are cached —
+        the ``decoded_fraction`` term :func:`repro.sched.admission.
+        eq4_cost_terms` discounts the Eq. (4) CPU cost by."""
+        if self.decoded is None:
+            return 0.0
+        total = int(self.store.num_tuples)
+        return min(1.0, self.decoded.tuples_cached / max(total, 1))
+
+    def drop_decoded(self, chunk_ids: Iterable[int]) -> int:
+        """Drop chunks from the decoded cache (quarantine hook); returns the
+        number actually dropped."""
+        if self.decoded is None:
+            return 0
+        return sum(self.decoded.drop(int(j)) for j in chunk_ids)
+
     def assemble(self, chunk_ids: np.ndarray, active: np.ndarray):
-        """Build the round's ``(W, rows_max, rec)`` uint8 slab on device.
+        """Build the round's slab(s) on device.
 
         ``chunk_ids[w]`` is worker w's chunk (from ``plan_claims``); inactive
-        workers get zero rows (the round masks them by ``b_eff == 0``).  A
-        fresh host buffer per call keeps the previous slab's async
-        ``device_put`` untouched — the double-buffer slack in the memory
-        bound.
+        workers get zero rows (the round masks them by ``b_eff == 0``).
+        Buffers come from a two-deep pre-allocated ring: the previous slab's
+        async ``device_put`` source is never touched by the current round
+        (the double-buffer slack in the memory bound), and disk bytes
+        ``readinto()`` the target slab slice with no staging copy.
+
+        Returns the device slab (decoded cache off), or a
+        ``(raw, dec, is_decoded, all_decoded)`` 4-tuple (decoded cache on):
+        the first three are device arrays — cached workers get zero raw rows
+        + their decoded block, feeding the decoded-input kernel — and
+        ``all_decoded`` is a host bool (every *active* worker decoded) the
+        engine uses to pick the all-decoded round variant, which skips
+        tokenize/parse entirely.  All-decoded rounds never touch the raw
+        ring: the raw leaf is a cached zero-row ``(W, 0, rec)`` slab (the
+        ``"all"`` round variant never reads it), so a hot re-scan pays
+        neither the slab zero-fill nor the host→device raw transfer.
         """
         if self.adaptive:
             self._observe_round(int(np.sum(np.asarray(active, bool))))
-        slab = np.zeros(self.slab_shape, np.uint8)
+        i = self._ring_i
+        self._ring_i = (i + 1) % len(self._ring)
+        buf = self._ring[i]
+        if self.decoded is None:
+            buf.fill(0)
+            for w in range(self.num_workers):
+                if bool(active[w]):
+                    self._fill_raw(int(chunk_ids[w]), buf[w])
+            self.slabs_built += 1
+            if self.adaptive:
+                # stamp *after* the synchronous reads: the next round's gap
+                # then measures compute/step time only, not READ time
+                self._last_assemble_t = time.perf_counter()
+            return self._device_put(buf)
+        self.decoded.check_version(self.store.content_version)
+        dbuf = self._dec_ring[i]
+        is_dec = np.zeros(self.num_workers, bool)
+        # probe before filling: an all-decoded round skips the raw ring
+        # entirely (no zero-fill, no transfer)
+        all_dec = all(int(chunk_ids[w]) in self.decoded
+                      for w in range(self.num_workers) if bool(active[w]))
+        if not all_dec:
+            buf.fill(0)
         for w in range(self.num_workers):
-            if bool(active[w]):
-                raw = self._read_chunk(int(chunk_ids[w]))
-                slab[w, : raw.shape[0]] = raw
+            if not bool(active[w]):
+                dbuf[w].fill(0)
+                continue
+            j = int(chunk_ids[w])
+            blk = self.decoded.get(j)
+            if blk is not None:
+                dbuf[w, : blk.shape[0]] = blk
+                dbuf[w, blk.shape[0]:].fill(0)
+                is_dec[w] = True
+                self.decoded_hits += 1
+                if self._last_assembled.get(w) != j:
+                    # full-chunk granularity: a freshly claimed cached
+                    # chunk's rows never hit the tokenizer again
+                    self.extract_tuples_avoided += int(blk.shape[0])
+                self._last_assembled[w] = j
+                continue
+            self.decoded_misses += 1
+            dbuf[w].fill(0)
+            raw = self._fill_raw(j, buf[w])
+            self._maybe_fill_decoded(j, raw)
+            self._last_assembled[w] = j
         self.slabs_built += 1
         if self.adaptive:
             # stamp *after* the synchronous reads: the next round's gap then
             # measures compute/step time only, not READ time
             self._last_assemble_t = time.perf_counter()
-        return self._device_put(slab)
+        if all_dec:
+            if self._empty_slab_dev is None:
+                self._empty_slab_dev = self._device_put(
+                    np.zeros((self.num_workers, 0, self.slab_shape[2]),
+                             np.uint8))
+            raw_dev = self._empty_slab_dev
+        else:
+            raw_dev = self._device_put(buf)
+        return (raw_dev, self._device_put(dbuf),
+                self._device_put(is_dec), all_dec)
 
     def _observe_round(self, n_claims: int) -> None:
         """Adaptive lookahead from the measured READ/CPU rate ratio.

@@ -22,6 +22,7 @@ from repro.kernels.chunk_agg import chunk_agg_pallas
 from repro.kernels.extract_parse import extract_parse_pallas
 from repro.kernels.round_stats import round_stats_pallas
 from repro.kernels.slot_extract import (
+    slot_eval_decoded_pallas,
     slot_extract_pallas,
     slot_extract_stream_pallas,
 )
@@ -103,13 +104,18 @@ def slot_extract(packed: jnp.ndarray, jw: jnp.ndarray, idx: jnp.ndarray,
 def slot_extract_stream(slab: jnp.ndarray, idx: jnp.ndarray,
                         b_eff: jnp.ndarray, coeffs, lo, hi, is_count, gate,
                         row_tile: int = 256, backend: str = "auto",
-                        weights=None):
+                        weights=None, cache_cap: int = 0, m_before=None):
     """Slab-streaming fused round extraction (``residency="stream"``).
 
     slab (W, R, rec) uint8 — worker w's chunk rows at slab[w] (assembled by
     ``data/pipeline.SlabPrefetcher``), idx (W, B) window rows, b_eff (W,) ->
     stats (W, S, 4).  Unlike :func:`slot_extract` the kernel grids over row
     *tiles* of the slab, so chunks larger than VMEM stream tile-by-tile.
+
+    ``cache_cap > 0`` additionally returns the synopsis-cache delta rows
+    ``(W, cache_cap, C)`` at scan positions ``m_before`` — the streaming
+    path's replacement for re-decoding the whole window just to feed the
+    cache: the call then returns ``(stats, cache_rows)``.
     """
     num_cols = int(coeffs.shape[1])
     use_pallas, interpret = _resolve(backend)
@@ -119,15 +125,66 @@ def slot_extract_stream(slab: jnp.ndarray, idx: jnp.ndarray,
     if weights is None:
         weights = jnp.ones((coeffs.shape[0],), jnp.float32)
     weights = jnp.asarray(weights, jnp.float32)
+    if m_before is not None:
+        m_before = jnp.asarray(m_before, jnp.int32)
     if use_pallas:
         return slot_extract_stream_pallas(slab, idx, b_eff, coeffs, lo, hi,
                                           is_count, gate, weights,
                                           num_cols=num_cols,
                                           row_tile=row_tile,
+                                          cache_cap=cache_cap,
+                                          m_before=m_before,
                                           interpret=interpret)
-    return _ref.slot_extract_stream_ref(slab, idx, b_eff, coeffs, lo, hi,
-                                        is_count, gate, num_cols=num_cols,
-                                        weights=weights)
+    stats = _ref.slot_extract_stream_ref(slab, idx, b_eff, coeffs, lo, hi,
+                                         is_count, gate, num_cols=num_cols,
+                                         weights=weights)
+    if cache_cap > 0:
+        if m_before is None:
+            m_before = jnp.zeros((idx.shape[0],), jnp.int32)
+        return stats, _ref.stream_cache_rows_ref(slab, idx, b_eff, m_before,
+                                                 cache_cap, num_cols)
+    return stats
+
+
+def slot_eval_decoded(dec: jnp.ndarray, idx: jnp.ndarray, b_eff: jnp.ndarray,
+                      coeffs, lo, hi, is_count, gate, row_tile: int = 256,
+                      backend: str = "auto", weights=None, cache_cap: int = 0,
+                      m_before=None):
+    """Decoded-input slot eval (the parse-once fast path).
+
+    dec (W, R, C) f32 — worker w's already-decoded chunk rows at dec[w]
+    (served by the decoded-chunk cache), idx (W, B) window rows, b_eff (W,)
+    -> stats (W, S, 4), skipping tokenize/parse entirely.  Same
+    ``cache_cap``/``m_before`` synopsis-cache emission contract as
+    :func:`slot_extract_stream`.
+    """
+    use_pallas, interpret = _resolve(backend)
+    num_cols = int(coeffs.shape[1])
+    idx, b_eff = jnp.asarray(idx, jnp.int32), jnp.asarray(b_eff, jnp.int32)
+    coeffs, lo, hi, is_count, gate = (
+        jnp.asarray(a, jnp.float32) for a in (coeffs, lo, hi, is_count, gate))
+    if weights is None:
+        weights = jnp.ones((coeffs.shape[0],), jnp.float32)
+    weights = jnp.asarray(weights, jnp.float32)
+    if m_before is not None:
+        m_before = jnp.asarray(m_before, jnp.int32)
+    if use_pallas:
+        return slot_eval_decoded_pallas(dec, idx, b_eff, coeffs, lo, hi,
+                                        is_count, gate, weights,
+                                        num_cols=num_cols, row_tile=row_tile,
+                                        cache_cap=cache_cap,
+                                        m_before=m_before,
+                                        interpret=interpret)
+    stats = _ref.slot_eval_decoded_ref(dec, idx, b_eff, coeffs, lo, hi,
+                                       is_count, gate, weights=weights)
+    if cache_cap > 0:
+        if m_before is None:
+            m_before = jnp.zeros((idx.shape[0],), jnp.int32)
+        w = idx.shape[0]
+        cols = dec[jnp.arange(w, dtype=jnp.int32)[:, None], idx]
+        return stats, _ref.window_cache_rows_ref(cols, b_eff, m_before,
+                                                 cache_cap)
+    return stats
 
 
 def round_stats(slab: jnp.ndarray, b_eff: jnp.ndarray, coeffs, lo, hi,

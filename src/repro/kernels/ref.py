@@ -63,6 +63,33 @@ def chunk_agg_ref(raw: jnp.ndarray, num_cols: int, coeffs, lo, hi,
     return jnp.transpose(out, (1, 0, 2))          # (N, Q, 4)
 
 
+def _slot_stats_from_cols(cols: jnp.ndarray, b_eff: jnp.ndarray, coeffs, lo,
+                          hi, is_count, gate, weights=None) -> jnp.ndarray:
+    """Decoded window (W, B, C) f32 -> per-(worker, slot) stats (W, S, 4).
+
+    The shared back half of :func:`slot_extract_ref` and the decoded-input
+    fast path: slot eval + fairness-capped budget masking + stat sums.  Op
+    order is the historic one, so the raw path stays bit-identical.
+    """
+    b = cols.shape[1]
+    x, p = eval_plan_ref(cols, coeffs, lo, hi)    # (S, W, B)
+    x = jnp.where(jnp.asarray(is_count)[:, None, None] > 0.0, p, x)
+    if weights is None:
+        weights = jnp.ones((x.shape[0],), jnp.float32)
+    bs = jnp.minimum(jnp.ceil(jnp.asarray(weights, jnp.float32)[:, None]
+                              * b_eff[None, :].astype(jnp.float32)
+                              ).astype(b_eff.dtype), b_eff[None, :])  # (S, W)
+    ok_s = (jnp.arange(b)[None, None, :]
+            < bs[:, :, None]).astype(cols.dtype)  # (S, W, B)
+    mask = ok_s * jnp.asarray(gate, cols.dtype)[:, None, None]
+    x = x * mask
+    p = p * mask
+    cnt = jnp.sum(ok_s, -1)                       # (S, W)
+    out = jnp.stack([cnt, jnp.sum(x, -1), jnp.sum(x * x, -1), jnp.sum(p, -1)],
+                    axis=-1)                      # (S, W, 4)
+    return jnp.transpose(out, (1, 0, 2))
+
+
 def slot_extract_ref(packed: jnp.ndarray, jw: jnp.ndarray, idx: jnp.ndarray,
                      b_eff: jnp.ndarray, coeffs, lo, hi, is_count, gate,
                      num_cols: int, return_cols: bool = False, weights=None):
@@ -79,22 +106,59 @@ def slot_extract_ref(packed: jnp.ndarray, jw: jnp.ndarray, idx: jnp.ndarray,
     raw = packed[jw[:, None], idx]                # (W, B, rec) gathered rows
     cols = parse_ascii_ref(raw.reshape(w * b, -1), num_cols).reshape(
         w, b, num_cols)
-    x, p = eval_plan_ref(cols, coeffs, lo, hi)    # (S, W, B)
-    x = jnp.where(jnp.asarray(is_count)[:, None, None] > 0.0, p, x)
-    if weights is None:
-        weights = jnp.ones((x.shape[0],), jnp.float32)
-    bs = jnp.minimum(jnp.ceil(jnp.asarray(weights, jnp.float32)[:, None]
-                              * b_eff[None, :].astype(jnp.float32)
-                              ).astype(b_eff.dtype), b_eff[None, :])  # (S, W)
-    ok_s = (jnp.arange(b)[None, None, :]
-            < bs[:, :, None]).astype(cols.dtype)  # (S, W, B)
-    mask = ok_s * jnp.asarray(gate, cols.dtype)[:, None, None]
-    x = x * mask
-    p = p * mask
-    cnt = jnp.sum(ok_s, -1)                       # (S, W)
-    out = jnp.stack([cnt, jnp.sum(x, -1), jnp.sum(x * x, -1), jnp.sum(p, -1)],
-                    axis=-1)                      # (S, W, 4)
-    return jnp.transpose(out, (1, 0, 2)), (cols if return_cols else None)
+    stats = _slot_stats_from_cols(cols, b_eff, coeffs, lo, hi, is_count, gate,
+                                  weights)
+    return stats, (cols if return_cols else None)
+
+
+def slot_eval_decoded_ref(dec: jnp.ndarray, idx: jnp.ndarray,
+                          b_eff: jnp.ndarray, coeffs, lo, hi, is_count, gate,
+                          weights=None) -> jnp.ndarray:
+    """Decoded-input round extraction oracle: skip tokenize/parse entirely.
+
+    ``dec (W, R, C)`` f32 — worker w's *already decoded* chunk rows at
+    ``dec[w]`` (the parse-once decoded-chunk cache) — idx (W, B) window rows,
+    b_eff (W,) -> stats (W, S, 4).  Identical contract to
+    :func:`slot_extract_stream_ref` minus the EXTRACT: the gathered rows go
+    straight to slot eval, which is what makes re-scans of cached chunks
+    cheap.
+    """
+    w = idx.shape[0]
+    cols = dec[jnp.arange(w, dtype=jnp.int32)[:, None], idx]  # (W, B, C)
+    return _slot_stats_from_cols(cols, b_eff, coeffs, lo, hi, is_count, gate,
+                                 weights)
+
+
+def window_cache_rows_ref(cols: jnp.ndarray, b_eff: jnp.ndarray,
+                          m_before: jnp.ndarray,
+                          cache_cap: int) -> jnp.ndarray:
+    """Synopsis-cache delta rows from a decoded window.
+
+    cols (W, B, C) f32, b_eff (W,), m_before (W,) scan positions ->
+    (W, cache_cap, C) where row ``r`` holds ``cols[w, r - m_before[w]]`` when
+    that window position exists (``0 <= r - m_before < b_eff``) and zeros
+    otherwise — exactly the rows the round scatters into the per-chunk
+    synopsis cache, without materializing anything per window row.
+    """
+    w, b, _ = cols.shape
+    k = (jnp.arange(cache_cap, dtype=jnp.int32)[None, :]
+         - jnp.asarray(m_before, jnp.int32)[:, None])          # (W, cap)
+    valid = (k >= 0) & (k < b_eff[:, None])
+    rows = jnp.take_along_axis(cols, jnp.clip(k, 0, b - 1)[..., None], axis=1)
+    return rows * valid[..., None].astype(cols.dtype)
+
+
+def stream_cache_rows_ref(slab: jnp.ndarray, idx: jnp.ndarray,
+                          b_eff: jnp.ndarray, m_before: jnp.ndarray,
+                          cache_cap: int, num_cols: int) -> jnp.ndarray:
+    """Raw-slab oracle for the in-kernel synopsis-cache emission: gather +
+    parse the window, then select the cache rows (see
+    :func:`window_cache_rows_ref`)."""
+    w, b = idx.shape
+    raw = slab[jnp.arange(w, dtype=jnp.int32)[:, None], idx]
+    cols = parse_ascii_ref(raw.reshape(w * b, -1), num_cols).reshape(
+        w, b, num_cols)
+    return window_cache_rows_ref(cols, b_eff, m_before, cache_cap)
 
 
 def slot_extract_stream_ref(slab: jnp.ndarray, idx: jnp.ndarray,

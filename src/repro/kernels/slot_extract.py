@@ -165,19 +165,29 @@ def slot_extract_pallas(packed: jnp.ndarray, jw: jnp.ndarray,
 IDX_TILE = 512
 
 
-def _slot_extract_stream_kernel(beff_ref, slab_ref, idx_ref, coeffs_ref,
-                                lo_ref, hi_ref, isc_ref, gate_ref, wts_ref,
-                                stats_ref,
-                                *, num_cols: int, budget: int, row_tile: int):
+def _slot_extract_stream_kernel(beff_ref, mb_ref, slab_ref, idx_ref,
+                                coeffs_ref, lo_ref, hi_ref, isc_ref, gate_ref,
+                                wts_ref, *out_refs, num_cols: int, budget: int,
+                                row_tile: int, decoded_input: bool,
+                                cache_cap: int):
+    if cache_cap > 0:
+        stats_ref, cache_ref = out_refs
+    else:
+        (stats_ref,), cache_ref = out_refs, None
     w = pl.program_id(0)
     t = pl.program_id(1)
 
     @pl.when(t == 0)
     def _init():
         stats_ref[...] = jnp.zeros_like(stats_ref)
+        if cache_ref is not None:
+            cache_ref[...] = jnp.zeros_like(cache_ref)
 
-    raw = slab_ref[0].astype(jnp.int32)                       # (T, rec)
-    vals = _parse_block(raw, num_cols)                        # (T, C)
+    if decoded_input:
+        vals = slab_ref[0]                                    # (T, C) f32
+    else:
+        raw = slab_ref[0].astype(jnp.int32)                   # (T, rec)
+        vals = _parse_block(raw, num_cols)                    # (T, C)
     x, p = _eval_plan_block(vals, coeffs_ref[...],
                             lo_ref[...], hi_ref[...])         # (S, T)
     x = jnp.where(isc_ref[...][:, None] > 0.0, p, x)
@@ -196,18 +206,35 @@ def _slot_extract_stream_kernel(beff_ref, slab_ref, idx_ref, coeffs_ref,
 
     bt = min(budget, IDX_TILE)
     n_slots = bs.shape[0]
+    cap_ids = jax.lax.broadcasted_iota(jnp.int32, (max(cache_cap, 1), 1), 0)
+    mb = mb_ref[w]
 
-    def fold(i, acc):
+    def fold(i, carry):
+        acc, cacc = carry
         # idx_ref is (1, B//bt, bt): sub-block i on the sublane dim
         sl = pl.load(idx_ref, (pl.ds(0, 1), pl.ds(i, 1), slice(None)))
         k = jax.lax.broadcasted_iota(jnp.int32, (1, bt), 1) + i * bt
         valid_s = (k < bs[:, None]).astype(jnp.float32)       # (S, bt)
         mem = (sl.reshape(bt, 1) == row_ids).astype(jnp.float32)  # (bt, T)
-        return acc + jnp.dot(valid_s, mem,
-                             preferred_element_type=jnp.float32)  # (S, T)
+        acc = acc + jnp.dot(valid_s, mem,
+                            preferred_element_type=jnp.float32)   # (S, T)
+        if cache_cap > 0:
+            # synopsis-cache rows: window position k's decoded value lands at
+            # cache row m_before + k.  mem @ vals picks each position's tile
+            # row (0 if it lives in another tile); sel scatters positions
+            # into their cache rows — only O(cap·C) ever reaches HBM.
+            in_win = (k < beff).astype(jnp.float32)               # (1, bt)
+            sel = ((mb + k) == cap_ids).astype(jnp.float32) * in_win
+            wv = jnp.dot(mem, vals,
+                         preferred_element_type=jnp.float32)      # (bt, C)
+            cacc = cacc + jnp.dot(sel, wv,
+                                  preferred_element_type=jnp.float32)
+        return acc, cacc
 
-    weight = jax.lax.fori_loop(0, budget // bt, fold,
-                               jnp.zeros((n_slots, row_tile), jnp.float32))
+    weight, cache_acc = jax.lax.fori_loop(
+        0, budget // bt, fold,
+        (jnp.zeros((n_slots, row_tile), jnp.float32),
+         jnp.zeros((max(cache_cap, 1), num_cols), jnp.float32)))
 
     gate = gate_ref[...]
     xw = x * (weight * gate[:, None])                         # (S, T)
@@ -215,28 +242,22 @@ def _slot_extract_stream_kernel(beff_ref, slab_ref, idx_ref, coeffs_ref,
     stats_ref[0] += jnp.stack([
         jnp.sum(weight, -1),
         jnp.sum(xw, -1), jnp.sum(x * xw, -1), jnp.sum(pw, -1)], axis=-1)
+    if cache_ref is not None:
+        cache_ref[0] += cache_acc
 
 
 @functools.partial(jax.jit, static_argnames=("num_cols", "row_tile",
+                                             "cache_cap", "decoded_input",
                                              "interpret"))
-def slot_extract_stream_pallas(slab: jnp.ndarray, idx: jnp.ndarray,
-                               b_eff: jnp.ndarray, coeffs, lo, hi, is_count,
-                               gate, weights, num_cols: int,
-                               row_tile: int = 256,
-                               interpret: bool = False) -> jnp.ndarray:
-    """Slab-streaming fused round extraction.
-
-    slab (W, R, rec) uint8 (worker w's chunk rows at slab[w], zero-padded),
-    idx (W, B) window rows, b_eff (W,) budgets, coeffs/lo/hi (S, C) f32,
-    is_count/gate/weights (S,) f32 -> stats (W, S, 4) f32
-    ``(m, Σx, Σx², Σp)``; ``weights`` are the per-slot fairness shares.
-
-    Rows ``>= b_eff[w]`` of the window and slab rows outside the window
-    contribute nothing; padded slab rows are never selected because window
-    indices are drawn below the chunk's true tuple count.
-    """
-    w, r, rec = slab.shape
-    assert rec == num_cols * FIELD_BYTES, (rec, num_cols)
+def _stream_pallas_impl(slab, idx, b_eff, m_before, coeffs, lo, hi, is_count,
+                        gate, weights, num_cols: int, row_tile: int,
+                        cache_cap: int, decoded_input: bool, interpret: bool):
+    w, r, width = slab.shape
+    if decoded_input:
+        assert width == num_cols and slab.dtype == jnp.float32, (
+            slab.shape, slab.dtype)
+    else:
+        assert width == num_cols * FIELD_BYTES, (width, num_cols)
     b = idx.shape[1]
     s = coeffs.shape[0]
     bt = min(b, IDX_TILE)
@@ -244,11 +265,18 @@ def slot_extract_stream_pallas(slab: jnp.ndarray, idx: jnp.ndarray,
     r_pad = (r + row_tile - 1) // row_tile * row_tile
     if r_pad != r:
         slab = jnp.pad(slab, ((0, 0), (0, r_pad - r), (0, 0)))
+    out_shape = [jax.ShapeDtypeStruct((w, s, 4), jnp.float32)]
+    out_specs = [pl.BlockSpec((1, s, 4), lambda i, t, *refs: (i, 0, 0))]
+    if cache_cap > 0:
+        out_shape.append(
+            jax.ShapeDtypeStruct((w, cache_cap, num_cols), jnp.float32))
+        out_specs.append(pl.BlockSpec((1, cache_cap, num_cols),
+                                      lambda i, t, *refs: (i, 0, 0)))
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,   # b_eff
+        num_scalar_prefetch=2,   # b_eff, m_before
         grid=(w, r_pad // row_tile),
         in_specs=[
-            pl.BlockSpec((1, row_tile, rec),
+            pl.BlockSpec((1, row_tile, width),
                          lambda i, t, *refs: (i, t, 0)),
             pl.BlockSpec((1, b // bt, bt), lambda i, t, *refs: (i, 0, 0)),
             pl.BlockSpec((s, num_cols), lambda i, t, *refs: (0, 0)),
@@ -258,15 +286,68 @@ def slot_extract_stream_pallas(slab: jnp.ndarray, idx: jnp.ndarray,
             pl.BlockSpec((s,), lambda i, t, *refs: (0,)),
             pl.BlockSpec((s,), lambda i, t, *refs: (0,)),
         ],
-        out_specs=pl.BlockSpec((1, s, 4), lambda i, t, *refs: (i, 0, 0)),
+        out_specs=out_specs,
     )
-    return pl.pallas_call(
+    out = pl.pallas_call(
         functools.partial(_slot_extract_stream_kernel, num_cols=num_cols,
-                          budget=b, row_tile=row_tile),
+                          budget=b, row_tile=row_tile,
+                          decoded_input=decoded_input, cache_cap=cache_cap),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((w, s, 4), jnp.float32),
+        out_shape=out_shape,
         interpret=interpret,
-    )(jnp.asarray(b_eff, jnp.int32), slab, idx3,
+    )(jnp.asarray(b_eff, jnp.int32), jnp.asarray(m_before, jnp.int32),
+      slab, idx3,
       jnp.asarray(coeffs, jnp.float32), jnp.asarray(lo, jnp.float32),
       jnp.asarray(hi, jnp.float32), jnp.asarray(is_count, jnp.float32),
       jnp.asarray(gate, jnp.float32), jnp.asarray(weights, jnp.float32))
+    return tuple(out) if cache_cap > 0 else out[0]
+
+
+def slot_extract_stream_pallas(slab: jnp.ndarray, idx: jnp.ndarray,
+                               b_eff: jnp.ndarray, coeffs, lo, hi, is_count,
+                               gate, weights, num_cols: int,
+                               row_tile: int = 256, cache_cap: int = 0,
+                               m_before=None, interpret: bool = False):
+    """Slab-streaming fused round extraction.
+
+    slab (W, R, rec) uint8 (worker w's chunk rows at slab[w], zero-padded),
+    idx (W, B) window rows, b_eff (W,) budgets, coeffs/lo/hi (S, C) f32,
+    is_count/gate/weights (S,) f32 -> stats (W, S, 4) f32
+    ``(m, Σx, Σx², Σp)``; ``weights`` are the per-slot fairness shares.
+
+    With ``cache_cap > 0`` the kernel *also* emits the synopsis-cache delta
+    rows ``(W, cache_cap, C)`` (window position k's decoded value at cache
+    row ``m_before[w] + k``, rows ≥ cap dropped in-kernel) and returns
+    ``(stats, cache_rows)`` — the whole decoded ``(W, B, C)`` slab never
+    reaches HBM.
+
+    Rows ``>= b_eff[w]`` of the window and slab rows outside the window
+    contribute nothing; padded slab rows are never selected because window
+    indices are drawn below the chunk's true tuple count.
+    """
+    if m_before is None:
+        m_before = jnp.zeros((idx.shape[0],), jnp.int32)
+    return _stream_pallas_impl(slab, idx, b_eff, m_before, coeffs, lo, hi,
+                               is_count, gate, weights, num_cols=num_cols,
+                               row_tile=row_tile, cache_cap=cache_cap,
+                               decoded_input=False, interpret=interpret)
+
+
+def slot_eval_decoded_pallas(dec: jnp.ndarray, idx: jnp.ndarray,
+                             b_eff: jnp.ndarray, coeffs, lo, hi, is_count,
+                             gate, weights, num_cols: int,
+                             row_tile: int = 256, cache_cap: int = 0,
+                             m_before=None, interpret: bool = False):
+    """Decoded-input slot eval: the parse-once fast path.
+
+    Same grid and stats contract as :func:`slot_extract_stream_pallas`, but
+    the slab is the *already decoded* ``(W, R, C)`` f32 block from the
+    decoded-chunk cache, so the tokenize/parse stage disappears from the
+    round entirely — only the membership-weight fold and slot eval remain.
+    """
+    if m_before is None:
+        m_before = jnp.zeros((idx.shape[0],), jnp.int32)
+    return _stream_pallas_impl(dec, idx, b_eff, m_before, coeffs, lo, hi,
+                               is_count, gate, weights, num_cols=num_cols,
+                               row_tile=row_tile, cache_cap=cache_cap,
+                               decoded_input=True, interpret=interpret)

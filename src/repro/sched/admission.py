@@ -50,7 +50,7 @@ TIER1 = "tier1"
 
 
 def eq4_cost_terms(store, config, rates=None, *, total_bytes=None,
-                   total_tuples=None) -> tuple:
+                   total_tuples=None, decoded_fraction: float = 0.0) -> tuple:
     """The two Eq. (4) cost terms for one full pass over ``store`` —
     ``(T_io, T_cpu)`` modeled seconds — on measured rates when available
     (worker-count and codec-cost rescaled), modeled constants otherwise.
@@ -61,7 +61,14 @@ def eq4_cost_terms(store, config, rates=None, *, total_bytes=None,
 
     ``total_bytes``/``total_tuples`` override the store totals — the
     workload server prices a *surviving* population after chunk quarantine
-    (a lost chunk is neither read nor extracted on any future pass)."""
+    (a lost chunk is neither read nor extracted on any future pass).
+
+    ``decoded_fraction`` is the share of the store's tuples held in the
+    parse-once decoded-chunk cache (``EngineConfig.decoded_cache_bytes``):
+    those tuples skip tokenize/parse on every re-scan, so the *CPU* term is
+    discounted by ``1 - fraction``.  The IO term is untouched — a decoded
+    hit also skips the read, but READ is already priced per first touch
+    (raw_touched), and admission prices full re-passes conservatively."""
     if total_bytes is None:
         total_bytes = float(store.chunk_sizes.sum()) * store.codec.record_bytes
     if total_tuples is None:
@@ -83,20 +90,24 @@ def eq4_cost_terms(store, config, rates=None, *, total_bytes=None,
         t_io = total_bytes / config.io_bytes_per_sec
         t_cpu = (total_tuples * store.codec.extract_cost_per_tuple()
                  / config.cpu_tuple_ops_per_sec / config.num_workers)
+    t_cpu *= 1.0 - min(max(float(decoded_fraction), 0.0), 1.0)
     return t_io, t_cpu
 
 
 def scan_tuples_per_s(store, config, rates=None, *, total_bytes=None,
-                      total_tuples=None) -> float:
+                      total_tuples=None, decoded_fraction: float = 0.0
+                      ) -> float:
     """Aggregate scan throughput (tuples/modeled-second) for a full pass —
     the Eq. (4) overlapped-pipeline rate ``total / max(T_io, T_cpu)``.  A
     slot riding the shared scan accumulates sample at (up to) this rate;
     under fairness contention its share scales by its weight.  The
     population overrides mirror :func:`eq4_cost_terms` (post-quarantine
-    repricing over surviving chunks)."""
+    repricing over surviving chunks), as does ``decoded_fraction`` (the
+    parse-once cache's CPU discount)."""
     t_io, t_cpu = eq4_cost_terms(store, config, rates,
                                  total_bytes=total_bytes,
-                                 total_tuples=total_tuples)
+                                 total_tuples=total_tuples,
+                                 decoded_fraction=decoded_fraction)
     n = float(store.num_tuples) if total_tuples is None else float(total_tuples)
     return n / max(t_io, t_cpu, 1e-12)
 

@@ -171,7 +171,8 @@ def load_measured_rates(path: Optional[str] = None,
 
 
 def select_plan(store, config: EngineConfig, query: Query,
-                rates: Optional[MeasuredRates] = None) -> str:
+                rates: Optional[MeasuredRates] = None,
+                decoded_fraction: float = 0.0) -> str:
     """Cost-model plan selector for one admitted query.
 
     Uses the two Eq. (4) cost terms the resource monitor models — a full
@@ -192,8 +193,14 @@ def select_plan(store, config: EngineConfig, query: Query,
     the paper's testbed calibration.  The terms come from
     :func:`repro.sched.admission.eq4_cost_terms` — the same pricing the
     admission controller judges SLO feasibility with.
+
+    ``decoded_fraction`` is the parse-once decoded-chunk cache's coverage
+    (see :meth:`~repro.data.pipeline.SlabPrefetcher.decoded_fraction`): it
+    discounts the CPU term, so a well-cached store reads as more IO-bound —
+    extraction over cached chunks really is near-free on re-scans.
     """
-    t_io, t_cpu = eq4_cost_terms(store, config, rates)
+    t_io, t_cpu = eq4_cost_terms(store, config, rates,
+                                 decoded_fraction=decoded_fraction)
     if query.epsilon <= 0.0:
         return "chunk_level"
     ratio = t_cpu / max(t_io, 1e-12)
@@ -403,6 +410,12 @@ class OLAWorkloadServer:
         self._scan_rate = scan_tuples_per_s(store, self.config,
                                             rates=self.rates)
 
+    def _decoded_fraction(self) -> float:
+        """Parse-once cache coverage of the scan engine (0.0 when the engine
+        has no decoded cache — packed residency, foreign engines)."""
+        fn = getattr(self.engine, "decoded_fraction", None)
+        return float(fn()) if fn is not None else 0.0
+
     def close(self) -> None:
         """Release engine resources (the stream-residency prefetcher's
         reader thread and host chunk cache); idempotent, packed no-op."""
@@ -473,9 +486,16 @@ class OLAWorkloadServer:
         self._eff_tuples = int(sizes[alive].sum())
         self._eff_bytes = (float(sizes[alive].sum())
                            * self.store.codec.record_bytes)
+        # quarantined chunks leave the decoded cache too (their bytes are no
+        # longer trusted), and the scan-rate CPU discount re-prices over the
+        # shrunken coverage
+        drop = getattr(self.engine, "drop_decoded_chunks", None)
+        if drop is not None and new:
+            drop(new)
         self._scan_rate = scan_tuples_per_s(
             self.store, self.config, rates=self.rates,
-            total_bytes=self._eff_bytes, total_tuples=self._eff_tuples)
+            total_bytes=self._eff_bytes, total_tuples=self._eff_tuples,
+            decoded_fraction=self._decoded_fraction())
         if self.synopsis is not None and new:
             self.synopsis.drop_chunks(new)
         if self.rollup is not None and new:
@@ -913,7 +933,8 @@ class OLAWorkloadServer:
 
     def _admit(self, s: int, wq: WorkloadQuery) -> None:
         plan = wq.plan or select_plan(self.store, self.config, wq.query,
-                                      rates=self.rates)
+                                      rates=self.rates,
+                                      decoded_fraction=self._decoded_fraction())
         row = wq.row or encode_slot(wq.query, self.store.codec.num_cols)
         row["plan"] = np.int32(PLAN_CODES[plan])
         self._refresh_synopsis()
@@ -1179,7 +1200,8 @@ class OLAWorkloadServer:
         # the survivors into every population-priced structure before the
         # round estimates over them
         self._note_quarantine()
-        self.state, rep = self.engine.round_fn(b)(
+        mode, data = self.engine.data_mode(data)
+        self.state, rep = self.engine.round_fn(b, mode)(
             self.state, self.table, data, self.engine.speeds)
         self.rounds += 1
         if self.rollup is not None and self.rollup.cells:

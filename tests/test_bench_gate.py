@@ -43,10 +43,17 @@ def _fresh_docs():
             },
             "rollup": {"rollup_hit_rate": 0.5,
                        "tier1_p95_latency_s": 0.001},
+            "rescan": {
+                "ascii": {"decoded_hit_rate": 0.9,
+                          "hot_rescan_speedup": 3.0},
+                "binary": {"decoded_hit_rate": 0.9},
+            },
             "memory": {"peak_host_rss_bytes": 1_000_000},
             "fingerprint": dict(_FP),
         },
         "BENCH_slot_kernel.json": {
+            "speedup_pallas_vs_ref": 2.5,
+            "interpret_exempt": False,
             "memory": {"peak_host_rss_bytes": 500_000},
             "fingerprint": dict(_FP),
         },
@@ -121,6 +128,59 @@ def test_zero_tier1_latency_baseline_gets_absolute_ceiling():
     fresh["BENCH_workload.json"]["rollup"]["tier1_p95_latency_s"] = scan_like
     failures, _ = gate.compare(fresh, base)
     assert failures == ["BENCH_workload.json:rollup.tier1_p95_latency_s"]
+
+
+def test_rescan_bands():
+    """Decoded-cache lane: hit rate gates at -5pp absolute, the ASCII
+    hot-rescan speedup at -20% relative."""
+    fresh = _fresh_docs()
+    base = copy.deepcopy(fresh)
+    rescan = fresh["BENCH_workload.json"]["rescan"]
+    rescan["ascii"]["decoded_hit_rate"] = 0.9 - 0.049     # inside
+    rescan["ascii"]["hot_rescan_speedup"] = 3.0 * 0.81
+    assert gate.compare(fresh, base)[0] == []
+    rescan["ascii"]["decoded_hit_rate"] = 0.9 - 0.051     # outside
+    rescan["ascii"]["hot_rescan_speedup"] = 3.0 * 0.79
+    failures, _ = gate.compare(fresh, base)
+    assert set(failures) == {
+        "BENCH_workload.json:rescan.ascii.decoded_hit_rate",
+        "BENCH_workload.json:rescan.ascii.hot_rescan_speedup"}
+
+
+def test_compiled_band_gates_when_compiled_lane_ran():
+    fresh = _fresh_docs()
+    base = copy.deepcopy(fresh)
+    fresh["BENCH_slot_kernel.json"]["speedup_pallas_vs_ref"] = 2.5 * 0.81
+    assert gate.compare(fresh, base)[0] == []
+    fresh["BENCH_slot_kernel.json"]["speedup_pallas_vs_ref"] = 2.5 * 0.79
+    failures, _ = gate.compare(fresh, base)
+    assert failures == ["BENCH_slot_kernel.json:speedup_pallas_vs_ref"]
+
+
+def test_compiled_band_skips_on_interpret_only_runs():
+    """An interpret-only fresh run (off-TPU CI: ``speedup_pallas_vs_ref``
+    null, ``interpret_exempt`` true) must SKIP the compiled band — visibly,
+    not silently absent — even against a TPU baseline with a real number."""
+    base = _fresh_docs()
+    for fresh_kern in ({"speedup_pallas_vs_ref": None,
+                        "interpret_exempt": True},
+                       {"speedup_pallas_vs_ref": 1.2,
+                        "interpret_exempt": True}):
+        fresh = _fresh_docs()
+        fresh["BENCH_slot_kernel.json"].update(fresh_kern)
+        failures, lines = gate.compare(fresh, copy.deepcopy(base))
+        assert failures == []
+        skips = [line for line in lines
+                 if line.startswith("SKIP") and "speedup_pallas_vs_ref" in line]
+        assert len(skips) == 1 and "compiled lane did not run" in skips[0]
+    # a null baseline (committed from a CPU runner) is informational
+    fresh = _fresh_docs()
+    base = copy.deepcopy(fresh)
+    base["BENCH_slot_kernel.json"]["speedup_pallas_vs_ref"] = None
+    failures, lines = gate.compare(fresh, base)
+    assert failures == []
+    assert any(line.startswith("INFO") and "speedup_pallas_vs_ref" in line
+               for line in lines)
 
 
 def test_missing_fresh_metric_fails_missing_baseline_is_informational():
