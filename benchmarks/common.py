@@ -114,6 +114,29 @@ def latency_stats_by_class(results) -> dict:
     return {cls: latency_stats(rs) for cls, rs in sorted(by.items())}
 
 
+def trace_summary(tracer) -> dict:
+    """Compact per-span-name summary of a :class:`~repro.obs.trace.
+    SpanTracer` buffer for BENCH_*.json artifacts: event/drop counts,
+    per-name span counts with total seconds, and any chrome-trace schema
+    problems the validator found (empty list = valid)."""
+    from repro.obs.trace import validate_chrome_trace
+
+    doc = tracer.to_chrome_trace()
+    spans: dict = {}
+    for ev in doc["traceEvents"]:
+        if ev.get("ph") != "X":
+            continue
+        d = spans.setdefault(ev["name"], {"count": 0, "total_s": 0.0})
+        d["count"] += 1
+        d["total_s"] += float(ev.get("dur", 0.0)) / 1e6
+    return {
+        "events": len(doc["traceEvents"]),
+        "dropped": int(getattr(tracer, "dropped", 0)),
+        "spans": spans,
+        "schema_problems": validate_chrome_trace(doc),
+    }
+
+
 def datasets(fast: bool):
     t = 8192 if fast else 16384
     chunks = 32 if fast else 64

@@ -68,6 +68,7 @@ import numpy as np
 from repro.core import estimators as est
 from repro.core.estimators import BiLevelStats
 from repro.data.faults import FaultError
+from repro.obs.trace import NULL_TRACER
 from repro.core.queries import (
     AGG_COUNT,
     AGG_SUM,
@@ -1015,6 +1016,16 @@ class _ResidencyMixin:
     """
 
     pipeline = None
+    #: Span tracer for the host-side round feed (claims prediction + slab
+    #: assembly).  Default is the shared no-op; :meth:`set_tracer` swaps in
+    #: a live one and propagates it to the prefetcher so READ spans land in
+    #: the same trace under the reader thread's tid.
+    tracer = NULL_TRACER
+
+    def set_tracer(self, tracer) -> None:
+        self.tracer = tracer
+        if self.pipeline is not None:
+            self.pipeline.tracer = tracer
 
     def _init_residency(self, store, config: EngineConfig, slab_put=None,
                         packed_put=None) -> np.ndarray:
@@ -1041,34 +1052,35 @@ class _ResidencyMixin:
     def round_data(self, state: EngineState) -> tuple[EngineState, object]:
         if self.pipeline is None:
             return state, self.packed
-        while True:
-            j, active, new_head = self.program.plan_claims(state)
-            qn = np.asarray(state.quarantined)
-            # never read a quarantined chunk: its worker still claims it
-            # in-jit but extracts b_eff == 0 from a zero slab row
-            active = np.asarray(active) & ~qn[np.asarray(j)]
-            try:
-                slab = self.pipeline.assemble(j, active)
-            except FaultError as e:
-                if e.chunk_id is None:
-                    raise
-                # retries exhausted / CRC mismatch / permanent loss: drop
-                # the chunk from the population and re-plan.  Progress is
-                # monotone (each pass quarantines one more chunk), so this
-                # loop is bounded by the chunk count.  The decoded-chunk
-                # cache drops the chunk too: a block decoded from bytes the
-                # scan no longer trusts must not keep serving hits.
-                state = quarantine_chunks(state, [e.chunk_id])
-                self.drop_decoded_chunks([e.chunk_id])
-                self.quarantine_log.append(int(e.chunk_id))
-                continue
-            # read-ahead follows the *state* schedule, so a scheduler-
-            # permuted claim order (repro.sched) is what the reader thread
-            # warms up; quarantined chunks are skipped
-            nxt = np.asarray(state.schedule)[new_head:new_head
-                                             + self.pipeline.lookahead]
-            self.pipeline.prefetch(int(p) for p in nxt if not qn[p])
-            return state, slab
+        with self.tracer.span("assemble"):
+            while True:
+                j, active, new_head = self.program.plan_claims(state)
+                qn = np.asarray(state.quarantined)
+                # never read a quarantined chunk: its worker still claims it
+                # in-jit but extracts b_eff == 0 from a zero slab row
+                active = np.asarray(active) & ~qn[np.asarray(j)]
+                try:
+                    slab = self.pipeline.assemble(j, active)
+                except FaultError as e:
+                    if e.chunk_id is None:
+                        raise
+                    # retries exhausted / CRC mismatch / permanent loss: drop
+                    # the chunk from the population and re-plan.  Progress is
+                    # monotone (each pass quarantines one more chunk), so this
+                    # loop is bounded by the chunk count.  The decoded-chunk
+                    # cache drops the chunk too: a block decoded from bytes
+                    # the scan no longer trusts must not keep serving hits.
+                    state = quarantine_chunks(state, [e.chunk_id])
+                    self.drop_decoded_chunks([e.chunk_id])
+                    self.quarantine_log.append(int(e.chunk_id))
+                    continue
+                # read-ahead follows the *state* schedule, so a scheduler-
+                # permuted claim order (repro.sched) is what the reader
+                # thread warms up; quarantined chunks are skipped
+                nxt = np.asarray(state.schedule)[new_head:new_head
+                                                 + self.pipeline.lookahead]
+                self.pipeline.prefetch(int(p) for p in nxt if not qn[p])
+                return state, slab
 
     def drop_decoded_chunks(self, chunk_ids) -> int:
         """Evict chunks from the prefetcher's decoded cache (quarantine /

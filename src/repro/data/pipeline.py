@@ -42,6 +42,7 @@ from typing import Callable, Iterable, Optional
 import numpy as np
 
 from repro.data.faults import RetryPolicy
+from repro.obs.trace import NULL_TRACER
 
 
 def device_resident_bytes(dtype=None) -> int:
@@ -180,7 +181,22 @@ class SlabPrefetcher:
     raw/decoded* slab triple ``(raw (W,R,rec) u8, dec (W,R,C) f32,
     is_decoded (W,) bool)``: cached workers get their decoded rows (no disk
     read, no parse), the rest get raw bytes as before.
+
+    Counter lifecycle (``COUNTER_FIELDS``): the monitoring counters are
+    cumulative over the prefetcher's *lifetime* — they survive ``close()``
+    and reader-thread exit, and are zeroed only by an explicit
+    :meth:`reset_counters` call.  :meth:`bind_metrics` exposes them on a
+    :class:`~repro.obs.metrics.MetricsRegistry` as pull gauges (values read
+    at snapshot time, zero hot-path writes).
     """
+
+    #: Monotone counter attributes — the single source of truth for the
+    #: counter block's lifecycle contract (see class docstring).
+    COUNTER_FIELDS = (
+        "chunk_reads", "cache_hits", "bytes_read", "slabs_built",
+        "decoded_hits", "decoded_misses", "decoded_fills",
+        "extract_tuples_avoided", "read_retries", "read_failures",
+    )
 
     def __init__(self, store, num_workers: int, row_multiple: int = 1,
                  lookahead: int = 8, max_cached_chunks: Optional[int] = None,
@@ -255,21 +271,16 @@ class SlabPrefetcher:
             self._dec_ring = None
         self._empty_slab_dev = None  # lazy (W, 0, rec) raw leaf, all-dec rounds
         self._last_assembled: dict[int, int] = {}
-        # counters (monitoring / tests)
-        self.chunk_reads = 0
-        self.cache_hits = 0
-        self.bytes_read = 0
-        self.slabs_built = 0
-        self.decoded_hits = 0
-        self.decoded_misses = 0
-        self.decoded_fills = 0
-        self.extract_tuples_avoided = 0
-        # fault accounting: retried reads, reads that exhausted their
+        # span tracer (host-side; NULL_TRACER = one method call when off)
+        self.tracer = NULL_TRACER
+        # counters (monitoring / tests) — cumulative for the prefetcher's
+        # lifetime; see COUNTER_FIELDS for the lifecycle contract.  The
+        # fault slice covers retried reads, reads that exhausted their
         # retries, and the per-chunk error slot the reader thread stashes
         # into (re-raised — after one more synchronous retried attempt —
         # at assemble() time instead of being silently swallowed)
-        self.read_retries = 0
-        self.read_failures = 0
+        for _f in self.COUNTER_FIELDS:
+            setattr(self, _f, 0)
         self.read_errors: dict[int, Exception] = {}
         # the reader holds only a weakref: an engine dropped without close()
         # lets the prefetcher be GC'd, upon which the thread exits on its
@@ -312,7 +323,8 @@ class SlabPrefetcher:
                         verify(j, raw)
                     return raw
 
-                raw, retries = self.retry.call(_verified_read, j)
+                with self.tracer.span("READ", chunk=j):
+                    raw, retries = self.retry.call(_verified_read, j)
                 self.store.evict(j)  # host residency stays O(slab)
                 dt = time.perf_counter() - t0
                 with self._lock:
@@ -341,8 +353,12 @@ class SlabPrefetcher:
         the device computes the current round (READ/compute overlap)."""
         if self._closed:
             return
+        n = 0
         for j in chunk_ids:
             self._hints.put(int(j))
+            n += 1
+        if n and self.tracer.enabled:
+            self.tracer.event("prefetch_hint", n=n)
 
     def _fill_raw(self, j: int, out_rows: np.ndarray) -> np.ndarray:
         """Fill ``out_rows[:rows]`` with chunk ``j``'s bytes in place.
@@ -360,8 +376,9 @@ class SlabPrefetcher:
             inflight = j in self._inflight
         if raw is None and not inflight and self._direct_readinto:
             t0 = time.perf_counter()
-            view, retries = self.retry.call(
-                lambda: self.store.read_chunk_into(j, out_rows), j)
+            with self.tracer.span("READ", chunk=j, zero_copy=1):
+                view, retries = self.retry.call(
+                    lambda: self.store.read_chunk_into(j, out_rows), j)
             dt = time.perf_counter() - t0
             with self._lock:
                 self.chunk_reads += 1
@@ -517,7 +534,55 @@ class SlabPrefetcher:
         self.lookahead = int(np.clip(need, self.base_lookahead,
                                      self.max_lookahead))
 
+    # ---------------------------------------------------------- counters ----
+    def counters(self) -> dict:
+        """Point-in-time snapshot of the monotone counters (decoded-cache
+        totals included when that tier is on)."""
+        with self._lock:
+            out = {f: int(getattr(self, f)) for f in self.COUNTER_FIELDS}
+            out["read_errors_pending"] = len(self.read_errors)
+        if self.decoded is not None:
+            out["decoded_evictions"] = int(self.decoded.evictions)
+            out["decoded_bytes_cached"] = int(self.decoded.bytes_cached)
+            out["decoded_tuples_cached"] = int(self.decoded.tuples_cached)
+        return out
+
+    def reset_counters(self) -> None:
+        """Zero every ``COUNTER_FIELDS`` counter, the READ-time probe, and
+        the per-chunk error slots.  This is the *only* reset path: neither
+        ``close()`` nor reader-thread exit touches the counters, so totals
+        stay cumulative over the prefetcher's lifetime unless the owner
+        explicitly asks for a fresh window."""
+        with self._lock:
+            for f in self.COUNTER_FIELDS:
+                setattr(self, f, 0)
+            self.read_errors.clear()
+            self.read_seconds = 0.0
+
+    def bind_metrics(self, registry, prefix: str = "prefetch") -> None:
+        """Expose the counter block on a
+        :class:`~repro.obs.metrics.MetricsRegistry` as pull gauges — read
+        at snapshot time, zero writes on any hot path.  Idempotent; safe to
+        call again after :meth:`reset_counters` (gauges re-read the live
+        attributes)."""
+        for f in self.COUNTER_FIELDS:
+            registry.gauge(f"{prefix}_{f}",
+                           help=f"SlabPrefetcher.{f} (cumulative)",
+                           fn=(lambda f=f: getattr(self, f)))
+        registry.gauge(f"{prefix}_read_seconds",
+                       help="cumulative wall seconds spent in chunk READs",
+                       fn=lambda: self.read_seconds)
+        if self.decoded is not None:
+            dec = self.decoded
+            registry.gauge(f"{prefix}_decoded_evictions",
+                           help="DecodedChunkCache evictions",
+                           fn=lambda: dec.evictions)
+            registry.gauge(f"{prefix}_decoded_bytes_cached",
+                           help="DecodedChunkCache resident bytes",
+                           fn=lambda: dec.bytes_cached)
+
     def close(self) -> None:
+        # counters deliberately NOT reset here — see reset_counters()
         self._closed = True
         self._hints.put(None)
         # join the reader so interpreter shutdown can't race a half-read

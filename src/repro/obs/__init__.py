@@ -1,0 +1,35 @@
+"""Observability: metrics registry, span tracer, per-query explain plane.
+
+Zero third-party dependencies.  ``repro.obs`` imports nothing from the
+rest of ``repro``, so any layer (data plane, engine, server, benches) can
+depend on it without cycles.
+"""
+
+from repro.obs.explain import ExplainRecord, RoundSample
+from repro.obs.metrics import (
+    LATENCY_BUCKETS_S,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+)
+from repro.obs.trace import (
+    NULL_TRACER,
+    NullTracer,
+    SpanTracer,
+    validate_chrome_trace,
+)
+
+__all__ = [
+    "Counter",
+    "ExplainRecord",
+    "Gauge",
+    "Histogram",
+    "LATENCY_BUCKETS_S",
+    "MetricsRegistry",
+    "NULL_TRACER",
+    "NullTracer",
+    "RoundSample",
+    "SpanTracer",
+    "validate_chrome_trace",
+]

@@ -137,10 +137,14 @@ class ServerLoad:
 
 @dataclasses.dataclass(frozen=True)
 class AdmissionDecision:
-    action: str                     # ADMIT | QUEUE | SHED
+    action: str                     # ADMIT | QUEUE | SHED | TIER1
     predicted_service_s: float
     predicted_finish_t: float       # modeled-clock completion estimate
     reason: str
+
+    def as_dict(self) -> dict:
+        """JSON-able form (explain records, metrics snapshots)."""
+        return dataclasses.asdict(self)
 
 
 class AdmissionController:
@@ -160,6 +164,22 @@ class AdmissionController:
         self.shed_enabled = bool(shed_enabled)
         self.pessimism = float(pessimism)
         self.service_model = service_model
+        # per-action decision tallies (observability; see bind_metrics)
+        self.decisions: dict[str, int] = {
+            ADMIT: 0, QUEUE: 0, SHED: 0, TIER1: 0}
+
+    def _done(self, d: AdmissionDecision) -> AdmissionDecision:
+        self.decisions[d.action] = self.decisions.get(d.action, 0) + 1
+        return d
+
+    def bind_metrics(self, registry, prefix: str = "admission") -> None:
+        """Expose the per-action decision tallies on a
+        :class:`~repro.obs.metrics.MetricsRegistry` as pull gauges."""
+        for action in (ADMIT, QUEUE, SHED, TIER1):
+            registry.gauge(f"{prefix}_decisions",
+                           help="admission decisions by action",
+                           labels={"action": action},
+                           fn=(lambda a=action: self.decisions.get(a, 0)))
 
     @staticmethod
     def required_tuples(seed_m: int, seed_err: float, epsilon: float,
@@ -195,10 +215,10 @@ class AdmissionController:
         the *remaining* scan, not a cold start.
         """
         if rollup_err <= epsilon:
-            return AdmissionDecision(
+            return self._done(AdmissionDecision(
                 TIER1, 0.0, max(load.now, arrival_t),
                 f"rollup answer meets target (err {rollup_err:.3g} <= "
-                f"eps {epsilon:.3g}) at zero scan cost")
+                f"eps {epsilon:.3g}) at zero scan cost"))
         free = load.free_slots > 0 and load.queue_ahead == 0
         need = self.required_tuples(seed_m, seed_err, epsilon,
                                     load.total_tuples)
@@ -228,12 +248,14 @@ class AdmissionController:
 
         if not slo.has_deadline:
             action = ADMIT if free else QUEUE
-            return AdmissionDecision(action, service, finish, "no deadline")
+            return self._done(
+                AdmissionDecision(action, service, finish, "no deadline"))
         deadline_t = arrival_t + slo.deadline_s
         if finish > deadline_t and self.shed_enabled:
-            return AdmissionDecision(
+            return self._done(AdmissionDecision(
                 SHED, service, finish,
                 f"predicted finish {finish:.3g}s past deadline "
-                f"{deadline_t:.3g}s")
+                f"{deadline_t:.3g}s"))
         action = ADMIT if free else QUEUE
-        return AdmissionDecision(action, service, finish, "deadline feasible")
+        return self._done(
+            AdmissionDecision(action, service, finish, "deadline feasible"))

@@ -118,6 +118,15 @@ class WorkloadScheduler:
         cap = measured_slot_capacity(rates, self.config.measured_headroom)
         self.fairness.slot_capacity = math.inf if cap is None else cap
 
+    def bind_metrics(self, registry) -> None:
+        """Expose the scheduler's observable state on a
+        :class:`~repro.obs.metrics.MetricsRegistry`: per-action admission
+        decision tallies (pull gauges) and the fairness slot capacity."""
+        self.admission.bind_metrics(registry)
+        registry.gauge("sched_slot_capacity",
+                       help="fairness slot capacity (per-round budget units)",
+                       fn=lambda: self.fairness.slot_capacity)
+
     # ------------------------------------------------------------ feedback ----
     def observe_service(self, slo: Optional[QuerySLO],
                         service_s: float) -> None:

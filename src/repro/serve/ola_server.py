@@ -61,6 +61,9 @@ from repro.core.queries import (
 )
 from repro.core.synopsis import BiLevelSynopsis
 from repro.core import estimators as est
+from repro.obs.explain import ExplainRecord, RoundSample
+from repro.obs.metrics import LATENCY_BUCKETS_S, MetricsRegistry
+from repro.obs.trace import NULL_TRACER
 from repro.sched.admission import (
     SHED,
     TIER1,
@@ -226,6 +229,7 @@ class WorkloadQuery:
     saved_stats: Optional[dict] = None  # eviction snapshot: re-admission seed
     key: Optional[tuple] = None     # rollup pattern key (None: not cacheable
                                     # or the server runs without a rollup tier)
+    explain: Optional[ExplainRecord] = None  # lifecycle explain (repro.obs)
 
 
 @dataclasses.dataclass
@@ -270,6 +274,13 @@ class WorkloadResult:
     degraded: bool = False
     chunks_quarantined: int = 0
     read_retries: int = 0
+    # per-query explain record (repro.obs.explain): admission pricing, tier
+    # routing rationale, per-round (m, est, ci) trajectory, degradation
+    # events.  Excluded from equality — parity gates compare answers, not
+    # telemetry — and its final est/ci_halfwidth are copied from this
+    # result's own floats at finalize (bit-for-bit by construction).
+    explain: Optional[ExplainRecord] = dataclasses.field(
+        default=None, compare=False, repr=False)
 
     @property
     def latency(self) -> float:
@@ -297,7 +308,8 @@ class OLAWorkloadServer:
                  mesh=None, engine=None,
                  measured_rates: Optional[MeasuredRates] = None,
                  rates_path: Optional[str] = None,
-                 scheduler=None, rollup=None):
+                 scheduler=None, rollup=None,
+                 tracer=None, metrics: Optional[MetricsRegistry] = None):
         """``engine`` may be a pre-built :class:`SlotOLAEngine` or
         :class:`~repro.core.engine_spmd.SlotSPMDEngine` (the server only uses
         the shared round-step protocol); with ``mesh`` and no ``engine`` a
@@ -323,6 +335,16 @@ class OLAWorkloadServer:
         from the cell — no slot, no scan rounds — whenever the cached
         answer meets their accuracy target.  ``None`` (default) keeps
         every query on the Tier-2 scan path.
+
+        ``tracer`` — a :class:`~repro.obs.trace.SpanTracer` records the
+        query lifecycle (submit → admission → per-round claims/kernel/
+        merge/estimate → retire) and the scan plane's READ/prefetch
+        overlap as nested spans, exportable as chrome-trace JSON.  All
+        instrumentation is host-side: a traced NEUTRAL run is
+        round-for-round bit-exact with an untraced one.  ``metrics`` — a
+        :class:`~repro.obs.metrics.MetricsRegistry` to surface counters
+        on; one is created internally when omitted (see
+        :meth:`metrics_snapshot`).
         """
         if engine is not None:
             if engine.store is not store:
@@ -409,6 +431,70 @@ class OLAWorkloadServer:
         self._slot_retries0 = np.zeros(max_slots, np.int64)
         self._scan_rate = scan_tuples_per_s(store, self.config,
                                             rates=self.rates)
+        # observability: span tracer (no-op singleton when untraced) and
+        # the metrics registry every scattered counter surfaces through
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        set_tracer = getattr(self.engine, "set_tracer", None)
+        if set_tracer is not None and self.tracer.enabled:
+            set_tracer(self.tracer)
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._bind_metrics()
+
+    def _bind_metrics(self) -> None:
+        """Register the server's observable state on the metrics registry —
+        all pull gauges reading live attributes (zero hot-path writes), plus
+        the subsystem bindings: prefetcher counters, rollup tier tallies,
+        scheduler admission decisions, and fault-injector event counts when
+        the store is injector-wrapped."""
+        reg = self.metrics
+        reg.gauge("server_rounds", help="engine rounds run",
+                  fn=lambda: self.rounds)
+        reg.gauge("server_topup_passes", help="schedule re-open passes",
+                  fn=lambda: self.topup_passes)
+        reg.gauge("server_tuples_scanned",
+                  help="raw tuples extracted by the shared scan",
+                  fn=lambda: self.tuples_scanned)
+        reg.gauge("server_queue_depth", help="queries waiting for a slot",
+                  fn=lambda: len(self.queue))
+        reg.gauge("server_slots_resident", help="occupied scan slots",
+                  fn=lambda: sum(w is not None for w in self.slot_wq))
+        reg.gauge("server_shed_count", help="queries shed (best-effort)",
+                  fn=lambda: self.shed_count)
+        reg.gauge("server_preempt_count", help="slot evictions",
+                  fn=lambda: self.preempt_count)
+        reg.gauge("server_chunks_quarantined",
+                  help="chunks removed from the population",
+                  fn=lambda: self._quarantine_count)
+        reg.gauge("server_quarantine_events",
+                  help="engine quarantine_log length",
+                  fn=lambda: len(getattr(self.engine, "quarantine_log",
+                                         None) or []))
+        pf = getattr(self.engine, "pipeline", None)
+        if pf is not None:
+            pf.bind_metrics(reg)
+        if self.rollup is not None:
+            self.rollup.bind_metrics(reg)
+        if self.scheduler is not None:
+            self.scheduler.bind_metrics(reg)
+        injected = getattr(self.store, "injected", None)
+        if isinstance(injected, dict):
+            for kind in sorted(injected):
+                reg.gauge("faults_injected",
+                          help="FaultInjector events by kind",
+                          labels={"kind": kind},
+                          fn=(lambda k=kind: self.store.injected.get(k, 0)))
+
+    def metrics_snapshot(self) -> dict:
+        """Public JSON-able observability snapshot: every registry
+        instrument (pull gauges evaluated now — prefetcher/rollup/
+        scheduler/fault counters included) plus ``quarantine_log``, the
+        quarantined chunk ids in quarantine order (previously reachable
+        only through engine internals)."""
+        snap = self.metrics.snapshot()
+        snap["quarantine_log"] = [
+            int(j) for j in
+            (getattr(self.engine, "quarantine_log", None) or [])]
+        return snap
 
     def _decoded_fraction(self) -> float:
         """Parse-once cache coverage of the scan engine (0.0 when the engine
@@ -478,6 +564,16 @@ class OLAWorkloadServer:
             return
         new = [int(j) for j in log[self._quarantine_seen:]]
         self._quarantine_seen = len(log)
+        if new:
+            # degradation is a per-query fact: every resident query's answer
+            # now describes a smaller population — record it on their
+            # explain trajectories
+            for w in self.slot_wq:
+                if w is not None and w.explain is not None:
+                    w.explain.record_degradation(
+                        round=self.rounds, t=self.t_model, chunk_ids=new)
+            if self.tracer.enabled:
+                self.tracer.event("quarantine", chunks=len(new))
         qn = np.asarray(self.state.quarantined)
         self._quarantine_count = int(qn.sum())
         sizes = np.asarray(self.store.chunk_sizes)
@@ -545,9 +641,14 @@ class OLAWorkloadServer:
         at = self.t_model if arrival_t is None else float(arrival_t)
         key = (pattern_key(query, self.store.codec.num_cols)
                if self.rollup is not None else None)
-        self.queue.append(WorkloadQuery(qid=qid, query=query, arrival_t=at,
-                                        plan=plan, row=row, slo=slo, key=key))
+        wq = WorkloadQuery(qid=qid, query=query, arrival_t=at,
+                           plan=plan, row=row, slo=slo, key=key,
+                           explain=ExplainRecord(qid=qid, name=query.name,
+                                                 t_submit=at))
+        self.queue.append(wq)
         self.queue.sort(key=lambda wq: (wq.arrival_t, wq.qid))
+        if self.tracer.enabled:
+            self.tracer.event("submit", qid=qid, query=query.name)
         return qid
 
     # --------------------------------------------------------- admission ----
@@ -602,6 +703,26 @@ class OLAWorkloadServer:
             return "preempted"
         return "queued" if wq.queued else "admitted"
 
+    def _finish(self, wq: WorkloadQuery, result: WorkloadResult) -> None:
+        """Single retirement funnel for every completion path (tier-1,
+        shed, seed-retire, scan-retire): finalize + attach the explain
+        record (its final est/CI copied from the result's own floats —
+        bit-for-bit), count the outcome, observe latency, and emit the
+        retire trace event."""
+        if wq.explain is not None:
+            result.explain = wq.explain.finalize(result)
+        self.results.append(result)
+        self.metrics.counter(
+            "queries_total", help="completed queries by scheduler outcome",
+            labels={"outcome": result.sched_outcome}).inc()
+        self.metrics.histogram(
+            "query_latency_s", help="submit->done latency (modeled s)",
+            bounds=LATENCY_BUCKETS_S).observe(result.latency)
+        if self.tracer.enabled:
+            self.tracer.event("retire", qid=result.qid,
+                              outcome=result.sched_outcome,
+                              rounds=result.rounds_resident)
+
     def _admit_ready_scheduled(self) -> None:
         """Scheduler intake: ready queries are considered in queue-policy
         order; each is admitted, left queued, shed — or, with
@@ -635,6 +756,15 @@ class OLAWorkloadServer:
                     restart = True
                     break
                 decision = self._decide_admission(wq, len(free), ahead)
+                if wq.explain is not None:
+                    wq.explain.admission_reason = decision.reason
+                    wq.explain.predicted_service_s = \
+                        decision.predicted_service_s
+                    wq.explain.predicted_finish_t = \
+                        decision.predicted_finish_t
+                if self.tracer.enabled:
+                    self.tracer.event("admission", qid=wq.qid,
+                                      action=decision.action)
                 if decision.action == TIER1 and self._try_tier1(wq):
                     # rollup cache answered: no slot consumed, the slot
                     # picture is unchanged — no restart needed
@@ -696,6 +826,8 @@ class OLAWorkloadServer:
         wq.preempted = True
         wq.queued = True
         self.preempt_count += 1
+        if self.tracer.enabled:
+            self.tracer.event("preempt", qid=wq.qid, slot=s)
         self._release(s)
         self.queue.append(wq)
         self.queue.sort(key=lambda w: (w.arrival_t, w.qid))
@@ -756,7 +888,14 @@ class OLAWorkloadServer:
         slo_met = None
         if wq.slo is not None:
             slo_met = wq.slo.met(latency, (hi - lo) / 2.0)
-        self.results.append(WorkloadResult(
+        if wq.explain is not None:
+            wq.explain.tier = "tier1"
+            wq.explain.tier_reason = (
+                "promoted rollup cell decided the HAVING verdict"
+                if err > eps_eff else
+                f"promoted rollup cell meets target (err {err:.3g} <= "
+                f"eps {eps_eff:.3g}); no slot, no scan rounds")
+        self._finish(wq, WorkloadResult(
             qid=wq.qid, name=wq.query.name, estimate=est_v, lo=lo, hi=hi,
             err=err, decision=decision, plan="rollup",
             t_submit=wq.arrival_t, t_admit=now, t_done=now,
@@ -916,7 +1055,11 @@ class OLAWorkloadServer:
             # also meet the query's accuracy ask (ε or a HAVING verdict)
             accurate = (not unserved) and (err <= q.epsilon or decision != -1)
             slo_met = accurate and wq.slo.met(latency, (hi - lo) / 2.0)
-        self.results.append(WorkloadResult(
+        if wq.explain is not None and not wq.explain.tier_reason:
+            wq.explain.tier_reason = (
+                "shed: no seed available, answer unserved" if unserved
+                else "shed: best-effort synopsis answer, no scan rounds")
+        self._finish(wq, WorkloadResult(
             qid=wq.qid, name=q.name, estimate=estimate, lo=lo, hi=hi,
             err=err, decision=decision, plan="shed",
             t_submit=wq.arrival_t, t_admit=now, t_done=now,
@@ -989,6 +1132,24 @@ class OLAWorkloadServer:
         self.slot_plan[s] = plan
         self.slot_seeded[s] = seeded
         self._slot_retries0[s] = self._pipeline_retries()
+        if wq.explain is not None:
+            # the Eq. (4) pricing the plan was chosen under, frozen at the
+            # admission instant (population-adjusted, cache-discounted)
+            df = self._decoded_fraction()
+            t_io, t_cpu = eq4_cost_terms(
+                self.store, self.config, self.rates,
+                total_bytes=self._eff_bytes,
+                total_tuples=self._eff_tuples, decoded_fraction=df)
+            wq.explain.plan = plan
+            wq.explain.cost_t_io_s = float(t_io)
+            wq.explain.cost_t_cpu_s = float(t_cpu)
+            wq.explain.decoded_fraction = float(df)
+            wq.explain.effective_epsilon = float(
+                row.get("eps", wq.query.epsilon))
+            if not wq.explain.admission_reason:
+                wq.explain.admission_reason = "fifo: free slot"
+        if self.tracer.enabled:
+            self.tracer.event("admit", qid=wq.qid, slot=s, plan=plan)
 
         # Section 6.3 best case, per slot: the seed alone may already meet
         # the target — answer at admission without consuming scan rounds.
@@ -1021,7 +1182,10 @@ class OLAWorkloadServer:
         if wq.slo is not None:
             slo_met = wq.slo.met(self.t_model - wq.arrival_t,
                                  (hi_f - lo_f) / 2.0)
-        self.results.append(WorkloadResult(
+        if wq.explain is not None and not wq.explain.tier_reason:
+            wq.explain.tier_reason = ("seed met the target at admission "
+                                      "(answered without scan rounds)")
+        self._finish(wq, WorkloadResult(
             qid=wq.qid, name=q.name, estimate=float(np.asarray(est_v)[0]),
             lo=lo_f, hi=hi_f, err=e,
             decision=decision, plan=self.slot_plan[s],
@@ -1099,7 +1263,11 @@ class OLAWorkloadServer:
                 slo_met = wq.slo.met(self.t_model - wq.arrival_t,
                                      float("nan") if bad
                                      else (hi_f - lo_f) / 2.0)
-            self.results.append(WorkloadResult(
+            if wq.explain is not None and not wq.explain.tier_reason:
+                wq.explain.tier_reason = (
+                    "scan exhausted before the slot saw any tuple" if bad
+                    else "scan-served: retired at its stop condition")
+            self._finish(wq, WorkloadResult(
                 qid=wq.qid, name=wq.query.name,
                 estimate=float("nan") if bad else float(rep.estimate[s]),
                 lo=lo_f,
@@ -1181,50 +1349,82 @@ class OLAWorkloadServer:
             self.state = self.state._replace(
                 stopped=self.state.stopped.at[jnp.asarray(late)].set(True))
 
+    def _record_trajectory(self, rep, b) -> None:
+        """Append this round's ``(m, est, ci_halfwidth, b_eff, weight)``
+        point to every resident query's explain record — host-side reads of
+        round-report fields the retire path materializes anyway."""
+        live = [(s, self.slot_wq[s]) for s in range(self.max_slots)
+                if self.slot_wq[s] is not None
+                and self.slot_wq[s].explain is not None]
+        if not live:
+            return
+        est_a = np.asarray(rep.estimate, float)
+        lo = np.asarray(rep.lo, float)
+        hi = np.asarray(rep.hi, float)
+        m_rows = np.asarray(self.state.stats.m).sum(axis=1)
+        for s, wq in live:
+            w = float(self._cur_weights[s])
+            wq.explain.record_round(RoundSample(
+                round=self.rounds, m=int(m_rows[s]),
+                est=float(est_a[s]),
+                ci_halfwidth=float((hi[s] - lo[s]) / 2.0),
+                b_eff=int(round(float(b) * w)), weight=w))
+
     def step(self) -> bool:
         """Admit ready arrivals, run one engine round, retire finished
         queries.  Returns False when there is nothing to do right now."""
+        tr = self.tracer
         self._admit_ready()
         if not self._any_active():
             return False
-        if self.scheduler is not None:
-            self._apply_scheduling()
-        b = self.engine.budget_ladder(float(self.state.budget))
-        # round_data: the packed device view, or (stream residency) a slab
-        # assembled from the predicted claims — which also covers top-up
-        # passes, since _begin_topup_pass rewrites cur/head *before* the
-        # prediction runs, so re-opened chunks are re-requested from the
-        # prefetcher exactly when a worker is about to claim them
-        self.state, data = self.engine.round_data(self.state)
-        # a failed read may have quarantined chunks inside round_data: fold
-        # the survivors into every population-priced structure before the
-        # round estimates over them
-        self._note_quarantine()
-        mode, data = self.engine.data_mode(data)
-        self.state, rep = self.engine.round_fn(b, mode)(
-            self.state, self.table, data, self.engine.speeds)
-        self.rounds += 1
-        if self.rollup is not None and self.rollup.cells:
-            # incremental maintenance: resident slots running a promoted
-            # pattern fold their round-accumulated stats into the cell —
-            # one batched device→host copy for all such slots (near-free;
-            # empty in the no-promoted-occupant common case)
-            ids = [s for s in range(self.max_slots)
-                   if self.slot_wq[s] is not None
-                   and self.rollup.get(self.slot_wq[s].key) is not None]
-            for s, row in slot_stats_fold(self.state, ids).items():
-                self.rollup.fold(self.slot_wq[s].key, row)
-        if self.scheduler is not None:
-            # next round's ε-distance claim weights read this report
-            self._last_err = np.asarray(rep.err, float)
-        if (self.scheduler is not None
-                and self.scheduler.config.deadline_enforcement):
-            self._enforce_deadlines()
-        self._retire_finished(rep)
-        if self._any_active() and bool(rep.exhausted):
-            if not self._begin_topup_pass():
-                # census complete: estimates are as good as they will get
-                self._force_retire_exhausted(rep)
+        with tr.span("round", round=self.rounds):
+            if self.scheduler is not None:
+                self._apply_scheduling()
+            b = self.engine.budget_ladder(float(self.state.budget))
+            # round_data: the packed device view, or (stream residency) a
+            # slab assembled from the predicted claims — which also covers
+            # top-up passes, since _begin_topup_pass rewrites cur/head
+            # *before* the prediction runs, so re-opened chunks are
+            # re-requested from the prefetcher exactly when a worker is
+            # about to claim them
+            with tr.span("claims"):
+                self.state, data = self.engine.round_data(self.state)
+            # a failed read may have quarantined chunks inside round_data:
+            # fold the survivors into every population-priced structure
+            # before the round estimates over them
+            self._note_quarantine()
+            mode, data = self.engine.data_mode(data)
+            with tr.span("kernel", b=b, mode=mode):
+                self.state, rep = self.engine.round_fn(b, mode)(
+                    self.state, self.table, data, self.engine.speeds)
+            self.rounds += 1
+            with tr.span("merge"):
+                if self.rollup is not None and self.rollup.cells:
+                    # incremental maintenance: resident slots running a
+                    # promoted pattern fold their round-accumulated stats
+                    # into the cell — one batched device→host copy for all
+                    # such slots (near-free; empty in the
+                    # no-promoted-occupant common case)
+                    ids = [s for s in range(self.max_slots)
+                           if self.slot_wq[s] is not None
+                           and self.rollup.get(self.slot_wq[s].key)
+                           is not None]
+                    for s, row in slot_stats_fold(self.state, ids).items():
+                        self.rollup.fold(self.slot_wq[s].key, row)
+            with tr.span("estimate"):
+                self._record_trajectory(rep, b)
+                if self.scheduler is not None:
+                    # next round's ε-distance claim weights read this report
+                    self._last_err = np.asarray(rep.err, float)
+                if (self.scheduler is not None
+                        and self.scheduler.config.deadline_enforcement):
+                    self._enforce_deadlines()
+                self._retire_finished(rep)
+                if self._any_active() and bool(rep.exhausted):
+                    if not self._begin_topup_pass():
+                        # census complete: estimates are as good as they
+                        # will get
+                        self._force_retire_exhausted(rep)
         return True
 
     def _force_retire_exhausted(self, rep) -> None:

@@ -172,11 +172,33 @@ class RollupTier:
         self.cells: dict[tuple, RollupCell] = {}
         self._log: deque[tuple] = deque()   # completed-query pattern log
         self._counts: dict[tuple, int] = {}
-        # observability counters (surfaced by benchmarks/bench_workload.py)
+        # observability counters (surfaced by benchmarks/bench_workload.py
+        # and the server's metrics registry via counters()/bind_metrics)
         self.tier1_hits = 0
         self.promotions = 0
         self.demotions = 0
         self.invalidations = 0
+
+    COUNTER_FIELDS = ("tier1_hits", "promotions", "demotions",
+                      "invalidations")
+
+    def counters(self) -> dict:
+        """Point-in-time snapshot of the tier's monotone counters plus the
+        current cell population."""
+        out = {f: int(getattr(self, f)) for f in self.COUNTER_FIELDS}
+        out["cells"] = len(self.cells)
+        return out
+
+    def bind_metrics(self, registry, prefix: str = "rollup") -> None:
+        """Register pull gauges for every counter on a
+        :class:`~repro.obs.metrics.MetricsRegistry` (read at snapshot
+        time, zero hot-path writes)."""
+        for f in self.COUNTER_FIELDS:
+            registry.gauge(f"{prefix}_{f}",
+                           help=f"RollupTier.{f} (cumulative)",
+                           fn=(lambda f=f: getattr(self, f)))
+        registry.gauge(f"{prefix}_cells", help="materialized rollup cells",
+                       fn=lambda: len(self.cells))
 
     # ----------------------------------------------------------- mining ----
     def observe(self, query: Query, key: Optional[tuple],
