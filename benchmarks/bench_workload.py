@@ -30,11 +30,13 @@ import numpy as np
 
 from repro.core.controller import EstimationController
 from repro.core.engine import EngineConfig, OLAEngine
-from repro.core.queries import Linear, Query, Range, TRUE
-from repro.data.generator import make_synthetic_zipf, store_dataset
+from repro.core.queries import GroupBy, Linear, Query, Range, TRUE
+from repro.data.generator import (make_synthetic_zipf, make_wiki_like,
+                                  store_dataset)
 from repro.sched import QuerySLO, SchedulerConfig, WorkloadScheduler
 from repro.sched.admission import scan_tuples_per_s
-from repro.serve.ola_server import OLAWorkloadServer, poisson_workload
+from repro.serve.ola_server import (OLAWorkloadServer, ServerOptions,
+                                    poisson_workload)
 from repro.serve.rollup import RollupConfig
 
 
@@ -57,8 +59,9 @@ def run_server(store, cfg, arrivals, max_slots, scheduler=None):
     from benchmarks.common import latency_stats, latency_stats_by_class
     from repro.data.pipeline import device_resident_bytes
 
-    srv = OLAWorkloadServer(store, cfg, max_slots=max_slots,
-                            scheduler=scheduler)
+    srv = OLAWorkloadServer(
+              store, cfg,
+              options=ServerOptions(max_slots=max_slots, scheduler=scheduler))
     for item in arrivals:
         q, at, slo = item if len(item) == 3 else (*item, None)
         srv.submit(q, arrival_t=at, slo=slo)
@@ -120,8 +123,9 @@ def run_closed_loop(store, cfg, queries, slos, max_slots, concurrency,
     honest complement to the open-loop Poisson lane."""
     from benchmarks.common import latency_stats
 
-    srv = OLAWorkloadServer(store, cfg, max_slots=max_slots,
-                            scheduler=scheduler)
+    srv = OLAWorkloadServer(
+              store, cfg,
+              options=ServerOptions(max_slots=max_slots, scheduler=scheduler))
     total = len(queries)
     submitted = 0
 
@@ -261,7 +265,9 @@ def run_rollup_lane(store, cfg, slots: int, smoke: bool = False) -> dict:
     arrivals = poisson_workload(queries, rate_per_model_s=2000.0, seed=22)
 
     def _serve(rollup):
-        srv = OLAWorkloadServer(store, cfg, max_slots=slots, rollup=rollup)
+        srv = OLAWorkloadServer(
+                  store, cfg,
+                  options=ServerOptions(max_slots=slots, rollup=rollup))
         for q, at in arrivals:
             srv.submit(q, arrival_t=at)
         results = srv.run()
@@ -351,9 +357,11 @@ def run_chaos_lane(store, cfg, slots: int, smoke: bool = False) -> dict:
         # benchmark clock is modeled: don't wall-sleep through backoff
         engine.pipeline.retry = RetryPolicy(max_attempts=max_attempts,
                                             sleep=lambda s: None)
-        srv = OLAWorkloadServer(fstore, cfg, engine=engine,
-                                synopsis_budget_tuples=0,
-                                scheduler=WorkloadScheduler(sched_cfg))
+        srv = OLAWorkloadServer(
+                  fstore, cfg,
+                  options=ServerOptions(engine=engine,
+                      synopsis_budget_tuples=0,
+                      scheduler=WorkloadScheduler(sched_cfg)))
         for q, at, slo in items:
             srv.submit(q, arrival_t=at, slo=slo)
         results = srv.run()
@@ -603,9 +611,12 @@ def run_sequential(store, cfg, arrivals, synopsis_budget):
 def run(fast: bool = False, smoke: bool = False, sched: bool = True,
         sched_only: bool = False, rollup: bool = True,
         rollup_only: bool = False, chaos_only: bool = False,
-        rescan_only: bool = False, obs_only: bool = False) -> str:
+        rescan_only: bool = False, obs_only: bool = False,
+        groups_only: bool = False) -> str:
     if rescan_only:
         return _run_rescan_only(smoke=smoke)
+    if groups_only:
+        return _run_groups_only(smoke=smoke)
     if smoke:
         t, chunks, nq, slots = 2048, 16, 6, 4
     elif fast:
@@ -829,8 +840,10 @@ def _run_obs_only(store, cfg, arrivals, slots: int, smoke: bool = True) -> str:
     from repro.obs.trace import SpanTracer
 
     def _one(tracer=None, metrics=None):
-        srv = OLAWorkloadServer(store, cfg, max_slots=slots,
-                                tracer=tracer, metrics=metrics)
+        srv = OLAWorkloadServer(
+                  store, cfg,
+                  options=ServerOptions(max_slots=slots, tracer=tracer,
+                      metrics=metrics))
         for item in arrivals:
             q, at, slo = item if len(item) == 3 else (*item, None)
             srv.submit(q, arrival_t=at, slo=slo)
@@ -896,6 +909,79 @@ def _run_obs_only(store, cfg, arrivals, slots: int, smoke: bool = True) -> str:
     })
 
 
+def _run_groups_only(smoke: bool = True) -> str:
+    """CI grouped-query smoke lane: a Zipf-skewed wiki-like store (column 0
+    is a heavy-tailed language id) served a batch of ``Query(group_by=...)``
+    aggregates.  Measures the discovery plane's top-K recall — the tracked
+    cells at retirement vs the exact per-language totals — plus the
+    ``__other__`` spill coverage and modeled p95 latency, and merges the
+    ``groups`` section into BENCH_workload.json."""
+    if smoke:
+        t, chunks, langs, nq, slots = 8192, 12, 16, 4, 4
+    else:
+        t, chunks, langs, nq, slots = 32768, 32, 40, 8, 4
+    vals, _ = make_wiki_like(t, num_languages=langs, seed=0)
+    store = store_dataset(vals, chunks, "ascii", uneven=True, seed=0)
+    cfg = EngineConfig(num_workers=4, seed=7, max_groups=8)
+
+    rng = np.random.default_rng(3)
+    queries = []
+    for i in range(nq):
+        col = int(rng.choice([1, 2]))         # hits or bytes
+        eps = float(rng.uniform(0.05, 0.10))
+        coeffs = tuple(1.0 if k == col else 0.0 for k in range(4))
+        queries.append(Query(agg="sum", expr=Linear(coeffs), epsilon=eps,
+                             name=f"g{i}-c{col}",
+                             group_by=GroupBy(col=0, max_groups=8, top_k=5)))
+
+    srv = OLAWorkloadServer(store, cfg, options=ServerOptions(
+        max_slots=slots, synopsis_budget_tuples=0))
+    for i, q in enumerate(queries):
+        srv.submit(q, arrival_t=1e-4 * i)
+    results = srv.run()
+    assert not srv.truncated, "grouped workload did not finish"
+    srv.close()
+
+    recalls, spill_seen = [], 0
+    for r in results:
+        q = queries[r.qid]
+        agg_col = next(k for k, c in enumerate(q.expr.coeffs) if c)
+        totals = {}
+        for lang, x in zip(vals[:, 0], vals[:, agg_col]):
+            totals[float(lang)] = totals.get(float(lang), 0.0) + float(x)
+        k = q.group_by.effective_top_k
+        true_top = {v for v, _ in
+                    sorted(totals.items(), key=lambda kv: -kv[1])[:k]}
+        tracked = {g.value for g in r.groups if not g.is_other}
+        recalls.append(len(true_top & tracked) / len(true_top))
+        spill_seen += any(g.is_other and g.n > 0 for g in r.groups)
+    recall = float(np.mean(recalls))
+    lat = np.asarray([r.latency for r in results])
+    assert recall >= 0.9, (recall, recalls)
+
+    groups_out = {
+        "topk_recall": round(recall, 4),
+        "p95_latency_s": round(float(np.percentile(lat, 95)), 6),
+        "mean_latency_s": round(float(lat.mean()), 6),
+        "num_queries": len(results),
+        "spill_nonempty": int(spill_seen),
+        "rounds": srv.rounds,
+        "tuples": srv.tuples_scanned,
+    }
+    _merge_section("groups", groups_out)
+    print(f"[bench_workload] grouped lane over {len(results)} grouped "
+          f"queries ({t} tuples, {langs} languages)")
+    print(f"  groups: top-{queries[0].group_by.effective_top_k} recall "
+          f"{recall:.3f}, p95 latency {groups_out['p95_latency_s']:.4f}s "
+          f"(modeled), spill nonempty {spill_seen}/{len(results)}, "
+          f"{srv.rounds} rounds")
+    return json.dumps({
+        "topk_recall": groups_out["topk_recall"],
+        "p95_latency_s": groups_out["p95_latency_s"],
+        "num_queries": groups_out["num_queries"],
+    })
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
@@ -927,11 +1013,17 @@ def main() -> None:
                          "overhead + parity + chrome-trace schema) and "
                          "merge the 'obs' section into BENCH_workload.json "
                          "(CI observability smoke lane)")
+    ap.add_argument("--groups", action="store_true",
+                    help="run only the grouped-query lane (online GROUP BY "
+                         "discovery recall + latency) and merge the "
+                         "'groups' section into BENCH_workload.json "
+                         "(CI grouped smoke lane)")
     args = ap.parse_args()
     run(fast=args.fast, smoke=args.smoke, sched=not args.no_sched,
         sched_only=args.sched_only, rollup=not args.no_rollup,
         rollup_only=args.rollup_only, chaos_only=args.chaos,
-        rescan_only=args.rescan, obs_only=args.obs)
+        rescan_only=args.rescan, obs_only=args.obs,
+        groups_only=args.groups)
 
 
 if __name__ == "__main__":

@@ -16,7 +16,8 @@ import numpy as np
 from repro.core.engine import EngineConfig
 from repro.core.queries import Having, Linear, Query, Range
 from repro.data.generator import make_synthetic_zipf, store_dataset
-from repro.serve.ola_server import OLAWorkloadServer, select_plan
+from repro.serve.ola_server import (OLAWorkloadServer, ServerOptions,
+                                    select_plan)
 
 
 def main():
@@ -27,8 +28,10 @@ def main():
     exact_sum = float(x.sum())
 
     cfg = EngineConfig(num_workers=4, seed=7)
-    server = OLAWorkloadServer(store, cfg, max_slots=4,
-                               synopsis_budget_tuples=4096)
+    server = OLAWorkloadServer(
+                 store, cfg,
+                 options=ServerOptions(max_slots=4,
+                     synopsis_budget_tuples=4096))
 
     workload = [
         (Query(agg="sum", expr=Linear(coef), epsilon=0.05,

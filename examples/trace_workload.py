@@ -25,7 +25,7 @@ from repro.core.queries import Linear, Query, Range
 from repro.data.generator import make_synthetic_zipf, store_dataset
 from repro.obs.metrics import MetricsRegistry
 from repro.obs.trace import SpanTracer, validate_chrome_trace
-from repro.serve.ola_server import OLAWorkloadServer
+from repro.serve.ola_server import OLAWorkloadServer, ServerOptions
 
 OUT = "ola_trace.json"
 
@@ -38,9 +38,11 @@ def main():
     tracer = SpanTracer()
     metrics = MetricsRegistry()
     cfg = EngineConfig(num_workers=4, seed=7)
-    server = OLAWorkloadServer(store, cfg, max_slots=4,
-                               synopsis_budget_tuples=2048,
-                               tracer=tracer, metrics=metrics)
+    server = OLAWorkloadServer(
+                 store, cfg,
+                 options=ServerOptions(max_slots=4,
+                     synopsis_budget_tuples=2048, tracer=tracer,
+                     metrics=metrics))
 
     workload = [
         (Query(agg="sum", expr=Linear(coef), epsilon=0.05,

@@ -57,7 +57,8 @@ fresh run against the new baseline.  One command does all of it::
 (equivalent to ``python -m benchmarks.bench_workload --smoke --no-sched
 --no-rollup``, then ``--smoke --sched-only``, then ``--smoke
 --rollup-only``, then ``--smoke --chaos``, then ``--smoke --rescan``,
-then ``python -m benchmarks.bench_slot_kernel --smoke``).
+then ``--smoke --obs``, then ``--smoke --groups``, then ``python -m
+benchmarks.bench_slot_kernel --smoke``).
 See README "Re-baselining benchmarks".
 
 Usage::
@@ -130,6 +131,12 @@ CHECKS = [
     (WORKLOAD, "rescan.ascii.decoded_hit_rate", "abs_drop", 0.05, "modeled"),
     (WORKLOAD, "rescan.binary.decoded_hit_rate", "abs_drop", 0.05, "modeled"),
     (WORKLOAD, "rescan.ascii.hot_rescan_speedup", "rel_drop", 0.20, "modeled"),
+    # grouped-query lane: the discovery plane's top-K recall (tracked cells
+    # at retirement vs exact per-group totals, deterministic per seed) may
+    # not drop more than 5pp, and the grouped modeled p95 latency not grow
+    # more than 25%
+    (WORKLOAD, "groups.topk_recall", "abs_drop", 0.05, "modeled"),
+    (WORKLOAD, "groups.p95_latency_s", "rel_grow", 0.25, "modeled"),
     # observability lane: tracing overhead (traced vs untraced wall time on
     # the same runner, best-of-N, a ratio so it ports across machines) may
     # not grow more than 5 percentage points past the committed baseline —
@@ -165,6 +172,7 @@ SMOKE_LANES = [
     ["-m", "benchmarks.bench_workload", "--smoke", "--chaos"],
     ["-m", "benchmarks.bench_workload", "--smoke", "--rescan"],
     ["-m", "benchmarks.bench_workload", "--smoke", "--obs"],
+    ["-m", "benchmarks.bench_workload", "--smoke", "--groups"],
     ["-m", "benchmarks.bench_slot_kernel", "--smoke"],
 ]
 

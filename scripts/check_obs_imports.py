@@ -1,0 +1,96 @@
+"""CI lint: ``repro.obs`` must not import the rest of ``repro``.
+
+The observability layer (metrics registry, span tracer, explain records)
+is deliberately one-directional: engines and the workload server push
+values *into* it, and nothing in ``repro.obs`` reaches back into the
+engine, scheduler, or serving planes.  That keeps the plain-float explain
+surface (e.g. ``RoundSample.groups``) importable from analysis scripts
+with no jax or engine dependency, and makes the dependency direction
+checkable.
+
+The check is an AST walk over ``src/repro/obs/*.py``: any ``import`` or
+``from ... import`` that resolves to a ``repro.*`` module outside
+``repro.obs`` fails — including relative imports that climb out of the
+package (``from .. import engine``).
+
+Usage::
+
+    python scripts/check_obs_imports.py [--root src/repro/obs]
+"""
+
+from __future__ import annotations
+
+import argparse
+import ast
+import os
+import sys
+
+ALLOWED_PREFIX = "repro.obs"
+
+
+def violations_in(path: str) -> list[tuple[int, str]]:
+    with open(path) as f:
+        tree = ast.parse(f.read(), filename=path)
+    bad: list[tuple[int, str]] = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                name = alias.name
+                if name.startswith("repro") and not (
+                    name == ALLOWED_PREFIX
+                    or name.startswith(ALLOWED_PREFIX + ".")
+                ):
+                    bad.append((node.lineno, f"import {name}"))
+        elif isinstance(node, ast.ImportFrom):
+            if node.level >= 2:
+                # "from .. import x" escapes repro.obs by construction
+                bad.append(
+                    (node.lineno, "from " + "." * node.level + " import ...")
+                )
+                continue
+            name = node.module or ""
+            if node.level == 0 and name.startswith("repro") and not (
+                name == ALLOWED_PREFIX
+                or name.startswith(ALLOWED_PREFIX + ".")
+            ):
+                bad.append((node.lineno, f"from {name} import ..."))
+    return bad
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="forbid repro.obs -> repro.* imports"
+    )
+    default_root = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "src",
+        "repro",
+        "obs",
+    )
+    ap.add_argument("--root", default=default_root)
+    args = ap.parse_args(argv)
+
+    failures = 0
+    files = sorted(
+        os.path.join(args.root, f)
+        for f in os.listdir(args.root)
+        if f.endswith(".py")
+    )
+    if not files:
+        print(f"no python files under {args.root}", file=sys.stderr)
+        return 1
+    for path in files:
+        for lineno, desc in violations_in(path):
+            print(f"{path}:{lineno}: repro.obs imports engine-side code "
+                  f"({desc})", file=sys.stderr)
+            failures += 1
+    if failures:
+        print(f"{failures} forbidden import(s): repro.obs must stay "
+              "import-clean of the rest of repro", file=sys.stderr)
+        return 1
+    print(f"repro.obs import boundary OK ({len(files)} files)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

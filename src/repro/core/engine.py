@@ -83,6 +83,7 @@ from repro.core.queries import (
     slot_evaluate,
 )
 from repro.kernels import ops as kernel_ops
+from repro.kernels.ref import TALLY_BUCKETS, tally_hash
 from repro.sampling.permutation import (
     chunk_seed,
     permutation_window_dyn,
@@ -141,6 +142,12 @@ class EngineConfig:
     # skipping tokenize/parse.  Estimates and the modeled resource clock are
     # bit-identical with the cache on or off; only wall time changes.
     decoded_cache_bytes: int = 0
+    # grouped query plane (slot-table mode only): a slot may own up to
+    # max_groups tracked group cells plus one __other__ spill cell, each with
+    # its own (S, G, N) sufficient-stat rows.  0 keeps the group arrays
+    # zero-width — the grouped code then compiles away and ungrouped engines
+    # are statically unchanged (round-for-round bit-exact vs older builds).
+    max_groups: int = 0
 
     def __post_init__(self):
         assert self.strategy in STRATEGIES, self.strategy
@@ -151,6 +158,7 @@ class EngineConfig:
         assert self.decoded_cache_bytes == 0 or self.residency == "stream", (
             "decoded_cache_bytes requires residency='stream' (the cache "
             "lives in the slab prefetcher)")
+        assert self.max_groups >= 0
 
 
 class EngineState(NamedTuple):
@@ -196,6 +204,16 @@ class EngineState(NamedTuple):
                                  # and estimation rescales to the surviving
                                  # chunk count and tuple total (CIs widen;
                                  # answers are flagged degraded upstream).
+    # grouped query plane (G = max_groups+1 incl. the __other__ spill cell;
+    # all four are (S, 0, N) when EngineConfig.max_groups == 0).  A cell's
+    # gm counts every tuple the slot sampled while the cell was live —
+    # *not* group-filtered — exactly the per-chunk sample size a dedicated
+    # fan-out slot would carry, so cells live since admission are bit-exact
+    # against the expand_group_by oracle.
+    gm: jnp.ndarray              # (S, G, N) int32 per-cell sample sizes
+    gys: jnp.ndarray             # (S, G, N) per-cell Σ x (group-masked)
+    gyq: jnp.ndarray             # (S, G, N) per-cell Σ x²
+    gps: jnp.ndarray             # (S, G, N) per-cell Σ p (base pred ∧ group)
 
 
 class RoundReport(NamedTuple):
@@ -212,6 +230,18 @@ class RoundReport(NamedTuple):
     bytes_round: jnp.ndarray     # ()
     all_stopped: jnp.ndarray     # () bool
     exhausted: jnp.ndarray       # () bool — every chunk closed
+    # grouped plane (zero-width when the engine has max_groups == 0)
+    g_est: jnp.ndarray           # (S, G) per-cell estimates
+    g_lo: jnp.ndarray            # (S, G)
+    g_hi: jnp.ndarray            # (S, G)
+    g_err: jnp.ndarray           # (S, G) per-cell error ratio
+    g_n: jnp.ndarray             # (S, G) int32 tuples in each cell's sample
+    g_tal: jnp.ndarray           # (S, 3, H) per-round group-value tallies
+                                 # [count, Σ value, Σ value²] per salted-hash
+                                 # bucket of the slot's group column (base-
+                                 # predicate-masked rows only) — the host
+                                 # folds these into the SpaceSaving sketch
+                                 # that discovers heavy-hitter groups online
 
 
 class _Collectives:
@@ -290,6 +320,14 @@ class EngineProgram:
         self.cost_per_tuple = float(codec.extract_cost_per_tuple())
         self.total_tuples = int(np.sum(chunk_sizes))
         self.num_cols = int(codec.num_cols)
+        # grouped-plane sizing (static): G cells per slot incl. __other__,
+        # H tally buckets for the online group-discovery sketch feed
+        self.group_cells = (config.max_groups + 1) if config.max_groups > 0 else 0
+        self.tally_buckets = TALLY_BUCKETS if self.group_cells else 0
+        if self.group_cells and self.max_slots is None:
+            raise ValueError(
+                "max_groups > 0 requires slot-table mode (grouped queries "
+                "run through the workload slot plane)")
         # EXTRACT backend resolution (static — baked into the jitted round).
         # The fused kernel parses fixed-width ASCII, needs linear+range
         # plans, and accumulates in float32: an explicit
@@ -319,6 +357,12 @@ class EngineProgram:
                 "records and accumulates its sums in f32)")
         self._ops_backend = None if backend == "ref" else backend
         self.extract_pallas = self._ops_backend is not None
+        if (self.group_cells and self.extract_pallas
+                and config.residency == "stream"):
+            raise ValueError(
+                "grouped queries (max_groups > 0) support the fused Pallas "
+                "kernel only under residency='packed'; use extract_backend="
+                "'ref' for streaming/decoded rounds")
         if self.extract_pallas:
             if self.max_slots is None:
                 # frozen plane: lower the query list to coefficient form once;
@@ -374,6 +418,10 @@ class EngineProgram:
                             jnp.float32),
             schedule=jnp.asarray(self.schedule_np),
             quarantined=jnp.zeros((self.n_chunks,), bool),
+            gm=jnp.zeros((q, self.group_cells, self.n_chunks), jnp.int32),
+            gys=jnp.zeros((q, self.group_cells, self.n_chunks), dtype),
+            gyq=jnp.zeros((q, self.group_cells, self.n_chunks), dtype),
+            gps=jnp.zeros((q, self.group_cells, self.n_chunks), dtype),
         )
         if synopsis_seed is not None:
             stats = state.stats._replace(
@@ -435,6 +483,33 @@ class EngineProgram:
         return jnp.zeros((n,), bool).at[schedule].set(
             jnp.arange(n) < prefix_len)
 
+    def _round_tallies(self, colv: jnp.ndarray, pr: jnp.ndarray,
+                       live: jnp.ndarray, rnd: jnp.ndarray,
+                       dtype) -> jnp.ndarray:
+        """Per-slot ``(S, 3, H)`` group-value tallies ``[count, Σv, Σv²]``,
+        bucketed by a per-round salted hash of the group column.  ``pr`` is
+        the fully-masked predicate indicator, so only counted base-predicate
+        rows tally; ``live`` (S,) gates tallies to slots still discovering
+        groups (the ``__other__`` cell's active flag — ungrouped slots would
+        otherwise tally their clipped column).  The salt (round number)
+        re-buckets every round: hash collisions are transient, and the
+        host-side SpaceSaving fold only trusts buckets whose moments prove a
+        single value (Σv²·n == (Σv)²).
+        """
+        s, w, b = colv.shape
+        hbk = self.tally_buckets
+        h = tally_hash(colv, rnd.astype(jnp.uint32), hbk)        # (S, W, B)
+        flat = (jnp.arange(s, dtype=jnp.int32)[:, None, None] * hbk
+                + h).reshape(-1)
+        prf = (pr * live[:, None, None].astype(pr.dtype)
+               ).reshape(-1).astype(dtype)
+        cv = colv.reshape(-1).astype(dtype)
+        cnt = jnp.zeros((s * hbk,), dtype).at[flat].add(prf)
+        vsum = jnp.zeros((s * hbk,), dtype).at[flat].add(prf * cv)
+        vsq = jnp.zeros((s * hbk,), dtype).at[flat].add(prf * cv * cv)
+        return jnp.stack([cnt.reshape(s, hbk), vsum.reshape(s, hbk),
+                          vsq.reshape(s, hbk)], axis=1)
+
     # ------------------------------------------------------------ round ----
     def round_body(self, state: EngineState, data: jnp.ndarray,
                    speeds: jnp.ndarray, b_static: int,
@@ -472,6 +547,10 @@ class EngineProgram:
             data, dec, is_dec = data
         n = self.n_chunks
         slot_mode = slots is not None
+        grouped = slot_mode and self.group_cells > 0
+        if slot_mode:
+            assert slots.gval.shape[1] == self.group_cells, (
+                "slot table group capacity != engine max_groups")
         q = self.q_dim
         dtype = state.stats.ysum.dtype
         sizes = state.stats.M
@@ -578,6 +657,20 @@ class EngineProgram:
                     stats4, cache_rows = res
                 else:
                     stats4 = res
+            elif grouped:
+                stats4, cols, gstats4, tal_w = kernel_ops.slot_extract(
+                    data, j, idx, b_eff, coeffs, p_lo, p_hi, isc, gate_v,
+                    weights=wts,
+                    return_cols=cap > 0, backend=self._ops_backend,
+                    gcol=slots.gcol, gval=slots.gval, gact=slots.gact,
+                    salt=state.round.astype(jnp.uint32),
+                    tally_buckets=self.tally_buckets)
+                # (W, S, G, 4) partials -> (S, G, W) sums; worker tallies
+                # sum locally here (psum merges across devices below)
+                g_sum_x = jnp.moveaxis(gstats4[..., 1].astype(dtype), 0, -1)
+                g_sum_xx = jnp.moveaxis(gstats4[..., 2].astype(dtype), 0, -1)
+                g_sum_p = jnp.moveaxis(gstats4[..., 3].astype(dtype), 0, -1)
+                tal = jnp.sum(tal_w.astype(dtype), axis=0)       # (S, 3, H)
             else:
                 stats4, cols = kernel_ops.slot_extract(
                     data, j, idx, b_eff, coeffs, p_lo, p_hi, isc, gate_v,
@@ -618,6 +711,31 @@ class EngineProgram:
             sum_x = jnp.sum(x, -1)                               # (Q|S, W)
             sum_xx = jnp.sum(x * x, -1)
             sum_p = jnp.sum(pr, -1)
+            if grouped:
+                # per-cell accumulation from the materialized columns.  All
+                # mask factors are exact 0/1 floats, so multiplying them in
+                # any order is IEEE-exact — a tracked cell's products equal
+                # the expand_group_by fan-out slot's (expr · p · valid ·
+                # gate) bit-for-bit, which is the oracle the grouped plane
+                # is gated on.  A row matches at most one tracked value, so
+                # the __other__ spill indicator is the complement of the
+                # tracked-cell sum.
+                gcol_c = jnp.clip(slots.gcol, 0, self.num_cols - 1)
+                colv = jnp.moveaxis(cols, -1, 0)[gcol_c]         # (S, W, B)
+                gvals = slots.gval.astype(dtype)
+                gactf = slots.gact.astype(dtype)
+                eq = (colv[:, None] == gvals[:, :, None, None]).astype(dtype)
+                trk = eq * gactf[:, :, None, None]               # (S, G, W, B)
+                other = ((1.0 - jnp.sum(trk[:, :-1], axis=1))
+                         * gactf[:, -1][:, None, None])          # (S, W, B)
+                ind = jnp.concatenate([trk[:, :-1], other[:, None]], axis=1)
+                gx = ind * x[:, None]                            # (S, G, W, B)
+                gp = ind * pr[:, None]
+                g_sum_x = jnp.sum(gx, -1)                        # (S, G, W)
+                g_sum_xx = jnp.sum(gx * gx, -1)
+                g_sum_p = jnp.sum(gp, -1)
+                tal = self._round_tallies(colv, pr, gactf[:, -1],
+                                          state.round, dtype)
 
         # ---- 3. MERGE -------------------------------------------------------
         af = active.astype(jnp.int32)
@@ -632,6 +750,15 @@ class EngineProgram:
             # broadcast when every weight is 1)
             deltas["dmq"] = jnp.zeros((q, n), jnp.int32).at[:, j].add(
                 b_slot * af[None, :])
+        if grouped:
+            gcells = self.group_cells
+            deltas["dgys"] = jnp.zeros((q, gcells, n), dtype).at[:, :, j].add(
+                g_sum_x * af)
+            deltas["dgyq"] = jnp.zeros((q, gcells, n), dtype).at[:, :, j].add(
+                g_sum_xx * af)
+            deltas["dgps"] = jnp.zeros((q, gcells, n), dtype).at[:, :, j].add(
+                g_sum_p * af)
+            deltas["gtal"] = tal
         deltas = coll.merge(deltas)
         if slot_mode:
             # a slot only counts tuples extracted while it is active
@@ -643,6 +770,25 @@ class EngineProgram:
             ysum=state.stats.ysum + deltas["dys"],
             ysq=state.stats.ysq + deltas["dyq"],
             psum=state.stats.psum + deltas["dps"])
+        if grouped:
+            # a cell's m counts every tuple the slot sampled while the cell
+            # was live — not group-filtered — matching the per-chunk sample
+            # size a dedicated fan-out slot would carry (predicate-
+            # independent), so cells live since admission are bit-exact
+            # against the fan-out oracle.  Cells activated mid-scan
+            # accumulate from activation: any contiguous window of a chunk's
+            # committed random permutation is still a uniform without-
+            # replacement sample.
+            gact_i = slots.gact.astype(jnp.int32)
+            gm_new = state.gm + dm_q[:, None, :] * gact_i[:, :, None]
+            gys_new = state.gys + deltas["dgys"]
+            gyq_new = state.gyq + deltas["dgyq"]
+            gps_new = state.gps + deltas["dgps"]
+            g_tal = deltas["gtal"]
+        else:
+            gm_new, gys_new = state.gm, state.gys
+            gyq_new, gps_new = state.gyq, state.gps
+            g_tal = jnp.zeros((q, 3, self.tally_buckets), dtype)
         scan_m = state.scan_m + deltas["dm"]
         offset = state.offset + deltas["dm"]
 
@@ -828,6 +974,57 @@ class EngineProgram:
                 lo, hi, op, slots.having_thr.astype(dtype))
             stop_now = (err <= eps_vec) | (
                 (op != HAVING_NONE) & (decided != -1))
+            if grouped:
+                # per-cell estimates over the (S, G, N) stat rows — the
+                # bi-level estimators broadcast over arbitrary leading dims,
+                # and a cell with gm == 0 on a chunk simply isn't in that
+                # cell's sample (self-masking), so the slot-level chunk
+                # eligibility mask is the only extra gating needed
+                gmask = est_mask[:, None, :]
+                gstats_est = BiLevelStats(
+                    M=stats.M, m=jnp.where(gmask, gm_new, 0),
+                    ysum=jnp.where(gmask, gys_new, 0),
+                    ysq=jnp.where(gmask, gyq_new, 0),
+                    psum=jnp.where(gmask, gps_new, 0),
+                    n_total=n_eff, m_total=m_eff)
+                g_sum_t = est.tau_hat(gstats_est)
+                g_sum_v, _ = est.var_hat(gstats_est)
+                g_cnt_t = est.count_tau_hat(gstats_est)
+                g_cnt_v, _ = est.count_var_hat(gstats_est)
+                g_avg_t, g_avg_v, _ = est.avg_estimate(gstats_est)
+                agg_b = agg[:, None]
+                g_est = jnp.where(agg_b == AGG_SUM, g_sum_t,
+                                  jnp.where(agg_b == AGG_COUNT, g_cnt_t,
+                                            g_avg_t))
+                g_var = jnp.where(agg_b == AGG_SUM, g_sum_v,
+                                  jnp.where(agg_b == AGG_COUNT, g_cnt_v,
+                                            g_avg_v))
+                g_half = (slots.z.astype(dtype)[:, None]
+                          * jnp.sqrt(jnp.maximum(g_var, 0.0)))
+                g_lo, g_hi = g_est - g_half, g_est + g_half
+                g_err = est.error_ratio(g_est, g_lo, g_hi)
+                g_n = jnp.sum(jnp.where(gmask, gm_new, 0), axis=-1)
+                # grouped stop: the slot's top-K live cells (by |estimate|)
+                # must all meet its eps.  lax.top_k needs a static k, so
+                # rank by double argsort and compare against per-slot gtopk.
+                cell_ok = (slots.gact > 0) & (g_n > 0)
+                scores = jnp.where(cell_ok, jnp.abs(g_est), -jnp.inf)
+                ranks = jnp.argsort(jnp.argsort(-scores, axis=-1), axis=-1)
+                need_cell = cell_ok & (ranks < slots.gtopk[:, None])
+                # discovery guard: with fewer than top_k live cells the
+                # top-K rule would be vacuously satisfied (a fresh slot has
+                # only __other__ live, which converges long before online
+                # discovery has promoted anything) — such a slot keeps
+                # scanning; stores with fewer true groups than top_k run to
+                # exhaustion and retire on the census
+                n_live = jnp.sum(cell_ok.astype(jnp.int32), axis=-1)
+                grouped_ok = (jnp.all(~need_cell | (g_err <= eps_vec[:, None]),
+                                      axis=-1)
+                              & (n_live >= slots.gtopk))
+                # grouped slots retire on the grouped rule alone (the scalar
+                # err describes the base-predicate population; per-cell
+                # HAVING verdicts are assembled host-side at retire)
+                stop_now = jnp.where(slots.gcol >= 0, grouped_ok, stop_now)
             stopped = state.stopped | stop_now
             all_stopped = jnp.all(stopped | ~slots.active)
             n_chunks_rep = jnp.sum((scan_m > 0).astype(jnp.int32))
@@ -856,6 +1053,11 @@ class EngineProgram:
             n_chunks_rep = stats_est.n
             m_tuples_rep = jnp.sum(stats_est.m)
 
+        if not grouped:
+            g_est = g_lo = g_hi = g_err = jnp.zeros(
+                (q, self.group_cells), dtype)
+            g_n = jnp.zeros((q, self.group_cells), jnp.int32)
+
         all_closed = jnp.all(closed) & (head >= n)
         new_state = EngineState(
             stats=stats, scan_m=scan_m, offset=offset, closed=closed,
@@ -865,13 +1067,16 @@ class EngineProgram:
             round=state.round + 1, t_io=state.t_io + round_io,
             t_cpu=state.t_cpu + round_cpu, cpu_bound=cpu_bound,
             cached_m=state.cached_m, raw_touched=raw_touched, cache=cache,
-            schedule=state.schedule, quarantined=state.quarantined)
+            schedule=state.schedule, quarantined=state.quarantined,
+            gm=gm_new, gys=gys_new, gyq=gyq_new, gps=gps_new)
         report = RoundReport(
             estimate=estimate, lo=lo, hi=hi, err=err, decided=decided,
             n_chunks=n_chunks_rep, m_tuples=m_tuples_rep,
             round_io_s=round_io, round_cpu_s=round_cpu,
             tuples_round=flag_deltas["b_eff_total"], bytes_round=bytes_round,
-            all_stopped=all_stopped, exhausted=all_closed)
+            all_stopped=all_stopped, exhausted=all_closed,
+            g_est=g_est, g_lo=g_lo, g_hi=g_hi, g_err=g_err, g_n=g_n,
+            g_tal=g_tal)
         return new_state, report
 
 
@@ -959,6 +1164,48 @@ def slot_stats_write(stats: BiLevelStats, s: int, seed: Optional[dict],
         psum=stats.psum.at[s].set(ps_row)), seeded
 
 
+def zero_group_cells(state: EngineState, s: int,
+                     cells=None) -> EngineState:
+    """Zero slot ``s``'s per-group sufficient-stat rows (all cells, or the
+    given cell indices).  Host-side, between rounds — a no-op on ungrouped
+    engines.
+
+    Used at admission (a fresh occupant must not inherit the previous
+    query's cells) and by online discovery: promoting a value out of
+    ``__other__`` changes what the spill cell means, so its stats restart.
+    A restarted cell's sample is the post-restart window of each chunk's
+    committed permutation — a contiguous window of a uniform random
+    permutation, hence still a uniform without-replacement sample.
+    """
+    if state.gm.shape[1] == 0:
+        return state
+    sel = slice(None) if cells is None else np.asarray(list(cells), np.int64)
+    gm = np.asarray(state.gm).copy()
+    gys = np.asarray(state.gys).copy()
+    gyq = np.asarray(state.gyq).copy()
+    gps = np.asarray(state.gps).copy()
+    gm[s, sel] = 0
+    gys[s, sel] = 0
+    gyq[s, sel] = 0
+    gps[s, sel] = 0
+    return state._replace(gm=jnp.asarray(gm), gys=jnp.asarray(gys),
+                          gyq=jnp.asarray(gyq), gps=jnp.asarray(gps))
+
+
+def slot_group_rows(state: EngineState, s: int) -> dict:
+    """Host-side copy of slot ``s``'s per-cell stat rows
+    ``{gm, gys, gyq, gps}`` (each ``(G, N)``).  Per-cell counterpart of
+    :func:`slot_stats_snapshot`: each cell's row has the same
+    ``{m, ysum, ysq, psum}`` contract, so the rollup tier folds tracked
+    cells through the exact same cell-fold path as scalar slots."""
+    return dict(
+        gm=np.asarray(state.gm[s]),
+        gys=np.asarray(state.gys[s]),
+        gyq=np.asarray(state.gyq[s]),
+        gps=np.asarray(state.gps[s]),
+    )
+
+
 def quarantine_chunks(state: EngineState, chunk_ids) -> EngineState:
     """Host-side quarantine write (between rounds, like the scheduler's
     claim reorder): mark chunks quarantined + closed and zero their
@@ -993,13 +1240,25 @@ def quarantine_chunks(state: EngineState, chunk_ids) -> EngineState:
     psum[..., ids] = 0
     cached_m = np.asarray(state.cached_m).copy()
     cached_m[ids] = 0
-    return state._replace(
+    state = state._replace(
         quarantined=jnp.asarray(q),
         closed=jnp.asarray(closed),
         cached_m=jnp.asarray(cached_m),
         stats=stats._replace(
             m=jnp.asarray(m), ysum=jnp.asarray(ysum),
             ysq=jnp.asarray(ysq), psum=jnp.asarray(psum)))
+    if state.gm.shape[1] > 0:
+        gm = np.asarray(state.gm).copy()
+        gys = np.asarray(state.gys).copy()
+        gyq = np.asarray(state.gyq).copy()
+        gps = np.asarray(state.gps).copy()
+        gm[..., ids] = 0
+        gys[..., ids] = 0
+        gyq[..., ids] = 0
+        gps[..., ids] = 0
+        state = state._replace(gm=jnp.asarray(gm), gys=jnp.asarray(gys),
+                               gyq=jnp.asarray(gyq), gps=jnp.asarray(gps))
+    return state
 
 
 class _ResidencyMixin:

@@ -70,7 +70,7 @@ def engine_state_specs() -> EngineState:
         head=rep, cur=P("data"), budget=rep, decay=rep, calib_sum=rep,
         calib_cnt=rep, first_est=rep, stopped=rep, round=rep, t_io=rep,
         t_cpu=rep, cpu_bound=rep, cached_m=rep, raw_touched=rep, cache=rep,
-        schedule=rep, quarantined=rep)
+        schedule=rep, quarantined=rep, gm=rep, gys=rep, gyq=rep, gps=rep)
 
 
 def report_specs() -> RoundReport:

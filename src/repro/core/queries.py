@@ -6,10 +6,13 @@ Queries follow the paper's Section 2.2 form::
 
 with AGGREGATE in {SUM, COUNT, AVERAGE}, ``expression`` a numeric expression
 over columns, and ``predicate`` a conjunction of range/comparison terms.
-GROUP BY is handled exactly as the paper prescribes: each group becomes a
-separate query with a group-membership predicate, and all the queries run
-simultaneously over the same scan (the engine's stats arrays carry a leading
-query dimension).
+GROUP BY is expressed as ``Query(group_by=GroupBy(col, max_groups, top_k))``:
+one slot owns a bounded vector of per-group cells whose values are discovered
+online during the scan (a SpaceSaving-style heavy-hitter sketch promotes hot
+values into cells; rare values spill into an ``__other__`` cell so memory
+stays fixed).  The paper's original prescription — each group a separate
+query with a group-membership predicate — survives as :func:`group_fanout`
+and is the bit-exactness oracle for the grouped plane.
 
 ``compile_queries`` lowers a list of queries to a single jitted *tile
 evaluator*  ``cols (t, C) -> (x (Q, t), p (Q, t))``  where ``x_i`` is the
@@ -22,6 +25,7 @@ evaluator's coefficient form.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Callable, NamedTuple, Optional, Sequence
 
 import jax.numpy as jnp
@@ -151,9 +155,71 @@ class Having:
 
 
 @dataclasses.dataclass(frozen=True)
+class GroupBy:
+    """Online GROUP BY over one column, bounded at ``max_groups`` cells.
+
+    Up to ``max_groups`` distinct values get dedicated group cells with their
+    own sufficient stats and CIs; values are discovered online by a bounded
+    heavy-hitter sketch fed from per-round group tallies, and everything not
+    tracked spills into an ``__other__`` cell so memory stays fixed.  The
+    query retires when its ``top_k`` largest cells (by |estimate|) meet the
+    query's epsilon.  ``values`` pins known group values into cells at
+    admission — pinned cells accumulate from round 0 and are bit-exact
+    against the :func:`group_fanout` expansion on the ref backend.
+    """
+
+    col: int
+    max_groups: int = 8
+    top_k: int = 0  # 0 -> all max_groups cells must converge
+    values: Optional[tuple[float, ...]] = None
+
+    def __post_init__(self):
+        if self.max_groups < 1:
+            raise ValueError("GroupBy.max_groups must be >= 1")
+        if not (0 <= self.top_k <= self.max_groups):
+            raise ValueError("GroupBy.top_k must be in [0, max_groups]")
+        if self.values is not None:
+            vals = tuple(float(v) for v in self.values)
+            if len(vals) > self.max_groups:
+                raise ValueError(
+                    f"GroupBy: {len(vals)} pinned values exceed "
+                    f"max_groups={self.max_groups}")
+            if len(set(vals)) != len(vals):
+                raise ValueError("GroupBy: pinned values must be distinct")
+            object.__setattr__(self, "values", vals)
+
+    @property
+    def effective_top_k(self) -> int:
+        return self.top_k if self.top_k > 0 else self.max_groups
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupResult:
+    """One cell of a grouped answer (``WorkloadResult.groups``).
+
+    ``value`` is the group's column value (``nan`` for the ``__other__``
+    spill cell, flagged by ``is_other``); ``n`` is the number of tuples
+    sampled while the cell was live; ``decision`` is the HAVING decision
+    code for the cell (1 pass / 0 fail / -1 undecided or no clause).
+    """
+
+    value: float
+    estimate: float
+    lo: float
+    hi: float
+    err: float
+    n: int
+    decision: int = -1
+    is_other: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
 class Query:
     """One OLA query.  ``epsilon`` is the target error ratio (stop condition),
-    ``confidence`` the CI level, both per Section 2.2's user parameters."""
+    ``confidence`` the CI level, both per Section 2.2's user parameters.
+    ``group_by`` turns the scalar aggregate into an online GROUP BY (the
+    scalar ``estimate/lo/hi`` then describe the *base predicate* population
+    and the per-group answers arrive as ``WorkloadResult.groups``)."""
 
     agg: str  # 'sum' | 'count' | 'avg'
     expr: object = ONE
@@ -162,10 +228,13 @@ class Query:
     epsilon: float = 0.05
     confidence: float = 0.95
     name: str = "q"
+    group_by: Optional[GroupBy] = None
 
     def __post_init__(self):
         if self.agg not in ("sum", "count", "avg"):
             raise ValueError(f"unsupported aggregate: {self.agg}")
+        if self.group_by is not None and not isinstance(self.group_by, GroupBy):
+            raise TypeError("Query.group_by must be a GroupBy (or None)")
 
     @property
     def columns_used(self) -> frozenset[int]:
@@ -189,18 +258,43 @@ class Query:
 
         walk(self.expr)
         walk(self.pred)
+        if self.group_by is not None:
+            cols.add(self.group_by.col)
         return frozenset(cols)
+
+
+def group_fanout(base: Query, group_col: int, group_values: Sequence[float],
+                 ) -> list[Query]:
+    """GROUP BY per Section 2.2's original prescription: one scalar query per
+    *pre-known* group value, identical except for an extra group-membership
+    conjunct, all run simultaneously.  This expansion is the correctness
+    oracle for the grouped slot plane — a ``Query(group_by=...)`` over the
+    same known values must be bit-exact against it on the ref backend."""
+    out = []
+    for v in group_values:
+        pred = And(terms=(base.pred, GroupEq(group_col, float(v))))
+        out.append(dataclasses.replace(base, pred=pred, group_by=None,
+                                       name=f"{base.name}[g={v}]"))
+    return out
 
 
 def expand_group_by(base: Query, group_col: int, group_values: Sequence[float],
                     ) -> list[Query]:
-    """GROUP BY handling per Section 2.2: one query per group, identical
-    except for an extra group-membership conjunct, all run simultaneously."""
-    out = []
-    for v in group_values:
-        pred = And(terms=(base.pred, GroupEq(group_col, float(v))))
-        out.append(dataclasses.replace(base, pred=pred, name=f"{base.name}[g={v}]"))
-    return out
+    """Deprecated: express GROUP BY as
+    ``Query(group_by=GroupBy(col, max_groups, top_k))`` and read the answer
+    from ``WorkloadResult.groups``.
+
+    This wrapper is the pre-grouped-plane workaround — one slot per
+    *pre-known* group value, no online discovery, no ``__other__`` spill.
+    Behavior is unchanged (it delegates to :func:`group_fanout`); it emits a
+    ``DeprecationWarning`` and will be removed once no caller needs the
+    explicit fan-out."""
+    warnings.warn(
+        "expand_group_by is deprecated; use "
+        "Query(group_by=GroupBy(col, max_groups, top_k)) and read "
+        "WorkloadResult.groups",
+        DeprecationWarning, stacklevel=2)
+    return group_fanout(base, group_col, group_values)
 
 
 # ---------------------------------------------------------------------------
@@ -296,15 +390,34 @@ class SlotTable(NamedTuple):
                              # counts only the first ceil(weight·b_eff)
                              # tuples of each worker window per round
                              # (repro.sched.fairness; 1 = unweighted round)
+    gcol: jnp.ndarray        # (S,) int32 group-by column; -1 = ungrouped
+    gval: jnp.ndarray        # (S, G) f32 tracked group values
+    gact: jnp.ndarray        # (S, G) f32 0/1 cell-live flags; cell G-1 is
+                             # the __other__ spill cell.  G = max_groups+1
+                             # (0 when the engine has no grouped support —
+                             # the grouped code then compiles away entirely)
+    gtopk: jnp.ndarray       # (S,) int32 cells that must meet eps to stop
 
     @property
     def max_slots(self) -> int:
         return int(self.agg.shape[0])
 
+    @property
+    def group_cells(self) -> int:
+        """G — per-slot group cells incl. ``__other__`` (0 = ungrouped table)."""
+        return int(self.gval.shape[1])
 
-def empty_slot_table(max_slots: int, num_cols: int) -> SlotTable:
-    """All-inactive table; inactive slots have an always-false predicate."""
+
+def empty_slot_table(max_slots: int, num_cols: int,
+                     max_groups: int = 0) -> SlotTable:
+    """All-inactive table; inactive slots have an always-false predicate.
+
+    ``max_groups > 0`` sizes every slot for grouped queries: ``max_groups``
+    tracked-value cells plus one ``__other__`` spill cell.  The default 0
+    keeps the group arrays zero-width so ungrouped engines are statically
+    unchanged."""
     s, c = int(max_slots), int(num_cols)
+    g = int(max_groups) + 1 if int(max_groups) > 0 else 0
     return SlotTable(
         coeffs=jnp.zeros((s, c), jnp.float32),
         lo=jnp.full((s, c), jnp.inf, jnp.float32),   # empty range: pred False
@@ -317,12 +430,22 @@ def empty_slot_table(max_slots: int, num_cols: int) -> SlotTable:
         having_thr=jnp.zeros((s,), jnp.float32),
         active=jnp.zeros((s,), bool),
         weight=jnp.ones((s,), jnp.float32),
+        gcol=jnp.full((s,), -1, jnp.int32),
+        gval=jnp.zeros((s, g), jnp.float32),
+        gact=jnp.zeros((s, g), jnp.float32),
+        gtopk=jnp.zeros((s,), jnp.int32),
     )
 
 
 def encode_slot(query: Query, num_cols: int, plan: str = "resource_aware",
-                ) -> dict:
+                max_groups: int = 0) -> dict:
     """Encode one linear+range query as a slot-table row (numpy scalars/rows).
+
+    ``max_groups`` is the *table's* group capacity (``empty_slot_table``'s
+    parameter); a grouped query raises if it asks for more cells than the
+    table carries.  Pinned ``GroupBy.values`` go live in cells ``0..k-1``
+    at admission; the ``__other__`` cell (last) is always live for grouped
+    slots so undiscovered groups accumulate from round 0.
 
     Raises ``ValueError`` (via :func:`linear_plan`) for queries outside the
     coefficient form.
@@ -330,6 +453,24 @@ def encode_slot(query: Query, num_cols: int, plan: str = "resource_aware",
     lp = linear_plan([query], num_cols)
     hop = HAVING_NONE if query.having is None else _HAVING_CODES[query.having.op]
     thr = 0.0 if query.having is None else float(query.having.threshold)
+    g = int(max_groups) + 1 if int(max_groups) > 0 else 0
+    gcol, gtopk = -1, 0
+    gval = np.zeros((g,), np.float32)
+    gact = np.zeros((g,), np.float32)
+    gb = query.group_by
+    if gb is not None:
+        if gb.max_groups > int(max_groups):
+            raise ValueError(
+                f"query {query.name}: group_by.max_groups={gb.max_groups} "
+                f"exceeds the slot table's max_groups={int(max_groups)}")
+        if not (0 <= gb.col < num_cols):
+            raise ValueError(
+                f"query {query.name}: group_by column {gb.col} out of range")
+        gcol, gtopk = gb.col, gb.effective_top_k
+        gact[g - 1] = 1.0  # __other__ live from admission
+        for i, v in enumerate(gb.values or ()):
+            gval[i] = np.float32(v)
+            gact[i] = 1.0
     return dict(
         coeffs=lp.coeffs[0], lo=lp.lo[0], hi=lp.hi[0],
         agg=np.int32(_AGG_CODES[query.agg]),
@@ -338,11 +479,22 @@ def encode_slot(query: Query, num_cols: int, plan: str = "resource_aware",
         z=np.float32(ndtri((1.0 + query.confidence) / 2.0)),
         having_op=np.int32(hop), having_thr=np.float32(thr),
         active=True, weight=np.float32(1.0),
+        gcol=np.int32(gcol), gval=gval, gact=gact, gtopk=np.int32(gtopk),
     )
 
 
 def slot_table_set(table: SlotTable, s: int, row: dict) -> SlotTable:
-    """Functional row write (host-side, between rounds)."""
+    """Functional row write (host-side, between rounds).
+
+    Group columns default to the ungrouped row (``gcol=-1``, all cells dead)
+    when absent or sized for a different table capacity, so rows encoded
+    without ``max_groups`` slot into a grouped table cleanly."""
+    g = int(table.gval.shape[1])
+    gval_row = np.asarray(row.get("gval", ()), np.float32).reshape(-1)
+    gact_row = np.asarray(row.get("gact", ()), np.float32).reshape(-1)
+    if gval_row.shape != (g,) or gact_row.shape != (g,):
+        gval_row = np.zeros((g,), np.float32)
+        gact_row = np.zeros((g,), np.float32)
     return SlotTable(
         coeffs=table.coeffs.at[s].set(jnp.asarray(row["coeffs"], jnp.float32)),
         lo=table.lo.at[s].set(jnp.asarray(row["lo"], jnp.float32)),
@@ -355,6 +507,21 @@ def slot_table_set(table: SlotTable, s: int, row: dict) -> SlotTable:
         having_thr=table.having_thr.at[s].set(jnp.float32(row["having_thr"])),
         active=table.active.at[s].set(bool(row["active"])),
         weight=table.weight.at[s].set(jnp.float32(row.get("weight", 1.0))),
+        gcol=table.gcol.at[s].set(jnp.int32(row.get("gcol", -1))),
+        gval=table.gval.at[s].set(jnp.asarray(gval_row, jnp.float32)),
+        gact=table.gact.at[s].set(jnp.asarray(gact_row, jnp.float32)),
+        gtopk=table.gtopk.at[s].set(jnp.int32(row.get("gtopk", 0))),
+    )
+
+
+def slot_table_set_groups(table: SlotTable, s: int, gval_row, gact_row,
+                          ) -> SlotTable:
+    """Host-side group-cell write for slot ``s`` — online discovery promotes
+    sketch heavy hitters into free cells between rounds.  Only ``gval`` and
+    ``gact`` change; the rest of the row is untouched."""
+    return table._replace(
+        gval=table.gval.at[s].set(jnp.asarray(gval_row, jnp.float32)),
+        gact=table.gact.at[s].set(jnp.asarray(gact_row, jnp.float32)),
     )
 
 
@@ -429,6 +596,13 @@ def linear_plan(queries: Sequence[Query], num_cols: int) -> LinearPlan:
                 op = "==" if isinstance(node, GroupEq) else node.op
                 v = np.float32(node.value)
                 up = np.nextafter(v, np.float32(np.inf))
+                if up != 0 and abs(up) < np.finfo(np.float32).tiny:
+                    # XLA flushes denormals to zero, so a denormal bound
+                    # (only reachable near v == 0) would compare as 0 and
+                    # make the range empty; the smallest *normal* float is
+                    # the nearest bound that survives FTZ, and it is exact
+                    # for decoded data (nonzero magnitudes are >= 1e-6)
+                    up = np.float32(np.copysign(np.finfo(np.float32).tiny, up))
                 if op == "<":
                     hi[qi, node.col] = min(hi[qi, node.col], v)
                 elif op == "<=":    # c <= v  ≡  c < nextafter(v)

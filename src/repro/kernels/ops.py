@@ -23,6 +23,7 @@ from repro.kernels.extract_parse import extract_parse_pallas
 from repro.kernels.round_stats import round_stats_pallas
 from repro.kernels.slot_extract import (
     slot_eval_decoded_pallas,
+    slot_extract_grouped_pallas,
     slot_extract_pallas,
     slot_extract_stream_pallas,
 )
@@ -74,12 +75,19 @@ def chunk_agg(raw: jnp.ndarray, sizes: jnp.ndarray, coeffs, lo, hi,
 def slot_extract(packed: jnp.ndarray, jw: jnp.ndarray, idx: jnp.ndarray,
                  b_eff: jnp.ndarray, coeffs, lo, hi, is_count, gate,
                  return_cols: bool = False, backend: str = "auto",
-                 weights=None):
+                 weights=None, gcol=None, gval=None, gact=None, salt=None,
+                 tally_buckets: int = _ref.TALLY_BUCKETS):
     """Fused round extraction: gather + parse + slot eval + partial stats.
 
     packed (N, M, rec) uint8, jw (W,) chunk ids, idx (W, B) window rows ->
     (stats (W, S, 4), cols (W, B, C) | None).  This is the engine round's
     ``extract_backend="pallas"`` path (see core/engine.py).
+
+    Passing the grouped-plane descriptors (``gcol (S,)`` int32, ``gval``/
+    ``gact (S, G)`` f32, ``salt`` uint32 round number) switches to the
+    grouped variant, which additionally returns per-cell partial stats
+    ``(W, S, G, 4)`` and salted group tallies ``(W, S, 3, H)``:
+    ``(stats, cols|None, gstats, tal)``.
     """
     num_cols = int(coeffs.shape[1])
     use_pallas, interpret = _resolve(backend)
@@ -90,6 +98,24 @@ def slot_extract(packed: jnp.ndarray, jw: jnp.ndarray, idx: jnp.ndarray,
     if weights is None:
         weights = jnp.ones((coeffs.shape[0],), jnp.float32)
     weights = jnp.asarray(weights, jnp.float32)
+    grouped = gval is not None and int(gval.shape[1]) > 0
+    if grouped:
+        gcol = jnp.asarray(gcol, jnp.int32)
+        gval = jnp.asarray(gval, jnp.float32)
+        gact = jnp.asarray(gact, jnp.float32)
+        salt = (jnp.asarray(0, jnp.uint32) if salt is None
+                else jnp.asarray(salt, jnp.uint32))
+        if use_pallas:
+            return slot_extract_grouped_pallas(
+                packed, jw, idx, b_eff, coeffs, lo, hi, is_count, gate,
+                weights, gcol, gval, gact, salt, num_cols=num_cols,
+                tally_buckets=tally_buckets, return_cols=return_cols,
+                interpret=interpret)
+        return _ref.slot_extract_grouped_ref(
+            packed, jw, idx, b_eff, coeffs, lo, hi, is_count, gate,
+            gcol, gval, gact, salt, num_cols=num_cols,
+            tally_buckets=tally_buckets, return_cols=return_cols,
+            weights=weights)
     if use_pallas:
         return slot_extract_pallas(packed, jw, idx, b_eff, coeffs, lo, hi,
                                    is_count, gate, weights,

@@ -7,9 +7,31 @@ also the CPU execution path used by the engine when no TPU is present.
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.data.formats import FIELD_BYTES, FRAC_DIGITS, INT_DIGITS
+
+# Group-discovery tally table width (power of two; shared by the engine's
+# jnp path, the Pallas kernel, and the host-side sketch fold).
+TALLY_BUCKETS = 128
+
+
+def tally_hash(vals: jnp.ndarray, salt: jnp.ndarray,
+               buckets: int) -> jnp.ndarray:
+    """Salted multiplicative hash of f32 group values into [0, buckets).
+
+    ``salt`` (uint32 — the engine passes the round number) re-buckets every
+    round, so two values colliding this round almost surely separate next
+    round: collisions are *transient*, and the host-side SpaceSaving fold
+    only trusts buckets whose moments prove a single occupant
+    (Σv² · count == (Σv)² within fp tolerance).
+    """
+    lg = int(buckets).bit_length() - 1
+    assert (1 << lg) == int(buckets), "tally buckets must be a power of two"
+    u = jax.lax.bitcast_convert_type(vals.astype(jnp.float32), jnp.uint32)
+    h = (u ^ (salt * jnp.uint32(2654435761))) * jnp.uint32(2246822519)
+    return (h >> jnp.uint32(32 - lg)).astype(jnp.int32)
 
 
 def parse_ascii_ref(raw: jnp.ndarray, num_cols: int) -> jnp.ndarray:
@@ -88,6 +110,82 @@ def _slot_stats_from_cols(cols: jnp.ndarray, b_eff: jnp.ndarray, coeffs, lo,
     out = jnp.stack([cnt, jnp.sum(x, -1), jnp.sum(x * x, -1), jnp.sum(p, -1)],
                     axis=-1)                      # (S, W, 4)
     return jnp.transpose(out, (1, 0, 2))
+
+
+def _group_stats_from_cols(cols: jnp.ndarray, b_eff: jnp.ndarray, coeffs, lo,
+                           hi, is_count, gate, gcol, gval, gact, salt,
+                           tally_buckets: int, weights=None,
+                           ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Grouped back half: decoded window (W, B, C) -> per-(worker, slot,
+    cell) stats (W, S, G, 4) plus salted group tallies (W, S, 3, H).
+
+    Stats lanes are ``(rows matched, Σx, Σx², Σp)`` with the same masking as
+    :func:`_slot_stats_from_cols`; every mask factor is an exact 0/1 float,
+    so tracked-cell sums are bit-exact against a dedicated fan-out slot
+    whose predicate carries the group-membership conjunct.  Cell G-1 is the
+    ``__other__`` spill: its indicator is the complement of the tracked-cell
+    sum (a row matches at most one tracked value).
+    """
+    w, b, c = cols.shape
+    x, p = eval_plan_ref(cols, coeffs, lo, hi)    # (S, W, B)
+    x = jnp.where(jnp.asarray(is_count)[:, None, None] > 0.0, p, x)
+    if weights is None:
+        weights = jnp.ones((x.shape[0],), jnp.float32)
+    bs = jnp.minimum(jnp.ceil(jnp.asarray(weights, jnp.float32)[:, None]
+                              * b_eff[None, :].astype(jnp.float32)
+                              ).astype(b_eff.dtype), b_eff[None, :])  # (S, W)
+    ok_s = (jnp.arange(b)[None, None, :]
+            < bs[:, :, None]).astype(cols.dtype)  # (S, W, B)
+    mask = ok_s * jnp.asarray(gate, cols.dtype)[:, None, None]
+    x = x * mask
+    p = p * mask
+    colv = jnp.moveaxis(cols, -1, 0)[jnp.clip(jnp.asarray(gcol), 0, c - 1)]
+    gvalf = jnp.asarray(gval, cols.dtype)         # (S, G)
+    gactf = jnp.asarray(gact, cols.dtype)
+    eq = (colv[:, None] == gvalf[:, :, None, None]).astype(cols.dtype)
+    trk = eq * gactf[:, :, None, None]            # (S, G, W, B)
+    other = ((1.0 - jnp.sum(trk[:, :-1], axis=1))
+             * gactf[:, -1][:, None, None])       # (S, W, B)
+    ind = jnp.concatenate([trk[:, :-1], other[:, None]], axis=1)  # (S, G, W, B)
+    gx = ind * x[:, None]
+    gp = ind * p[:, None]
+    cnt = jnp.sum(ind * mask[:, None], -1)        # (S, G, W)
+    out = jnp.stack([cnt, jnp.sum(gx, -1), jnp.sum(gx * gx, -1),
+                     jnp.sum(gp, -1)], axis=-1)   # (S, G, W, 4)
+    gstats = jnp.transpose(out, (2, 0, 1, 3))     # (W, S, G, 4)
+
+    h = tally_hash(colv, jnp.asarray(salt, jnp.uint32), tally_buckets)
+    oh = (h[..., None] == jnp.arange(tally_buckets, dtype=jnp.int32)
+          ).astype(cols.dtype)                    # (S, W, B, H)
+    # tallies only exist while the slot discovers groups (__other__ cell
+    # live); ungrouped slots would otherwise tally their clipped column
+    moments = jnp.stack([p, p * colv, p * colv * colv], axis=2)  # (S, W, 3, B)
+    moments = moments * gactf[:, -1][:, None, None, None]
+    tal = jnp.einsum("swmb,swbh->wsmh", moments, oh)             # (W, S, 3, H)
+    return gstats, tal
+
+
+def slot_extract_grouped_ref(packed: jnp.ndarray, jw: jnp.ndarray,
+                             idx: jnp.ndarray, b_eff: jnp.ndarray, coeffs,
+                             lo, hi, is_count, gate, gcol, gval, gact, salt,
+                             num_cols: int, tally_buckets: int = TALLY_BUCKETS,
+                             return_cols: bool = False, weights=None):
+    """Grouped fused-extraction oracle (packed residency).
+
+    :func:`slot_extract_ref`'s contract plus per-cell stats and group
+    tallies: returns ``(stats (W, S, 4), cols|None, gstats (W, S, G, 4),
+    tal (W, S, 3, H))``.
+    """
+    w, b = idx.shape
+    raw = packed[jw[:, None], idx]
+    cols = parse_ascii_ref(raw.reshape(w * b, -1), num_cols).reshape(
+        w, b, num_cols)
+    stats = _slot_stats_from_cols(cols, b_eff, coeffs, lo, hi, is_count, gate,
+                                  weights)
+    gstats, tal = _group_stats_from_cols(cols, b_eff, coeffs, lo, hi,
+                                         is_count, gate, gcol, gval, gact,
+                                         salt, tally_buckets, weights)
+    return stats, (cols if return_cols else None), gstats, tal
 
 
 def slot_extract_ref(packed: jnp.ndarray, jw: jnp.ndarray, idx: jnp.ndarray,

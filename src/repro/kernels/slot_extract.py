@@ -45,6 +45,13 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.data.formats import FIELD_BYTES
 from repro.kernels.chunk_agg import _eval_plan_block
 from repro.kernels.extract_parse import _parse_block
+from repro.kernels.ref import TALLY_BUCKETS
+
+# int32 twins of the uint32 hash constants in repro.kernels.ref.tally_hash —
+# two's-complement multiply/xor wrap to the same bits, so the in-kernel hash
+# stays bit-identical to the oracle without uint arithmetic.
+_HASH_SALT_MUL = -1640531535      # uint32 2654435761
+_HASH_MIX_MUL = -2048144777       # uint32 2246822519
 
 
 def _slot_extract_kernel(jw_ref, beff_ref, idx_ref, packed_ref, coeffs_ref,
@@ -143,6 +150,177 @@ def slot_extract_pallas(packed: jnp.ndarray, jw: jnp.ndarray,
       jnp.asarray(hi, jnp.float32), jnp.asarray(is_count, jnp.float32),
       jnp.asarray(gate, jnp.float32), jnp.asarray(weights, jnp.float32))
     return tuple(out) if return_cols else (out[0], None)
+
+
+# ---------------------------------------------------------------------------
+# Grouped variant: per-(worker, slot, group-cell) partials + discovery tallies.
+#
+# Same geometry as _slot_extract_kernel (grid (W,), whole chunk in VMEM via
+# scalar-prefetch chunk id), plus three static-G/H additions, all VMEM-only:
+# the slot's group column is selected with an exact one-hot matmul
+# (goh (S, C) @ vals.T), tracked-cell indicators are 0/1 equality masks
+# against gval with the __other__ cell as the tracked-sum complement, and the
+# salted discovery tallies are per-slot (3, B) @ (B, H) one-hot matmuls.
+# Only the (S, G, 4) sufficient stats and the (S, 3, H) tallies reach HBM.
+# ---------------------------------------------------------------------------
+
+
+def _slot_extract_grouped_kernel(jw_ref, beff_ref, idx_ref, salt_ref,
+                                 packed_ref, coeffs_ref, lo_ref, hi_ref,
+                                 isc_ref, gate_ref, wts_ref, goh_ref,
+                                 gval_ref, gact_ref, *refs, num_cols: int,
+                                 budget: int, tally_buckets: int,
+                                 return_cols: bool):
+    if return_cols:
+        stats_ref, cols_ref, gstats_ref, tal_ref, scratch = refs
+    else:
+        (stats_ref, gstats_ref, tal_ref, scratch), cols_ref = refs, None
+    w = pl.program_id(0)
+
+    def gather(i, carry):
+        row = idx_ref[w, i]
+        r = pl.load(packed_ref, (pl.ds(0, 1), pl.ds(row, 1), slice(None)))
+        pl.store(scratch, (pl.ds(i, 1), slice(None)),
+                 r.reshape(1, -1).astype(jnp.int32))
+        return carry
+
+    jax.lax.fori_loop(0, budget, gather, 0)
+
+    vals = _parse_block(scratch[...], num_cols)              # (B, C) f32
+    if cols_ref is not None:
+        cols_ref[0] = vals
+    x, p = _eval_plan_block(vals, coeffs_ref[...],
+                            lo_ref[...], hi_ref[...])        # (S, B)
+    x = jnp.where(isc_ref[...][:, None] > 0.0, p, x)
+    beff = beff_ref[w]
+    bs = jnp.minimum(jnp.ceil(wts_ref[...] * beff.astype(jnp.float32)
+                              ).astype(jnp.int32), beff)     # (S,)
+    ok_s = (jax.lax.iota(jnp.int32, budget)[None, :]
+            < bs[:, None]).astype(jnp.float32)               # (S, B)
+    mask = ok_s * gate_ref[...][:, None]                     # (S, B)
+    x = x * mask
+    p = p * mask
+    stats_ref[0] = jnp.stack([
+        jnp.sum(ok_s, -1),
+        jnp.sum(x, -1), jnp.sum(x * x, -1), jnp.sum(p, -1)], axis=-1)
+
+    # per-slot group-column values via exact one-hot contraction over C
+    colv = jax.lax.dot_general(goh_ref[...], vals,
+                               (((1,), (1,)), ((), ())),
+                               preferred_element_type=jnp.float32)  # (S, B)
+
+    gvals = gval_ref[...]                                    # (S, G)
+    gacts = gact_ref[...]
+    n_slots, g = gvals.shape
+    eq = (colv[:, None, :] == gvals[:, :, None]).astype(jnp.float32)
+    trk = eq * gacts[:, :, None]                             # (S, G, B)
+    # __other__ (cell G-1): complement of the tracked-cell sum — a row
+    # matches at most one tracked value, so this is an exact 0/1 indicator
+    tracked = trk * (jax.lax.broadcasted_iota(jnp.int32, (1, g, 1), 1)
+                     < g - 1).astype(jnp.float32)
+    other = ((1.0 - jnp.sum(tracked, axis=1))
+             * gacts[:, g - 1][:, None])                     # (S, B)
+    is_last = jax.lax.broadcasted_iota(jnp.int32, (1, g, 1), 1) == g - 1
+    ind = jnp.where(is_last, other[:, None, :], trk)         # (S, G, B)
+    gx = ind * x[:, None]
+    gp = ind * p[:, None]
+    gstats_ref[0] = jnp.stack([
+        jnp.sum(ind * mask[:, None], -1),
+        jnp.sum(gx, -1), jnp.sum(gx * gx, -1), jnp.sum(gp, -1)], axis=-1)
+
+    # salted discovery tallies: hash bits match ref.tally_hash exactly
+    # (int32 wraparound == uint32), low-bit mask recovers the logical shift
+    lg = tally_buckets.bit_length() - 1
+    salt = salt_ref[0]
+    u = jax.lax.bitcast_convert_type(colv, jnp.int32)        # (S, B)
+    h = (u ^ (salt * jnp.int32(_HASH_SALT_MUL))) * jnp.int32(_HASH_MIX_MUL)
+    h = jnp.right_shift(h, jnp.int32(32 - lg)) & jnp.int32(tally_buckets - 1)
+    hcol = jax.lax.broadcasted_iota(jnp.int32, (budget, tally_buckets), 1)
+    rows = []
+    for s_i in range(n_slots):
+        oh = (h[s_i][:, None] == hcol).astype(jnp.float32)   # (B, H)
+        # tallies only while the slot discovers groups (__other__ cell live)
+        pt = p[s_i] * gacts[s_i, g - 1]
+        mom = jnp.stack([pt, pt * colv[s_i],
+                         pt * colv[s_i] * colv[s_i]], axis=0)  # (3, B)
+        rows.append(jnp.dot(mom, oh, preferred_element_type=jnp.float32))
+    tal_ref[0] = jnp.stack(rows, axis=0)                     # (S, 3, H)
+
+
+@functools.partial(jax.jit, static_argnames=("num_cols", "tally_buckets",
+                                             "return_cols", "interpret"))
+def slot_extract_grouped_pallas(packed: jnp.ndarray, jw: jnp.ndarray,
+                                idx: jnp.ndarray, b_eff: jnp.ndarray,
+                                coeffs, lo, hi, is_count, gate, weights,
+                                gcol, gval, gact, salt, num_cols: int,
+                                tally_buckets: int = TALLY_BUCKETS,
+                                return_cols: bool = False,
+                                interpret: bool = False):
+    """Grouped fused round extraction (packed residency).
+
+    :func:`slot_extract_pallas`'s contract plus the grouped plane: gcol (S,)
+    int32 group columns (-1 = ungrouped slot), gval/gact (S, G) f32 tracked
+    values / live-cell mask (cell G-1 = ``__other__``), salt uint32 round
+    number -> ``(stats (W, S, 4), cols|None, gstats (W, S, G, 4),
+    tal (W, S, 3, H))``.  Must allclose ``ref.slot_extract_grouped_ref``.
+    """
+    n, m_max, rec = packed.shape
+    assert rec == num_cols * FIELD_BYTES, (rec, num_cols)
+    w, b = idx.shape
+    s = coeffs.shape[0]
+    g = gval.shape[1]
+    gcol_c = jnp.clip(jnp.asarray(gcol, jnp.int32), 0, num_cols - 1)
+    goh = (jnp.arange(num_cols, dtype=jnp.int32)[None, :]
+           == gcol_c[:, None]).astype(jnp.float32)           # (S, C)
+    salt1 = jnp.asarray(salt, jnp.uint32).astype(jnp.int32).reshape(1)
+    out_shape = [jax.ShapeDtypeStruct((w, s, 4), jnp.float32)]
+    out_specs = [pl.BlockSpec((1, s, 4), lambda i, *refs: (i, 0, 0))]
+    if return_cols:
+        out_shape.append(jax.ShapeDtypeStruct((w, b, num_cols), jnp.float32))
+        out_specs.append(pl.BlockSpec((1, b, num_cols),
+                                      lambda i, *refs: (i, 0, 0)))
+    out_shape += [
+        jax.ShapeDtypeStruct((w, s, g, 4), jnp.float32),
+        jax.ShapeDtypeStruct((w, s, 3, tally_buckets), jnp.float32)]
+    out_specs += [
+        pl.BlockSpec((1, s, g, 4), lambda i, *refs: (i, 0, 0, 0)),
+        pl.BlockSpec((1, s, 3, tally_buckets),
+                     lambda i, *refs: (i, 0, 0, 0))]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,   # jw, b_eff, idx, salt
+        grid=(w,),
+        in_specs=[
+            pl.BlockSpec((1, m_max, rec),
+                         lambda i, jw_ref, *refs: (jw_ref[i], 0, 0)),
+            pl.BlockSpec((s, num_cols), lambda i, *refs: (0, 0)),
+            pl.BlockSpec((s, num_cols), lambda i, *refs: (0, 0)),
+            pl.BlockSpec((s, num_cols), lambda i, *refs: (0, 0)),
+            pl.BlockSpec((s,), lambda i, *refs: (0,)),
+            pl.BlockSpec((s,), lambda i, *refs: (0,)),
+            pl.BlockSpec((s,), lambda i, *refs: (0,)),
+            pl.BlockSpec((s, num_cols), lambda i, *refs: (0, 0)),
+            pl.BlockSpec((s, g), lambda i, *refs: (0, 0)),
+            pl.BlockSpec((s, g), lambda i, *refs: (0, 0)),
+        ],
+        out_specs=out_specs,
+        scratch_shapes=[pltpu.VMEM((b, rec), jnp.int32)],
+    )
+    out = pl.pallas_call(
+        functools.partial(_slot_extract_grouped_kernel, num_cols=num_cols,
+                          budget=b, tally_buckets=tally_buckets,
+                          return_cols=return_cols),
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(jnp.asarray(jw, jnp.int32), jnp.asarray(b_eff, jnp.int32),
+      jnp.asarray(idx, jnp.int32), salt1, packed,
+      jnp.asarray(coeffs, jnp.float32), jnp.asarray(lo, jnp.float32),
+      jnp.asarray(hi, jnp.float32), jnp.asarray(is_count, jnp.float32),
+      jnp.asarray(gate, jnp.float32), jnp.asarray(weights, jnp.float32),
+      goh, jnp.asarray(gval, jnp.float32), jnp.asarray(gact, jnp.float32))
+    if return_cols:
+        return tuple(out)
+    return out[0], None, out[1], out[2]
 
 
 # ---------------------------------------------------------------------------

@@ -181,13 +181,19 @@ def _sharded_round(program: EngineProgram, n_dev: int, budget: int):
             t_io=state.t_io + round_io, t_cpu=state.t_cpu + round_cpu,
             cpu_bound=round_cpu > round_io, cached_m=state.cached_m,
             raw_touched=raw_touched, cache=state.cache,
-            schedule=state.schedule, quarantined=state.quarantined)
+            schedule=state.schedule, quarantined=state.quarantined,
+            gm=state.gm, gys=state.gys, gyq=state.gyq, gps=state.gps)
+        # grouped plane is zero-width here (cfg.max_groups == 0)
+        gz = jnp.zeros((q, program.group_cells), dtype)
         report = RoundReport(
             estimate=estimate, lo=lo, hi=hi, err=err, decided=decided,
             n_chunks=stats_est.n, m_tuples=jnp.sum(stats_est.m),
             round_io_s=round_io, round_cpu_s=round_cpu, tuples_round=tuples,
             bytes_round=bytes_round, all_stopped=jnp.all(stopped),
-            exhausted=jnp.all(closed))
+            exhausted=jnp.all(closed),
+            g_est=gz, g_lo=gz, g_hi=gz, g_err=gz,
+            g_n=jnp.zeros((q, program.group_cells), jnp.int32),
+            g_tal=jnp.zeros((q, 3, program.tally_buckets), dtype))
         return new_state, report
 
     return round_step

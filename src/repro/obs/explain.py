@@ -45,6 +45,11 @@ class RoundSample:
     ci_halfwidth: float     # (hi - lo) / 2 at this round
     b_eff: int              # effective per-worker budget this round
     weight: float           # fairness weight applied this round
+    # grouped queries only: per-cell ``(value, est, ci_halfwidth)`` triples —
+    # tracked cells in discovery order, then the ``__other__`` spill cell
+    # (value NaN).  Plain floats, so the record stays serializable and this
+    # module stays free of engine imports.  None for ungrouped rounds.
+    groups: Optional[tuple] = None
 
 
 @dataclasses.dataclass

@@ -199,10 +199,19 @@ class AdmissionController:
     def decide(self, *, arrival_t: float, slo, epsilon: float,
                load: ServerLoad, seed_m: int = 0,
                seed_err: float = math.inf,
-               rollup_err: float = math.inf) -> AdmissionDecision:
+               rollup_err: float = math.inf,
+               group_count: int = 0) -> AdmissionDecision:
         """One admission call.  ``seed_m``/``seed_err`` describe the best
         synopsis-seeded answer currently available for the query (0/inf when
         the synopsis cannot serve it).
+
+        ``group_count > 0`` marks a grouped query (``Query(group_by=...)``)
+        whose stop condition requires that many group cells to converge
+        independently: each cell sees only its own share of the predicate
+        mass, so the CLT tuple need multiplies by the cell count — capped at
+        one full pass, since a census answers every cell exactly.  Grouped
+        callers also pass no seed (cells cannot be seeded), so the bound
+        degrades gracefully to the full-pass worst case.
 
         ``rollup_err`` is the error ratio of the Tier-1 rollup answer for
         the query's pattern (``inf`` when no promoted cell serves it; the
@@ -222,6 +231,8 @@ class AdmissionController:
         free = load.free_slots > 0 and load.queue_ahead == 0
         need = self.required_tuples(seed_m, seed_err, epsilon,
                                     load.total_tuples)
+        if group_count > 0:
+            need = min(float(load.total_tuples), need * group_count)
         service = self.pessimism * need / max(load.scan_rate, 1e-12)
         if free:
             wait = 0.0

@@ -37,6 +37,7 @@ import dataclasses
 import json
 import os
 import time
+import warnings
 from typing import Optional, Sequence
 
 import jax.numpy as jnp
@@ -47,17 +48,23 @@ from repro.core.engine import (
     IDLE,
     EngineConfig,
     SlotOLAEngine,
+    slot_group_rows,
     slot_stats_fold,
     slot_stats_snapshot,
     slot_stats_write,
+    zero_group_cells,
 )
+from repro.core.groupby import GroupSketch, promote_values
 from repro.core.queries import (
     PLAN_CODES,
+    GroupResult,
     Query,
     empty_slot_table,
     encode_slot,
+    group_fanout,
     slot_table_clear,
     slot_table_set,
+    slot_table_set_groups,
 )
 from repro.core.synopsis import BiLevelSynopsis
 from repro.core import estimators as est
@@ -214,6 +221,62 @@ def select_plan(store, config: EngineConfig, query: Query,
     return "resource_aware"
 
 
+@dataclasses.dataclass(frozen=True)
+class ServerOptions:
+    """Construction options for :class:`OLAWorkloadServer`.
+
+    Everything beyond the two required arguments (the chunk store and the
+    :class:`EngineConfig`) lives here: the server is built as
+    ``OLAWorkloadServer(store, config, options=ServerOptions(...))``.  Field
+    semantics are documented on :meth:`OLAWorkloadServer.__init__` (they are
+    the former keyword parameters, collapsed into one options object so the
+    construction surface can grow without another positional-kwarg sprawl).
+    The legacy keyword form still works and warns once per process.
+    """
+
+    max_slots: int = 8
+    synopsis_budget_tuples: int = 4096
+    confidence: float = 0.95
+    schedule: Optional[np.ndarray] = None
+    mesh: object = None
+    engine: object = None
+    measured_rates: Optional[MeasuredRates] = None
+    rates_path: Optional[str] = None
+    scheduler: object = None
+    rollup: object = None
+    tracer: object = None
+    metrics: Optional[MetricsRegistry] = None
+    # grouped discovery: minimum pure-tally mass (tuples) the slot's sketch
+    # must absorb before non-pinned values are promoted into tracked cells.
+    # Promotion is grow-only, so promoting off a few noisy early rounds
+    # would permanently lock true heavy hitters out of the cell set; the
+    # warmup lets the SpaceSaving ranking stabilize first.
+    group_warmup_tuples: int = 1024
+
+
+_legacy_kwargs_warned = False
+
+
+def _options_from_legacy(kwargs: dict) -> ServerOptions:
+    """Back-compat shim: map the pre-:class:`ServerOptions` keyword surface
+    onto an options object, warning once per process."""
+    global _legacy_kwargs_warned
+    names = {f.name for f in dataclasses.fields(ServerOptions)}
+    unknown = sorted(set(kwargs) - names)
+    if unknown:
+        raise TypeError(
+            f"OLAWorkloadServer got unexpected keyword argument(s) {unknown}; "
+            f"valid ServerOptions fields: {sorted(names)}")
+    if not _legacy_kwargs_warned:
+        warnings.warn(
+            "passing OLAWorkloadServer construction keywords directly is "
+            "deprecated; use OLAWorkloadServer(store, config, "
+            "options=ServerOptions(...))",
+            DeprecationWarning, stacklevel=3)
+        _legacy_kwargs_warned = True
+    return ServerOptions(**kwargs)
+
+
 @dataclasses.dataclass
 class WorkloadQuery:
     """One submitted query: the aggregate plus its workload metadata."""
@@ -274,6 +337,13 @@ class WorkloadResult:
     degraded: bool = False
     chunks_quarantined: int = 0
     read_retries: int = 0
+    # grouped answer (Query(group_by=...)): one GroupResult per live group
+    # cell — the tracked heavy-hitter values in discovery order, then the
+    # __other__ spill cell (is_other=True) holding everything untracked.
+    # None for ungrouped queries, and for grouped ones answered without a
+    # scan residency (shed); the scalar estimate/lo/hi above stay
+    # authoritative for the query's *base-predicate* population either way.
+    groups: Optional[list[GroupResult]] = None
     # per-query explain record (repro.obs.explain): admission pricing, tier
     # routing rationale, per-round (m, est, ci) trajectory, degradation
     # events.  Excluded from equality — parity gates compare answers, not
@@ -301,16 +371,13 @@ class OLAWorkloadServer:
     any idle gaps the server skips while waiting for arrivals.
     """
 
-    def __init__(self, store, config: EngineConfig, max_slots: int = 8,
-                 synopsis_budget_tuples: int = 4096,
-                 confidence: float = 0.95,
-                 schedule: Optional[np.ndarray] = None,
-                 mesh=None, engine=None,
-                 measured_rates: Optional[MeasuredRates] = None,
-                 rates_path: Optional[str] = None,
-                 scheduler=None, rollup=None,
-                 tracer=None, metrics: Optional[MetricsRegistry] = None):
-        """``engine`` may be a pre-built :class:`SlotOLAEngine` or
+    def __init__(self, store, config: EngineConfig,
+                 options: Optional[ServerOptions] = None, **legacy_kwargs):
+        """``options`` collects every construction knob (see
+        :class:`ServerOptions`); the former keyword surface still works via
+        ``**legacy_kwargs`` but warns once per process.
+
+        ``engine`` may be a pre-built :class:`SlotOLAEngine` or
         :class:`~repro.core.engine_spmd.SlotSPMDEngine` (the server only uses
         the shared round-step protocol); with ``mesh`` and no ``engine`` a
         :class:`SlotSPMDEngine` is built over it.  ``measured_rates`` (or a
@@ -346,6 +413,21 @@ class OLAWorkloadServer:
         on; one is created internally when omitted (see
         :meth:`metrics_snapshot`).
         """
+        if legacy_kwargs:
+            if options is not None:
+                raise TypeError(
+                    "pass either options=ServerOptions(...) or the legacy "
+                    "keyword arguments, not both")
+            options = _options_from_legacy(legacy_kwargs)
+        opts = options if options is not None else ServerOptions()
+        max_slots = opts.max_slots
+        synopsis_budget_tuples = opts.synopsis_budget_tuples
+        confidence = opts.confidence
+        schedule = opts.schedule
+        mesh, engine = opts.mesh, opts.engine
+        measured_rates, rates_path = opts.measured_rates, opts.rates_path
+        scheduler, rollup = opts.scheduler, opts.rollup
+        tracer, metrics = opts.tracer, opts.metrics
         if engine is not None:
             if engine.store is not store:
                 raise ValueError("engine was built over a different store")
@@ -378,9 +460,20 @@ class OLAWorkloadServer:
         self.rates = measured_rates
         if self.rates is None and rates_path is not None:
             self.rates = load_measured_rates(rates_path)
-        self.table = empty_slot_table(max_slots, store.codec.num_cols)
+        # grouped query plane: the table's group capacity follows the engine
+        # config (0 keeps the group arrays zero-width — the grouped code
+        # compiles away and ungrouped serving is statically unchanged)
+        self.max_groups = int(self.config.max_groups)
+        self.table = empty_slot_table(max_slots, store.codec.num_cols,
+                                      self.max_groups)
         self.state = self.engine.init_state()
         self.max_slots = max_slots
+        # per-slot online group discovery (grouped occupants only): the
+        # SpaceSaving sketch fed from each round's tally report, and the
+        # host mirror of the slot's tracked values (discovery order)
+        self._slot_sketch: list[Optional[GroupSketch]] = [None] * max_slots
+        self._slot_groups: list[Optional[list[float]]] = [None] * max_slots
+        self._group_warmup = int(opts.group_warmup_tuples)
         self.synopsis: Optional[BiLevelSynopsis] = None
         if synopsis_budget_tuples > 0:
             self.synopsis = BiLevelSynopsis(
@@ -627,7 +720,13 @@ class OLAWorkloadServer:
         if plan is not None and plan not in PLAN_CODES:
             raise ValueError(
                 f"unknown plan {plan!r}; expected one of {sorted(PLAN_CODES)}")
-        row = encode_slot(query, self.store.codec.num_cols)  # validates early
+        if query.group_by is not None and self.max_groups == 0:
+            raise ValueError(
+                f"query {query.name!r} has group_by but the server was built "
+                f"ungrouped; construct it with EngineConfig(max_groups="
+                f"{query.group_by.max_groups}) or higher")
+        row = encode_slot(query, self.store.codec.num_cols,
+                          max_groups=self.max_groups)  # validates early
         if self.synopsis is None and not (
                 (np.asarray(self.state.scan_m)
                  < np.asarray(self.store.chunk_sizes))
@@ -807,7 +906,11 @@ class OLAWorkloadServer:
         if max(now, wq.arrival_t) + decision.predicted_service_s > deadline_t:
             return False                # hopeless even with a slot right now
         stopped = np.asarray(self.state.stopped)
+        # grouped residents are not evictable: the eviction snapshot saves
+        # only the scalar stats row, so a re-admitted grouped query would
+        # silently lose its per-group cells and its discovered value set
         evictable = [self.slot_wq[s] is not None and not stopped[s]
+                     and self.slot_wq[s].query.group_by is None
                      for s in range(self.max_slots)]
         victim = select_victim(
             wq.slo, [w.slo if w is not None else None for w in self.slot_wq],
@@ -867,6 +970,10 @@ class OLAWorkloadServer:
         """Serve ``wq`` from the rollup cache iff the cached answer meets
         its accuracy ask (the slot-effective ε, or a decided HAVING).
         Tier-1 answers hold no slot and consume zero scan rounds."""
+        if wq.query.group_by is not None:
+            # a rollup cell carries only base-predicate scalar stats — it
+            # cannot produce the per-group cells a grouped answer promises
+            return False
         ans = self._rollup_answer(wq)
         if ans is None:
             return False
@@ -965,6 +1072,7 @@ class OLAWorkloadServer:
 
     def _decide_admission(self, wq: WorkloadQuery, n_free: int, ahead: list):
         slo = wq.slo or NO_SLO
+        grouped = wq.query.group_by is not None
         seed_m, seed_err, seed_est = 0, float("inf"), None
         rollup_err = float("inf")
         rollup = self._rollup_answer(wq)
@@ -979,6 +1087,13 @@ class OLAWorkloadServer:
             m, e, _, _, err = self._cached_preview(wq)
             if m > seed_m:
                 seed_m, seed_est, seed_err = m, e, err
+        if grouped:
+            # a cached scalar answer can neither serve nor seed the
+            # per-group cells (they fill only from scan rounds while live):
+            # never tier-1 route, and price the scan without a seed discount
+            # (seed_est survives as the ε-translation magnitude anchor)
+            rollup_err = float("inf")
+            seed_m, seed_err = 0, float("inf")
         drain, ahead_s = self._wait_components(ahead)
         load = ServerLoad(
             now=self.t_model, free_slots=n_free, queue_ahead=len(ahead),
@@ -993,7 +1108,8 @@ class OLAWorkloadServer:
         return self.scheduler.admission.decide(
             arrival_t=wq.arrival_t, slo=slo, epsilon=eps_eff,
             load=load, seed_m=seed_m, seed_err=seed_err,
-            rollup_err=rollup_err)
+            rollup_err=rollup_err,
+            group_count=(wq.query.group_by.effective_top_k if grouped else 0))
 
     def _seed_answer(self, query: Query, seed: Optional[dict] = None,
                      key: Optional[tuple] = None) -> tuple:
@@ -1078,7 +1194,8 @@ class OLAWorkloadServer:
         plan = wq.plan or select_plan(self.store, self.config, wq.query,
                                       rates=self.rates,
                                       decoded_fraction=self._decoded_fraction())
-        row = wq.row or encode_slot(wq.query, self.store.codec.num_cols)
+        row = wq.row or encode_slot(wq.query, self.store.codec.num_cols,
+                                    max_groups=self.max_groups)
         row["plan"] = np.int32(PLAN_CODES[plan])
         self._refresh_synopsis()
         if wq.saved_stats is not None:
@@ -1132,6 +1249,17 @@ class OLAWorkloadServer:
         self.slot_plan[s] = plan
         self.slot_seeded[s] = seeded
         self._slot_retries0[s] = self._pipeline_retries()
+        gb = wq.query.group_by
+        if gb is not None:
+            # group cells start from zero for the new occupant (a prior
+            # grouped resident may have left stale per-cell rows); pinned
+            # values are live from the row write, the rest get discovered
+            self.state = zero_group_cells(self.state, s)
+            self._slot_sketch[s] = GroupSketch(max(2 * gb.max_groups, 8))
+            self._slot_groups[s] = [float(v) for v in (gb.values or ())]
+        else:
+            self._slot_sketch[s] = None
+            self._slot_groups[s] = None
         if wq.explain is not None:
             # the Eq. (4) pricing the plan was chosen under, frozen at the
             # admission instant (population-adjusted, cache-discounted)
@@ -1162,6 +1290,10 @@ class OLAWorkloadServer:
 
     def _try_retire_from_seed(self, s: int, wq: WorkloadQuery) -> bool:
         q = wq.query
+        if q.group_by is not None:
+            # the seed meets the scalar target at best; the per-group cells
+            # only fill from scan rounds, so a grouped query always scans
+            return False
         stats_row = self.state.stats._replace(
             m=self.state.stats.m[s], ysum=self.state.stats.ysum[s][None],
             ysq=self.state.stats.ysq[s][None],
@@ -1208,6 +1340,8 @@ class OLAWorkloadServer:
         self.state = self.state._replace(
             stopped=self.state.stopped.at[s].set(True))
         self.slot_wq[s] = None
+        self._slot_sketch[s] = None
+        self._slot_groups[s] = None
 
     # ----------------------------------------------------------- top-up ----
     def _begin_topup_pass(self) -> bool:
@@ -1243,6 +1377,102 @@ class OLAWorkloadServer:
             raw_touched=jnp.asarray(raw_touched))
         self.topup_passes += 1
         return True
+
+    # ---------------------------------------------------------- grouping ----
+    def _group_results(self, rep, s: int, wq: WorkloadQuery,
+                       ) -> Optional[list[GroupResult]]:
+        """Assemble slot ``s``'s grouped answer from the round report: one
+        :class:`GroupResult` per tracked value (discovery order) plus the
+        ``__other__`` spill cell.  HAVING is judged per cell, host-side, on
+        the same CI the report carries."""
+        q = wq.query
+        if q.group_by is None:
+            return None
+        tracked = self._slot_groups[s] or []
+        g_est = np.asarray(rep.g_est[s], float)
+        g_lo = np.asarray(rep.g_lo[s], float)
+        g_hi = np.asarray(rep.g_hi[s], float)
+        g_err = np.asarray(rep.g_err[s], float)
+        g_n = np.asarray(rep.g_n[s])
+        cells = [(i, float(v), False) for i, v in enumerate(tracked)]
+        cells.append((self.max_groups, float("nan"), True))
+        out = []
+        for i, value, is_other in cells:
+            decision = -1
+            if q.having is not None and int(g_n[i]) > 0:
+                decision = int(est.having_decision(
+                    float(g_lo[i]), float(g_hi[i]), q.having.op,
+                    q.having.threshold))
+            out.append(GroupResult(
+                value=value, estimate=float(g_est[i]), lo=float(g_lo[i]),
+                hi=float(g_hi[i]), err=float(g_err[i]), n=int(g_n[i]),
+                decision=decision, is_other=is_other))
+        return out
+
+    def _rollup_group_cells(self, wq: WorkloadQuery, s: int) -> None:
+        """Per-group rollup mining at retirement: each tracked cell is the
+        completed run of the equivalent :func:`group_fanout` scalar pattern,
+        so it feeds the Tier-1 miner under that pattern's key and — once
+        promoted — folds the cell's per-chunk stats row through the same
+        cell-fold contract scalar slots use.  A later fan-out-style repeat
+        of a hot group then starts warm (or answers Tier-1 outright)."""
+        gb = wq.query.group_by
+        if self.rollup is None or gb is None:
+            return
+        tracked = self._slot_groups[s] or []
+        if not tracked:
+            return
+        rows = slot_group_rows(self.state, s)
+        base = dataclasses.replace(wq.query, group_by=None)
+        for i, v in enumerate(tracked):
+            fq = group_fanout(base, gb.col, [v])[0]
+            key = pattern_key(fq, self.store.codec.num_cols)
+            if key is None:
+                continue
+            self.rollup.observe(fq, key, self.t_model)
+            self.rollup.fold(key, dict(
+                m=rows["gm"][i], ysum=rows["gys"][i],
+                ysq=rows["gyq"][i], psum=rows["gps"][i]))
+
+    def _fold_group_discovery(self, rep) -> None:
+        """Post-round online discovery for live grouped slots: fold the
+        round's tally report into each slot's SpaceSaving sketch, promote
+        newly-heavy values into free tracked cells (grow-only), and restart
+        the ``__other__`` window whenever the tracked set changes (the spill
+        cell's meaning shrank, so its stats must restart — the post-restart
+        sample window stays a uniform without-replacement sample)."""
+        if self.max_groups == 0:
+            return
+        g_tal = None
+        stopped = np.asarray(self.state.stopped)
+        for s in range(self.max_slots):
+            wq = self.slot_wq[s]
+            if (wq is None or stopped[s] or wq.query.group_by is None
+                    or self._slot_sketch[s] is None):
+                continue
+            if g_tal is None:
+                g_tal = np.asarray(rep.g_tal)
+            sketch = self._slot_sketch[s]
+            sketch.fold(g_tal[s])
+            if sketch.mass < self._group_warmup:
+                continue    # ranking not yet trustworthy (see ServerOptions)
+            gb = wq.query.group_by
+            tracked = self._slot_groups[s]
+            new = promote_values(sketch, tracked, gb.max_groups)
+            if not new:
+                continue
+            tracked.extend(float(v) for v in new)
+            g = self.max_groups + 1
+            gval = np.zeros((g,), np.float32)
+            gact = np.zeros((g,), np.float32)
+            gval[:len(tracked)] = np.asarray(tracked, np.float32)
+            gact[:len(tracked)] = 1.0
+            gact[g - 1] = 1.0   # __other__ stays live
+            self.table = slot_table_set_groups(self.table, s, gval, gact)
+            self.state = zero_group_cells(self.state, s, cells=[g - 1])
+            if self.tracer.enabled:
+                self.tracer.event("group_promote", qid=wq.qid, slot=s,
+                                  values=[float(v) for v in new])
 
     # -------------------------------------------------------------- step ----
     def _retire_finished(self, rep, unserved: frozenset = frozenset()) -> None:
@@ -1285,13 +1515,16 @@ class OLAWorkloadServer:
                 degraded=self._quarantine_count > 0,
                 chunks_quarantined=self._quarantine_count,
                 read_retries=max(self._pipeline_retries()
-                                 - int(self._slot_retries0[s]), 0)))
+                                 - int(self._slot_retries0[s]), 0),
+                groups=None if bad else self._group_results(rep, s, wq)))
             service = self.t_model - self.slot_admit_t[s]
             self._service_times.append(service)
             if self.scheduler is not None:
                 # feed the per-class service-time sketch (quantile admission)
                 self.scheduler.observe_service(wq.slo, service)
             self._rollup_on_retire(wq, s, not bad)
+            if not bad:
+                self._rollup_group_cells(wq, s)
             self._release(s)
 
     def _any_active(self) -> bool:
@@ -1362,13 +1595,28 @@ class OLAWorkloadServer:
         lo = np.asarray(rep.lo, float)
         hi = np.asarray(rep.hi, float)
         m_rows = np.asarray(self.state.stats.m).sum(axis=1)
+        g_est = g_lo = g_hi = None
         for s, wq in live:
             w = float(self._cur_weights[s])
+            groups = None
+            if wq.query.group_by is not None:
+                if g_est is None:
+                    g_est = np.asarray(rep.g_est, float)
+                    g_lo = np.asarray(rep.g_lo, float)
+                    g_hi = np.asarray(rep.g_hi, float)
+                tracked = self._slot_groups[s] or []
+                idx = list(range(len(tracked))) + [self.max_groups]
+                vals = [float(v) for v in tracked] + [float("nan")]
+                groups = tuple(
+                    (v, float(g_est[s, i]),
+                     float((g_hi[s, i] - g_lo[s, i]) / 2.0))
+                    for v, i in zip(vals, idx))
             wq.explain.record_round(RoundSample(
                 round=self.rounds, m=int(m_rows[s]),
                 est=float(est_a[s]),
                 ci_halfwidth=float((hi[s] - lo[s]) / 2.0),
-                b_eff=int(round(float(b) * w)), weight=w))
+                b_eff=int(round(float(b) * w)), weight=w,
+                groups=groups))
 
     def step(self) -> bool:
         """Admit ready arrivals, run one engine round, retire finished
@@ -1420,6 +1668,7 @@ class OLAWorkloadServer:
                         and self.scheduler.config.deadline_enforcement):
                     self._enforce_deadlines()
                 self._retire_finished(rep)
+                self._fold_group_discovery(rep)
                 if self._any_active() and bool(rep.exhausted):
                     if not self._begin_topup_pass():
                         # census complete: estimates are as good as they

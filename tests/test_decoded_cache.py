@@ -42,7 +42,7 @@ from repro.data.generator import make_synthetic_zipf, store_dataset
 from repro.data.pipeline import DecodedChunkCache, SlabPrefetcher
 from repro.kernels import ops as kernel_ops
 from repro.kernels import ref as kref
-from repro.serve.ola_server import OLAWorkloadServer
+from repro.serve.ola_server import OLAWorkloadServer, ServerOptions
 
 COEF = tuple(1.0 / (k + 1) for k in range(8))
 
@@ -438,7 +438,7 @@ def test_server_quarantine_drops_decoded_and_discount():
     store = _store(t=2048, chunks=12, seed=3)
     cfg = _cfg(extract_backend="ref", decoded_cache_bytes=1 << 26,
                strategy="resource_aware")
-    srv = OLAWorkloadServer(store, cfg, max_slots=2)
+    srv = OLAWorkloadServer(store, cfg, options=ServerOptions(max_slots=2))
     try:
         for i, q in enumerate(_queries(eps=0.08)):
             srv.submit(q, arrival_t=1e-5 * i)
@@ -468,7 +468,9 @@ def test_server_answers_bit_identical_cache_on_off():
     def serve(decoded_bytes):
         cfg = _cfg(extract_backend="ref", strategy="resource_aware",
                    decoded_cache_bytes=decoded_bytes)
-        srv = OLAWorkloadServer(_store(**store_kw), cfg, max_slots=2)
+        srv = OLAWorkloadServer(
+                  _store(**store_kw), cfg,
+                  options=ServerOptions(max_slots=2))
         try:
             for q, at in workload:
                 srv.submit(q, arrival_t=at)

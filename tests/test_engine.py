@@ -6,7 +6,7 @@ import pytest
 import jax
 
 from repro.core.engine import EngineConfig, OLAEngine, STRATEGIES
-from repro.core.queries import Having, Linear, Query, Range, TRUE, expand_group_by
+from repro.core.queries import Having, Linear, Query, Range, TRUE, group_fanout
 from repro.data.generator import make_synthetic_zipf, store_dataset
 
 
@@ -111,8 +111,8 @@ def test_having_early_stop(small_store):
 def test_group_by_runs_simultaneously(small_store):
     vals, store = small_store
     base = Query(agg="count", pred=TRUE, epsilon=0.2)
-    qs = expand_group_by(base, group_col=7,
-                         group_values=np.unique(vals[:, 7] // 2.0e7)[:2] * 2.0e7)
+    qs = group_fanout(base, 7,
+                      np.unique(vals[:, 7] // 2.0e7)[:2] * 2.0e7)
     eng = OLAEngine(store, qs, EngineConfig(num_workers=2,
                                             strategy="holistic",
                                             budget_init=128, seed=3))

@@ -62,12 +62,14 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 import json
 import numpy as np, jax
-from repro.data.generator import make_synthetic_zipf, store_dataset
-from repro.core.queries import (Query, Linear, Range, empty_slot_table,
-                                encode_slot, slot_table_set)
+from repro.data.generator import (make_synthetic_zipf, make_wiki_like,
+                                  store_dataset)
+from repro.core.queries import (Query, Linear, Range, GroupBy,
+                                empty_slot_table, encode_slot,
+                                slot_table_set)
 from repro.core.engine import SlotOLAEngine, EngineConfig
 from repro.core.engine_spmd import SlotSPMDEngine
-from repro.serve.ola_server import OLAWorkloadServer
+from repro.serve.ola_server import OLAWorkloadServer, ServerOptions
 
 vals = make_synthetic_zipf(2048, 8, seed=3)
 store = store_dataset(vals, 12, 'ascii', uneven=True)
@@ -108,10 +110,39 @@ import dataclasses
 cfg_stream = dataclasses.replace(cfg, residency='stream')
 e3 = drive(SlotSPMDEngine(store, 4, cfg_stream, mesh))
 
+# grouped slot plane: per-cell stats, CIs, and discovery tallies must be
+# bit-exact across the mesh (tallies shard over workers then all-reduce)
+wv, _ = make_wiki_like(2048, num_languages=12, seed=7)
+store_g = store_dataset(wv, 8, 'ascii', uneven=True)
+cfg_g = dataclasses.replace(cfg, max_groups=4)
+qg = Query(agg='sum', expr=Linear((0.0, 1.0, 0.0, 0.0)), epsilon=0.03,
+           group_by=GroupBy(col=0, max_groups=4, top_k=2,
+                            values=[0.0, 1.0, 2.0]))
+
+def drive_g(engine):
+    table = empty_slot_table(2, 4, max_groups=4)
+    table = slot_table_set(table, 0,
+                           encode_slot(qg, 4, plan='single_pass',
+                                       max_groups=4))
+    state = engine.init_state()
+    gests, gtals = [], []
+    for r in range(10):
+        b = engine.budget_ladder(float(state.budget))
+        state, data = engine.round_data(state)
+        state, rep = engine.round_fn(b)(state, table, data,
+                                        engine.speeds)
+        gests.append(np.asarray(rep.g_est))
+        gtals.append(np.asarray(rep.g_tal))
+    return (np.stack(gests), np.stack(gtals), np.asarray(state.gm),
+            np.asarray(state.gys))
+
+g1 = drive_g(SlotOLAEngine(store_g, 2, cfg_g))
+g2 = drive_g(SlotSPMDEngine(store_g, 2, cfg_g, mesh))
+
 # workload server over the SPMD engine == server over the single-device one
 def serve(mesh=None):
-    srv = OLAWorkloadServer(store, cfg, max_slots=4,
-                            synopsis_budget_tuples=0, mesh=mesh)
+    srv = OLAWorkloadServer(store, cfg, options=ServerOptions(
+        max_slots=4, synopsis_budget_tuples=0, mesh=mesh))
     srv.submit(q0, arrival_t=0.0)
     srv.submit(q1, arrival_t=0.0)
     res = srv.run(max_rounds=4000)
@@ -125,6 +156,10 @@ print(json.dumps({
     "stream_est_diff": float(np.abs(e1[0] - e3[0]).max()),
     "stream_handout_same": bool((e1[1] == e3[1]).all()),
     "stream_m_same": bool((e1[2] == e3[2]).all()),
+    "g_est_same": bool(np.array_equal(g1[0], g2[0], equal_nan=True)),
+    "g_tal_same": bool((g1[1] == g2[1]).all()),
+    "g_m_same": bool((g1[2] == g2[2]).all()),
+    "g_ys_same": bool((g1[3] == g2[3]).all()),
     "server_single": serve(None),
     "server_spmd": serve(mesh),
 }))
@@ -149,4 +184,8 @@ def test_slot_spmd_parity_and_server():
     assert res["stream_handout_same"], res
     assert res["stream_m_same"], res
     assert res["stream_est_diff"] == 0.0, res
+    assert res["g_est_same"], res
+    assert res["g_tal_same"], res
+    assert res["g_m_same"], res
+    assert res["g_ys_same"], res
     assert res["server_spmd"] == res["server_single"], res

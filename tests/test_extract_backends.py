@@ -30,7 +30,7 @@ from repro.core.queries import (
 )
 from repro.data.generator import make_synthetic_zipf, store_dataset
 from repro.kernels.ops import slot_extract
-from repro.serve.ola_server import OLAWorkloadServer
+from repro.serve.ola_server import OLAWorkloadServer, ServerOptions
 
 COEF = tuple(1.0 / (k + 1) for k in range(8))
 QUERIES = [
@@ -197,8 +197,10 @@ def test_workload_server_on_pallas_backend():
     store = _store()
     results = {}
     for be in ("ref", "pallas"):
-        srv = OLAWorkloadServer(store, _cfg(extract_backend=be), max_slots=4,
-                                synopsis_budget_tuples=256)
+        srv = OLAWorkloadServer(
+                  store, _cfg(extract_backend=be),
+                  options=ServerOptions(max_slots=4,
+                      synopsis_budget_tuples=256))
         for q in QUERIES:
             srv.submit(q, arrival_t=0.0)
         res = srv.run(max_rounds=4000)

@@ -52,7 +52,7 @@ from repro.data.faults import (
 from repro.data.generator import make_synthetic_zipf, store_dataset
 from repro.data.pipeline import SlabPrefetcher
 from repro.sched import NEUTRAL, WorkloadScheduler
-from repro.serve.ola_server import OLAWorkloadServer
+from repro.serve.ola_server import OLAWorkloadServer, ServerOptions
 
 COEF = tuple(1.0 / (k + 1) for k in range(8))
 
@@ -370,8 +370,10 @@ def test_zero_fault_wrapper_server_parity_neutral():
     workload = [(q, 1e-5 * i) for i, q in enumerate(_queries(0.08))]
 
     def run(store):
-        srv = OLAWorkloadServer(store, cfg, max_slots=2,
-                                scheduler=WorkloadScheduler(NEUTRAL))
+        srv = OLAWorkloadServer(
+                  store, cfg,
+                  options=ServerOptions(max_slots=2,
+                      scheduler=WorkloadScheduler(NEUTRAL)))
         for q, at in workload:
             srv.submit(q, arrival_t=at)
         trace = []
@@ -493,8 +495,10 @@ def test_lost_chunk_server_degraded_answers():
     vals = _vals(t=512, seed=3)
     cfg = EngineConfig(num_workers=2, seed=9, residency="stream")
     inj = FaultInjector(_store(vals, chunks=8), FaultConfig())
-    srv = OLAWorkloadServer(inj, cfg, max_slots=2,
-                            scheduler=WorkloadScheduler(NEUTRAL))
+    srv = OLAWorkloadServer(
+              inj, cfg,
+              options=ServerOptions(max_slots=2,
+                  scheduler=WorkloadScheduler(NEUTRAL)))
     if srv.engine.pipeline is not None:
         srv.engine.pipeline.retry = _no_sleep_retry(max_attempts=2)
     # lose the first chunk the scan will claim: the quarantine lands in

@@ -30,7 +30,7 @@ from repro.obs.metrics import Counter, Gauge, MetricsRegistry
 from repro.obs.trace import NULL_TRACER, SpanTracer, validate_chrome_trace
 from repro.sched import WorkloadScheduler
 from repro.sched.scheduler import NEUTRAL
-from repro.serve.ola_server import OLAWorkloadServer
+from repro.serve.ola_server import OLAWorkloadServer, ServerOptions
 from repro.serve.rollup import RollupConfig
 
 COEF = tuple(1.0 / (k + 1) for k in range(8))
@@ -177,7 +177,7 @@ def test_explain_trajectory_thins_past_cap(monkeypatch):
 def test_explain_final_equals_answer_bit_for_bit(setup):
     _, store = setup
     cfg = EngineConfig(num_workers=2, seed=5)
-    srv = OLAWorkloadServer(store, cfg, max_slots=3)
+    srv = OLAWorkloadServer(store, cfg, options=ServerOptions(max_slots=3))
     for i in range(3):
         srv.submit(_q(f"q{i}", epsilon=0.05), arrival_t=1e-5 * i)
     res = srv.run()
@@ -210,7 +210,7 @@ def test_census_trajectory_ci_halfwidth_non_increasing(setup):
     tight (FPC drives the width to zero at full coverage)."""
     _, store = setup
     cfg = EngineConfig(num_workers=2, seed=5, extract_backend="ref")
-    srv = OLAWorkloadServer(store, cfg, max_slots=2)
+    srv = OLAWorkloadServer(store, cfg, options=ServerOptions(max_slots=2))
     srv.submit(_q("census", epsilon=1e-9), arrival_t=0.0)
     res = srv.run()
     srv.close()
@@ -229,8 +229,10 @@ def test_census_trajectory_ci_halfwidth_non_increasing(setup):
 def test_tier1_answer_has_zero_round_trajectory(setup):
     _, store = setup
     cfg = EngineConfig(num_workers=2, seed=5)
-    srv = OLAWorkloadServer(store, cfg, max_slots=4,
-                            rollup=RollupConfig(promote_hits=2))
+    srv = OLAWorkloadServer(
+              store, cfg,
+              options=ServerOptions(max_slots=4,
+                  rollup=RollupConfig(promote_hits=2)))
     for i in range(2):                       # promote the pattern...
         srv.submit(_q(f"h{i}", epsilon=0.08), arrival_t=1e-5 * i)
     srv.run()
@@ -261,8 +263,10 @@ def test_neutral_server_bit_exact_with_tracing_on(setup):
     queries = [_q(f"q{i}", epsilon=0.05) for i in range(4)]
 
     def _run(tracer):
-        srv = OLAWorkloadServer(store, cfg, max_slots=2, tracer=tracer,
-                                scheduler=WorkloadScheduler(NEUTRAL))
+        srv = OLAWorkloadServer(
+                  store, cfg,
+                  options=ServerOptions(max_slots=2, tracer=tracer,
+                      scheduler=WorkloadScheduler(NEUTRAL)))
         for i, q in enumerate(queries):
             srv.submit(q, arrival_t=1e-5 * i)
         res = srv.run()
@@ -283,8 +287,10 @@ def test_neutral_server_bit_exact_with_tracing_on(setup):
 def test_metrics_snapshot_counts_lifecycle(setup):
     _, store = setup
     cfg = EngineConfig(num_workers=2, seed=5)
-    srv = OLAWorkloadServer(store, cfg, max_slots=2,
-                            scheduler=WorkloadScheduler(NEUTRAL))
+    srv = OLAWorkloadServer(
+              store, cfg,
+              options=ServerOptions(max_slots=2,
+                  scheduler=WorkloadScheduler(NEUTRAL)))
     for i in range(3):
         srv.submit(_q(f"q{i}", epsilon=0.05), arrival_t=1e-5 * i)
     res = srv.run()
@@ -306,8 +312,10 @@ def test_metrics_snapshot_surfaces_quarantine_and_faults():
     store = store_dataset(vals, 8, "ascii")
     cfg = EngineConfig(num_workers=2, seed=9, residency="stream")
     inj = FaultInjector(store, FaultConfig())
-    srv = OLAWorkloadServer(inj, cfg, max_slots=2,
-                            scheduler=WorkloadScheduler(NEUTRAL))
+    srv = OLAWorkloadServer(
+              inj, cfg,
+              options=ServerOptions(max_slots=2,
+                  scheduler=WorkloadScheduler(NEUTRAL)))
     if srv.engine.pipeline is not None:
         srv.engine.pipeline.retry = RetryPolicy(sleep=lambda s: None,
                                                 max_attempts=2)

@@ -22,6 +22,7 @@ from repro.data.generator import make_synthetic_zipf, store_dataset
 from repro.serve.ola_server import (
     MeasuredRates,
     OLAWorkloadServer,
+    ServerOptions,
     load_measured_rates,
     select_plan,
 )
@@ -124,12 +125,12 @@ def test_mid_scan_admission_matches_cold_start(setup):
 
     cfg = EngineConfig(num_workers=2, seed=9)
     # warm: joiner arrives while the occupant's scan is in flight
-    warm = OLAWorkloadServer(store, cfg, max_slots=4)
+    warm = OLAWorkloadServer(store, cfg, options=ServerOptions(max_slots=4))
     warm.submit(occupant, arrival_t=0.0)
     warm.submit(joiner, arrival_t=1e-4)
     warm_res = {r.name: r for r in warm.run()}
     # cold: the joiner alone on a fresh scan
-    cold = OLAWorkloadServer(store, cfg, max_slots=4)
+    cold = OLAWorkloadServer(store, cfg, options=ServerOptions(max_slots=4))
     cold.submit(joiner, arrival_t=0.0)
     cold_res = {r.name: r for r in cold.run()}
 
@@ -157,11 +158,11 @@ def test_early_leaver_does_not_perturb_survivor(setup):
                    having=Having("<", truth * 4), epsilon=0.05, name="quick")
 
     cfg = EngineConfig(num_workers=2, seed=11)
-    alone = OLAWorkloadServer(store, cfg, max_slots=4)
+    alone = OLAWorkloadServer(store, cfg, options=ServerOptions(max_slots=4))
     alone.submit(survivor, plan="holistic", arrival_t=0.0)
     res_alone = {r.name: r for r in alone.run()}
 
-    shared = OLAWorkloadServer(store, cfg, max_slots=4)
+    shared = OLAWorkloadServer(store, cfg, options=ServerOptions(max_slots=4))
     shared.submit(survivor, plan="holistic", arrival_t=0.0)
     shared.submit(leaver, plan="holistic", arrival_t=0.0)
     res_shared = {r.name: r for r in shared.run()}
@@ -212,8 +213,9 @@ def test_server_synopsis_answer_matches_truth(setup):
     vals, store = setup
     truth = _truth_sum(vals)
     cfg = EngineConfig(num_workers=2, seed=17)
-    srv = OLAWorkloadServer(store, cfg, max_slots=4,
-                            synopsis_budget_tuples=4096)
+    srv = OLAWorkloadServer(
+              store, cfg,
+              options=ServerOptions(max_slots=4, synopsis_budget_tuples=4096))
     srv.submit(Query(agg="sum", expr=Linear(COEF), epsilon=0.03, name="warm"),
                arrival_t=0.0)
     srv.run()
@@ -286,8 +288,9 @@ def test_select_plan_measured_rates_override(setup, tmp_path):
     path.write_text('{"calibration": {"cpu_tuples_per_sec": NaN, '
                     '"io_bytes_per_sec": 1e6}}')
     assert load_measured_rates(str(path)) is None
-    srv = OLAWorkloadServer(store, EngineConfig(num_workers=2),
-                            rates_path=str(tmp_path / "nope.json"))
+    srv = OLAWorkloadServer(
+              store, EngineConfig(num_workers=2),
+              options=ServerOptions(rates_path=str(tmp_path / "nope.json")))
     assert srv.rates is None  # modeled defaults still in force
 
 
@@ -382,14 +385,17 @@ def test_post_exhaustion_without_synopsis_fails_loud(setup):
     exact = Query(agg="sum", expr=Linear(COEF), epsilon=1e-9, name="census")
     late = Query(agg="sum", expr=Linear(COEF), epsilon=0.1, name="late")
 
-    srv = OLAWorkloadServer(store, cfg, synopsis_budget_tuples=0)
+    srv = OLAWorkloadServer(
+              store, cfg,
+              options=ServerOptions(synopsis_budget_tuples=0))
     srv.submit(exact)
     assert srv.run()[0].tuples_seen == store.num_tuples
     with pytest.raises(ValueError, match="synopsis"):
         srv.submit(late)
 
-    srv2 = OLAWorkloadServer(store, cfg, max_slots=1,
-                             synopsis_budget_tuples=0)
+    srv2 = OLAWorkloadServer(
+               store, cfg,
+               options=ServerOptions(max_slots=1, synopsis_budget_tuples=0))
     srv2.submit(exact, arrival_t=0.0)
     srv2.submit(late, arrival_t=0.0)   # queued behind the census
     res = {r.name: r for r in srv2.run()}
@@ -404,8 +410,9 @@ def test_topup_pass_serves_late_tight_query(setup):
     vals, store = setup
     truth = _truth_sum(vals)
     cfg = EngineConfig(num_workers=2, seed=19)
-    srv = OLAWorkloadServer(store, cfg, max_slots=2,
-                            synopsis_budget_tuples=512)
+    srv = OLAWorkloadServer(
+              store, cfg,
+              options=ServerOptions(max_slots=2, synopsis_budget_tuples=512))
     srv.submit(Query(agg="sum", expr=Linear(COEF), epsilon=0.10,
                      name="loose"), arrival_t=0.0)
     srv.run()

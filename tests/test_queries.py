@@ -32,7 +32,9 @@ def test_evaluator_matches_numpy():
 
 def test_group_by_expansion():
     base = Query(agg="count", pred=Range(1, 0, 50), name="hits")
-    qs = expand_group_by(base, group_col=0, group_values=[1.0, 2.0, 3.0])
+    with pytest.warns(DeprecationWarning):
+        qs = expand_group_by(base, group_col=0,
+                             group_values=[1.0, 2.0, 3.0])
     assert len(qs) == 3
     cols = jnp.asarray([[1.0, 10.0], [2.0, 10.0], [1.0, 99.0]], jnp.float32)
     x, p = compile_queries(qs)(cols)

@@ -16,7 +16,7 @@ from repro.core.engine import EngineConfig, slot_stats_fold, slot_stats_snapshot
 from repro.core.queries import Custom, Linear, Query, Range
 from repro.data.generator import make_synthetic_zipf, store_dataset
 from repro.sched import TIER1, SchedulerConfig, WorkloadScheduler
-from repro.serve.ola_server import OLAWorkloadServer
+from repro.serve.ola_server import OLAWorkloadServer, ServerOptions
 from repro.serve.rollup import RollupConfig, RollupTier, pattern_key
 
 COEF = tuple(1.0 / (k + 1) for k in range(8))
@@ -148,7 +148,7 @@ def test_invalidation_on_content_version_change(setup):
 def test_slot_stats_fold_matches_snapshot(setup):
     _, store = setup
     cfg = EngineConfig(num_workers=2, seed=5)
-    srv = OLAWorkloadServer(store, cfg, max_slots=3)
+    srv = OLAWorkloadServer(store, cfg, options=ServerOptions(max_slots=3))
     srv.submit(_hot("a", epsilon=0.02, hi=5e7), arrival_t=0.0)
     srv.submit(_hot("b", epsilon=0.02, hi=7e7), arrival_t=0.0)
     for _ in range(3):
@@ -175,8 +175,10 @@ def test_hot_repeat_answered_from_rollup_without_scan_rounds(setup):
     hot-pattern query is answered from the rollup tier — no slot, no scan
     round, no extracted tuple."""
     vals, store = setup
-    srv = OLAWorkloadServer(store, EngineConfig(num_workers=2, seed=5),
-                            max_slots=4, rollup=RollupConfig(promote_hits=2))
+    srv = OLAWorkloadServer(
+              store, EngineConfig(num_workers=2, seed=5),
+              options=ServerOptions(max_slots=4,
+                  rollup=RollupConfig(promote_hits=2)))
     srv.submit(_hot("r0"), arrival_t=0.0)
     srv.submit(_hot("r1"), arrival_t=0.0)
     srv.run()
@@ -207,8 +209,10 @@ def test_fully_covered_cell_matches_fresh_census(setup):
     q_census = lambda name: _hot(name, epsilon=1e-9)   # forces a census
     cfg = EngineConfig(num_workers=2, seed=5)
 
-    srv = OLAWorkloadServer(store, cfg, max_slots=4,
-                            rollup=RollupConfig(promote_hits=2))
+    srv = OLAWorkloadServer(
+              store, cfg,
+              options=ServerOptions(max_slots=4,
+                  rollup=RollupConfig(promote_hits=2)))
     srv.submit(q_census("c0"), arrival_t=0.0)
     srv.submit(q_census("c1"), arrival_t=0.0)
     srv.run()
@@ -222,8 +226,9 @@ def test_fully_covered_cell_matches_fresh_census(setup):
     assert r2.err == 0.0                      # FPC: census answer is exact
     assert r2.tuples_seen == store.num_tuples
 
-    fresh = OLAWorkloadServer(store, cfg, max_slots=4,
-                              synopsis_budget_tuples=0)
+    fresh = OLAWorkloadServer(
+                store, cfg,
+                options=ServerOptions(max_slots=4, synopsis_budget_tuples=0))
     fresh.submit(q_census("ref"), arrival_t=0.0)
     (ref,) = fresh.run()
     assert r2.estimate == ref.estimate        # bit-identical, not just close
@@ -237,8 +242,10 @@ def test_partially_covered_cell_answer_is_ci_valid(setup):
     chunk; its Tier-1 answer must still be a statistically valid interval
     (contains the ground truth) rather than pretending to be exact."""
     vals, store = setup
-    srv = OLAWorkloadServer(store, EngineConfig(num_workers=2, seed=5),
-                            max_slots=4, rollup=RollupConfig(promote_hits=2))
+    srv = OLAWorkloadServer(
+              store, EngineConfig(num_workers=2, seed=5),
+              options=ServerOptions(max_slots=4,
+                  rollup=RollupConfig(promote_hits=2)))
     srv.submit(_hot("p0", epsilon=0.10), arrival_t=0.0)
     srv.submit(_hot("p1", epsilon=0.10), arrival_t=0.0)
     srv.run()
@@ -261,8 +268,10 @@ def test_repeat_with_tighter_target_routes_tier2_with_cell_seed(setup):
     takes a slot, but seeded from the cell's partial aggregate (richer than
     the synopsis), so it scans only the remainder."""
     _, store = setup
-    srv = OLAWorkloadServer(store, EngineConfig(num_workers=2, seed=5),
-                            max_slots=4, rollup=RollupConfig(promote_hits=2))
+    srv = OLAWorkloadServer(
+              store, EngineConfig(num_workers=2, seed=5),
+              options=ServerOptions(max_slots=4,
+                  rollup=RollupConfig(promote_hits=2)))
     srv.submit(_hot("s0", epsilon=0.10), arrival_t=0.0)
     srv.submit(_hot("s1", epsilon=0.10), arrival_t=0.0)
     srv.run()
@@ -283,8 +292,10 @@ def test_content_change_forces_rescan(setup):
     (now stale) cell — the version-pinned cache drops it and the query goes
     back to the scan."""
     _, store = setup
-    srv = OLAWorkloadServer(store, EngineConfig(num_workers=2, seed=5),
-                            max_slots=4, rollup=RollupConfig(promote_hits=2))
+    srv = OLAWorkloadServer(
+              store, EngineConfig(num_workers=2, seed=5),
+              options=ServerOptions(max_slots=4,
+                  rollup=RollupConfig(promote_hits=2)))
     srv.submit(_hot("v0"), arrival_t=0.0)
     srv.submit(_hot("v1"), arrival_t=0.0)
     srv.run()
@@ -304,9 +315,10 @@ def test_scheduled_path_serves_tier1(setup):
     repeat to the cache before the admit/queue/shed triage."""
     _, store = setup
     sched = WorkloadScheduler(SchedulerConfig(slot_capacity=2.0))
-    srv = OLAWorkloadServer(store, EngineConfig(num_workers=2, seed=5),
-                            max_slots=4, scheduler=sched,
-                            rollup=RollupConfig(promote_hits=2))
+    srv = OLAWorkloadServer(
+              store, EngineConfig(num_workers=2, seed=5),
+              options=ServerOptions(max_slots=4, scheduler=sched,
+                  rollup=RollupConfig(promote_hits=2)))
     srv.submit(_hot("t0"), arrival_t=0.0)
     srv.submit(_hot("t1"), arrival_t=0.0)
     srv.run()

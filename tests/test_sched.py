@@ -46,6 +46,7 @@ from repro.sched.admission import eq4_cost_terms, scan_tuples_per_s
 from repro.serve.ola_server import (
     MeasuredRates,
     OLAWorkloadServer,
+    ServerOptions,
     poisson_workload,
     select_plan,
 )
@@ -203,7 +204,7 @@ def test_neutral_scheduler_parity(setup, residency):
     cfg = EngineConfig(num_workers=2, seed=9, residency=residency)
 
     def run(scheduler):
-        srv = OLAWorkloadServer(store, cfg, max_slots=2)
+        srv = OLAWorkloadServer(store, cfg, options=ServerOptions(max_slots=2))
         if scheduler is not None:
             srv.scheduler = scheduler           # same ctor state otherwise
         for q, at in _mixed_workload():
@@ -233,7 +234,7 @@ import numpy as np, jax
 from repro.data.generator import make_synthetic_zipf, store_dataset
 from repro.core.queries import Query, Linear, Range
 from repro.core.engine import EngineConfig
-from repro.serve.ola_server import OLAWorkloadServer
+from repro.serve.ola_server import OLAWorkloadServer, ServerOptions
 from repro.sched import NEUTRAL, QuerySLO, SchedulerConfig, WorkloadScheduler
 
 vals = make_synthetic_zipf(2048, 8, seed=3)
@@ -246,9 +247,9 @@ active = SchedulerConfig(slot_capacity=1.5, claim_policy='variance',
                          shed_enabled=False, deadline_enforcement=False)
 
 def serve(mesh=None, sched=None):
-    srv = OLAWorkloadServer(store, cfg, max_slots=3,
-                            synopsis_budget_tuples=0, mesh=mesh,
-                            scheduler=sched)
+    srv = OLAWorkloadServer(store, cfg, options=ServerOptions(
+        max_slots=3, synopsis_budget_tuples=0, mesh=mesh,
+        scheduler=sched))
     srv.submit(Query(agg='sum', expr=Linear(coef), pred=Range(0, 0.0, 0.6e8),
                      epsilon=0.04), arrival_t=0.0)
     srv.submit(Query(agg='count', pred=Range(1, 0.0, 0.7e8), epsilon=0.06),
@@ -297,8 +298,10 @@ def test_scheduler_spmd_parity():
 
 def _pressure_run(store, slo_hot, scheduler):
     cfg = EngineConfig(num_workers=2, seed=13)
-    srv = OLAWorkloadServer(store, cfg, max_slots=1,
-                            synopsis_budget_tuples=0, scheduler=scheduler)
+    srv = OLAWorkloadServer(
+              store, cfg,
+              options=ServerOptions(max_slots=1, synopsis_budget_tuples=0,
+                  scheduler=scheduler))
     for i in range(3):
         srv.submit(Query(agg="sum", expr=Linear(COEF), epsilon=0.02,
                          name=f"long{i}"), arrival_t=0.0)
@@ -347,9 +350,10 @@ def test_shed_returns_flagged_synopsis_estimate(setup):
     vals, store = setup
     truth = _truth_sum(vals)
     cfg = EngineConfig(num_workers=2, seed=17)
-    srv = OLAWorkloadServer(store, cfg, max_slots=2,
-                            synopsis_budget_tuples=4096,
-                            scheduler=WorkloadScheduler(SchedulerConfig()))
+    srv = OLAWorkloadServer(
+              store, cfg,
+              options=ServerOptions(max_slots=2, synopsis_budget_tuples=4096,
+                  scheduler=WorkloadScheduler(SchedulerConfig())))
     srv.submit(Query(agg="sum", expr=Linear(COEF), epsilon=0.04,
                      name="warm"), arrival_t=0.0)
     srv.run()
@@ -385,9 +389,10 @@ def test_fairness_weights_divide_round_budget(setup):
     cfg = EngineConfig(num_workers=2, seed=19)
     sc = SchedulerConfig(slot_capacity=1.0, shed_enabled=False,
                          claim_policy="schedule")
-    srv = OLAWorkloadServer(store, cfg, max_slots=2,
-                            synopsis_budget_tuples=0,
-                            scheduler=WorkloadScheduler(sc))
+    srv = OLAWorkloadServer(
+              store, cfg,
+              options=ServerOptions(max_slots=2, synopsis_budget_tuples=0,
+                  scheduler=WorkloadScheduler(sc)))
     srv.submit(Query(agg="sum", expr=Linear(COEF), epsilon=1e-6, name="bat"),
                arrival_t=0.0, slo=QuerySLO(priority="batch"))
     srv.submit(Query(agg="sum", expr=Linear(COEF), epsilon=1e-6, name="hot"),
@@ -412,10 +417,11 @@ def test_deadline_enforcement_frees_slot(setup):
     vals, store = setup
     truth = _truth_sum(vals)
     cfg = EngineConfig(num_workers=2, seed=23)
-    srv = OLAWorkloadServer(store, cfg, max_slots=1,
-                            synopsis_budget_tuples=0,
-                            scheduler=WorkloadScheduler(
-                                SchedulerConfig(shed_enabled=False)))
+    srv = OLAWorkloadServer(
+              store, cfg,
+              options=ServerOptions(max_slots=1, synopsis_budget_tuples=0,
+                  scheduler=WorkloadScheduler(
+                                SchedulerConfig(shed_enabled=False))))
     t_full = store.num_tuples / srv._scan_rate
     srv.submit(Query(agg="sum", expr=Linear(COEF), epsilon=1e-9,
                      name="boxed"),
@@ -445,10 +451,11 @@ def test_variance_claims_reorder_topup_and_stay_correct(setup):
     vals, store = setup
     truth = _truth_sum(vals)
     cfg = EngineConfig(num_workers=2, seed=29)
-    srv = OLAWorkloadServer(store, cfg, max_slots=2,
-                            synopsis_budget_tuples=512,
-                            scheduler=WorkloadScheduler(
-                                SchedulerConfig(shed_enabled=False)))
+    srv = OLAWorkloadServer(
+              store, cfg,
+              options=ServerOptions(max_slots=2, synopsis_budget_tuples=512,
+                  scheduler=WorkloadScheduler(
+                                SchedulerConfig(shed_enabled=False))))
     committed = np.asarray(srv.engine.program.schedule_np)
     srv.submit(Query(agg="count", pred=Range(0, 0.0, 1e12), epsilon=0.02,
                      name="loose"), arrival_t=0.0, plan="single_pass")
@@ -494,10 +501,11 @@ def test_deadline_enforced_zero_tuple_slot_is_unserved(setup):
     zero counted as an SLO hit."""
     vals, store = setup
     cfg = EngineConfig(num_workers=2, seed=31)
-    srv = OLAWorkloadServer(store, cfg, max_slots=1,
-                            synopsis_budget_tuples=0,
-                            scheduler=WorkloadScheduler(
-                                SchedulerConfig(shed_enabled=False)))
+    srv = OLAWorkloadServer(
+              store, cfg,
+              options=ServerOptions(max_slots=1, synopsis_budget_tuples=0,
+                  scheduler=WorkloadScheduler(
+                                SchedulerConfig(shed_enabled=False))))
     srv.submit(Query(agg="sum", expr=Linear(COEF), epsilon=1e-9,
                      name="census"), arrival_t=0.0)
     # queued behind the census; its deadline expires while it waits, and by
@@ -522,9 +530,10 @@ def test_admission_respects_target_halfwidth(setup):
     vals, store = setup
     truth = _truth_sum(vals)
     cfg = EngineConfig(num_workers=2, seed=37)
-    srv = OLAWorkloadServer(store, cfg, max_slots=2,
-                            synopsis_budget_tuples=4096,
-                            scheduler=WorkloadScheduler(SchedulerConfig()))
+    srv = OLAWorkloadServer(
+              store, cfg,
+              options=ServerOptions(max_slots=2, synopsis_budget_tuples=4096,
+                  scheduler=WorkloadScheduler(SchedulerConfig())))
     srv.submit(Query(agg="sum", expr=Linear(COEF), epsilon=0.04,
                      name="warm"), arrival_t=0.0)
     srv.run()
@@ -550,9 +559,10 @@ def test_fairness_weights_survive_slot_churn(setup):
     cfg = EngineConfig(num_workers=2, seed=41)
     sc = SchedulerConfig(slot_capacity=1.0, shed_enabled=False,
                          claim_policy="schedule")
-    srv = OLAWorkloadServer(store, cfg, max_slots=2,
-                            synopsis_budget_tuples=0,
-                            scheduler=WorkloadScheduler(sc))
+    srv = OLAWorkloadServer(
+              store, cfg,
+              options=ServerOptions(max_slots=2, synopsis_budget_tuples=0,
+                  scheduler=WorkloadScheduler(sc)))
     # two equal-priority residents -> [0.5, 0.5]
     srv.submit(Query(agg="sum", expr=Linear(COEF), epsilon=1e-6, name="a"),
                arrival_t=0.0)
@@ -668,9 +678,10 @@ def test_quantile_admission_sheds_on_tail_not_mean(setup):
     accepted — the tentpole's 'shed on a quantile, not the mean' behavior."""
     vals, store = setup
     cfg = EngineConfig(num_workers=2, seed=43)
-    srv = OLAWorkloadServer(store, cfg, max_slots=1,
-                            synopsis_budget_tuples=0,
-                            scheduler=WorkloadScheduler(SchedulerConfig()))
+    srv = OLAWorkloadServer(
+              store, cfg,
+              options=ServerOptions(max_slots=1, synopsis_budget_tuples=0,
+                  scheduler=WorkloadScheduler(SchedulerConfig())))
     t_full = store.num_tuples / srv._scan_rate
     model = srv.scheduler.service_model
     # observed history: 9 fast batch queries, 3 slow ones -> p90 ~ slow
@@ -742,11 +753,12 @@ def test_measured_capacity_drives_round_weights(setup):
     rates = MeasuredRates(io_bytes_per_sec=5e8, cpu_tuples_per_sec=3e5,
                           round_base_us=1000.0, round_slot_us=500.0)
     srv = OLAWorkloadServer(
-        store, cfg, max_slots=2, synopsis_budget_tuples=0,
-        measured_rates=rates,
-        scheduler=WorkloadScheduler(SchedulerConfig(
+              store, cfg,
+              options=ServerOptions(max_slots=2, synopsis_budget_tuples=0,
+                  measured_rates=rates,
+                  scheduler=WorkloadScheduler(SchedulerConfig(
             slot_capacity="measured", shed_enabled=False,
-            claim_policy="schedule")))
+            claim_policy="schedule"))))
     assert srv.scheduler.fairness.slot_capacity == pytest.approx(1.0)
     srv.submit(Query(agg="sum", expr=Linear(COEF), epsilon=1e-6, name="a"),
                arrival_t=0.0, slo=QuerySLO(priority="batch"))
@@ -789,8 +801,10 @@ def test_preemption_meets_deadline_only_with_it(setup):
     def serve(preempt: bool):
         cfg = EngineConfig(num_workers=2, seed=51)
         srv = OLAWorkloadServer(
-            store, cfg, max_slots=1, synopsis_budget_tuples=0,
-            scheduler=WorkloadScheduler(SchedulerConfig(preempt=preempt)))
+                  store, cfg,
+                  options=ServerOptions(max_slots=1,
+                      synopsis_budget_tuples=0,
+                      scheduler=WorkloadScheduler(SchedulerConfig(preempt=preempt))))
         t_full = store.num_tuples / srv._scan_rate
         # a near-census batch query holds the only slot...
         srv.submit(Query(agg="sum", expr=Linear(COEF), epsilon=1e-6,
@@ -832,8 +846,9 @@ def test_preempt_never_evicts_for_hopeless_deadline(setup):
     vals, store = setup
     cfg = EngineConfig(num_workers=2, seed=53)
     srv = OLAWorkloadServer(
-        store, cfg, max_slots=1, synopsis_budget_tuples=0,
-        scheduler=WorkloadScheduler(SchedulerConfig(preempt=True)))
+              store, cfg,
+              options=ServerOptions(max_slots=1, synopsis_budget_tuples=0,
+                  scheduler=WorkloadScheduler(SchedulerConfig(preempt=True))))
     t_full = store.num_tuples / srv._scan_rate
     srv.submit(Query(agg="sum", expr=Linear(COEF), epsilon=1e-6,
                      name="bat"), arrival_t=0.0,

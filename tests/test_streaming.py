@@ -39,7 +39,7 @@ from repro.data.formats import AsciiFixedFormat
 from repro.data.generator import make_synthetic_zipf, store_dataset
 from repro.data.pipeline import SlabPrefetcher
 from repro.kernels.ops import slot_extract_stream
-from repro.serve.ola_server import OLAWorkloadServer
+from repro.serve.ola_server import OLAWorkloadServer, ServerOptions
 
 COEF = tuple(1.0 / (k + 1) for k in range(8))
 QUERIES = [
@@ -181,8 +181,9 @@ def test_server_stream_matches_packed_including_topup():
     store = _store()
     out = {}
     for res in ("packed", "stream"):
-        with OLAWorkloadServer(store, _cfg(residency=res), max_slots=4,
-                               synopsis_budget_tuples=256) as srv:
+        with OLAWorkloadServer(
+                 store, _cfg(residency=res),
+                 options=ServerOptions(max_slots=4, synopsis_budget_tuples=256)) as srv:
             srv.submit(QUERIES[0], arrival_t=0.0)
             srv.submit(QUERIES[1], arrival_t=0.0)
             srv.submit(QUERIES[2], arrival_t=0.002)   # joins mid-scan

@@ -133,13 +133,14 @@ def test_shrink_under_pressure_mid_flight(setup):
     must leave every surviving window a contiguous slice of its chunk's
     keyed permutation, so the seeded slot's future extraction stays a
     disjoint continuation (ISSUE 4 satellite)."""
-    from repro.serve.ola_server import OLAWorkloadServer
+    from repro.serve.ola_server import OLAWorkloadServer, ServerOptions
 
     vals, store = setup
     cfg = EngineConfig(num_workers=2, seed=21, strategy="single_pass",
                        budget_init=32)
-    srv = OLAWorkloadServer(store, cfg, max_slots=2,
-                            synopsis_budget_tuples=1024)
+    srv = OLAWorkloadServer(
+              store, cfg,
+              options=ServerOptions(max_slots=2, synopsis_budget_tuples=1024))
     srv.submit(Query(agg="sum", expr=Linear(COEF), epsilon=0.02,
                      name="warm"), arrival_t=0.0)
     for _ in range(4):                      # scan mid-flight, cache growing
